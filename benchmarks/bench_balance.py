@@ -1,0 +1,76 @@
+"""Fig. 7: max GPU load normalized by average, varying Zipf skewness.
+
+Systems: Megatron (vanilla EP), DeepSpeed (padding), GShard (capacity drop),
+SmartMoE (historical placement), FlexMoE (adaptive replicas), MicroMoE
+(random / symmetric latin placement / adaptive asymmetric).  MicroMoE
+numbers come from the REAL scheduler (LP solve + rounding + routing), the
+baselines from their published policies (moe/baselines.py).
+
+Paper setting: DP_degree=8, num_experts=32 (rows=8 merged EP groups of
+cols=4 -> 32 devices would differ; we keep the paper's 8-GPU group:
+rows=2, cols=4, 32 experts -> k=8 slots/device).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver_jax import device_loads
+from repro.moe.baselines import baseline_max_load
+
+from .common import emit, make_scheduler, zipf_input
+
+ROWS, COLS, E = 2, 4, 32
+TOKENS_PER_DEV = 2048
+SKEWS = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6]
+
+
+def microep_balance(input_eg: np.ndarray, strategy: str,
+                    loads_hist=None) -> float:
+    g = ROWS * COLS
+    p, st, sched = make_scheduler(
+        ROWS, COLS, E, strategy=strategy,
+        loads=loads_hist if strategy == "asymmetric" else None)
+    out = sched(jnp.asarray(input_eg))
+    return float(out.max_load)
+
+
+def run(iters: int = 5, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    g = ROWS * COLS
+    slots = E // g * 2  # device slot budget for FlexMoE (= MicroEP's k)
+    header_done = False
+    rows = []
+    for s in SKEWS:
+        acc: dict = {}
+        for it in range(iters):
+            input_eg = zipf_input(rng, E, g, TOKENS_PER_DEV, s)
+            loads = input_eg.sum(1).astype(np.float64)
+            ideal = loads.sum() / g
+            hist = loads * rng.uniform(0.8, 1.25, size=E)  # stale history
+            for name in ("megatron", "deepspeed", "smartmoe", "flexmoe"):
+                m, _ = baseline_max_load(name, loads, g, E // g, hist=hist)
+                acc.setdefault(name, []).append(m / ideal)
+            acc.setdefault("microep_random", []).append(
+                microep_balance(input_eg, "random") / ideal)
+            acc.setdefault("microep_latin", []).append(
+                microep_balance(input_eg, "latin") / ideal)
+            acc.setdefault("microep_asym", []).append(
+                microep_balance(input_eg, "asymmetric", loads_hist=hist)
+                / ideal)
+        row = {k: round(float(np.mean(v)), 4) for k, v in acc.items()}
+        emit("fig7_balance", skew=s, **row)
+        rows.append((s, row))
+
+    # paper claims to validate: (i) MicroMoE(latin) ~ perfect for s < 1;
+    # (ii) asym stays near-perfect at high skew; (iii) beats baselines.
+    for s, row in rows:
+        if s < 1.0:
+            assert row["microep_latin"] < 1.25, (s, row)
+        assert row["microep_asym"] <= row["flexmoe"] + 0.05, (s, row)
+        assert row["microep_latin"] <= row["megatron"] + 1e-6, (s, row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

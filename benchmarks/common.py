@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: workloads, the straggler time model, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lp import replica_devices, solve_lpp1
+from repro.core.placement import (asymmetric_placement, latin_placement,
+                                  random_placement, vanilla_placement)
+from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
+
+# ---- TPU v5e time model (the paper's straggler model, §2.3/§7.4:
+# FFN time ∝ max device load; a2a time ∝ max send/recv bytes) -------------
+PEAK_FLOPS = 197e12          # bf16 / chip
+ICI_BW = 50e9                # bytes/s/link
+MFU = 0.5                    # achievable fraction on the grouped FFN
+
+
+def ffn_time_s(tokens: float, d_model: int, d_ff: int) -> float:
+    """Gated-FFN compute time for `tokens` rows on one chip."""
+    flops = tokens * 6.0 * d_model * d_ff   # gate+up+down matmuls (fwd)
+    return flops / (PEAK_FLOPS * MFU)
+
+
+def a2a_time_s(bytes_max: float) -> float:
+    return bytes_max / ICI_BW
+
+
+def zipf_input(rng, e: int, g: int, tokens_per_dev: int, s: float):
+    """int32[E, G] per-(expert, source) counts with Zipf(s) popularity,
+    independently sampled per source device (micro-batch heterogeneity)."""
+    ranks = np.arange(1, e + 1, dtype=np.float64)
+    p = ranks ** -s
+    p /= p.sum()
+    perm = rng.permutation(e)
+    out = np.zeros((e, g), np.int64)
+    for gi in range(g):
+        out[perm, gi] = rng.multinomial(tokens_per_dev, p)
+    return out.astype(np.int32)
+
+
+def make_scheduler(rows: int, cols: int, e: int, strategy: str = "latin",
+                   mode: str = "microep", loads=None, seed: int = 0):
+    if strategy == "vanilla":
+        p = vanilla_placement(rows, cols, e)
+    elif strategy == "random":
+        p = random_placement(rows, cols, e, seed=seed)
+    elif strategy == "asymmetric":
+        p = asymmetric_placement(rows, cols, e, loads, seed=seed)
+    else:
+        p = latin_placement(rows, cols, e)
+    st = ScheduleStatics.from_placement(p)
+    return p, st, MicroEPScheduler(st, mode=mode, sweeps=8)
+
+
+def time_it(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall seconds per call (fn must block on completion)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, **fields):
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"BENCH,{name},{kv}", flush=True)

@@ -1,0 +1,36 @@
+"""Merge partial dry-run JSONs (incremental runs / per-arch forks) into one
+dryrun_results.json, preferring rows with a full cost pass."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def merge(paths, out="dryrun_results.json"):
+    best = {}
+    for p in paths:
+        try:
+            rows = json.load(open(p))
+        except Exception:
+            continue
+        for r in rows:
+            key = (r["arch"], r["shape"], r["mesh"])
+            score = (r.get("status") == "ok",
+                     "compute_s" in r,
+                     r.get("status") == "skipped")
+            if key not in best or score > best[key][0]:
+                best[key] = (score, r)
+    rows = [sr[1] for _, sr in sorted(best.items(), key=lambda kv: kv[0])]
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    sk = sum(1 for r in rows if r.get("status") == "skipped")
+    print(f"merged {len(paths)} files -> {out}: {len(rows)} rows "
+          f"({ok} ok, {sk} skipped, {len(rows)-ok-sk} other)")
+    return rows
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or sorted(glob.glob("dryrun_*.json"))
+    merge([p for p in paths if "results" not in p])

@@ -1,0 +1,49 @@
+"""§Roofline: renders the roofline table from a dry-run results JSON
+(produced by `python -m repro.launch.dryrun --all --out <json>`).
+
+Each row: the three roofline terms (seconds), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and a one-line lever."""
+from __future__ import annotations
+
+import json
+import sys
+
+LEVER = {
+    "compute": "raise MXU utilization: larger per-device tiles / less remat",
+    "memory": "cut HBM traffic: fuse, bf16 masters, fewer activation passes",
+    "collective": "cut link bytes: sequence-parallel norms, locality-aware "
+                  "routing, reduce-scatter grads",
+}
+
+
+def render(path: str):
+    with open(path) as f:
+        rows = json.load(f)
+    print(f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+          f"{'compute_ms':>10s} {'memory_ms':>10s} {'coll_ms':>10s} "
+          f"{'bound':>10s} {'useful':>7s}")
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{'—':>10s} {'—':>10s} {'—':>10s} {'skipped':>10s}")
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} ERROR "
+                  f"{r.get('error', '')[:60]}")
+            continue
+        if "compute_s" not in r:   # multi-pod rows: lowering proof only
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{'(compiled)':>10s} temp {r['mem_temp_gib']:.2f} GiB")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['compute_s']*1e3:10.2f} {r['memory_s']*1e3:10.2f} "
+              f"{r['collective_s']*1e3:10.2f} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.3f}")
+    for r in rows:
+        if r.get("status") == "ok" and "bottleneck" in r:
+            print(f"  {r['arch']} × {r['shape']}: {r['bottleneck']}-bound "
+                  f"-> {LEVER[r['bottleneck']]}")
+
+
+if __name__ == "__main__":
+    render(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

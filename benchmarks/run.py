@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+
+  PYTHONPATH=src python -m benchmarks.run            # all CPU-scale benches
+  PYTHONPATH=src python -m benchmarks.run fig7 fig9  # a subset
+
+The multi-combo dry-run/roofline table is produced separately (it compiles
+512-device programs): `python -m repro.launch.dryrun --all --out r.json`
+then `python -m benchmarks.roofline r.json`.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (bench_ablation, bench_balance, bench_breakdown,
+               bench_commaware, bench_e2e_model, bench_migration,
+               bench_pipeline, bench_sched_overhead)
+
+ALL = {
+    "fig6_e2e": bench_e2e_model.run,
+    "fig7_balance": bench_balance.run,
+    "fig8_breakdown": bench_breakdown.run,
+    "fig9_sched_overhead": bench_sched_overhead.run,
+    "fig10_migration": bench_migration.run,
+    "fig11_ablation": bench_ablation.run,
+    "fig15_commaware": bench_commaware.run,
+    "fig16_pipeline": bench_pipeline.run,
+}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    names = [n for n in ALL if not argv or any(a in n for a in argv)]
+    failed = []
+    for name in names:
+        print(f"\n### {name} " + "#" * (60 - len(name)), flush=True)
+        t0 = time.perf_counter()
+        try:
+            ALL[name]()
+            print(f"### {name} ok ({time.perf_counter()-t0:.1f}s)")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print(f"\nbenchmarks: {len(names)-len(failed)}/{len(names)} ok"
+          + (f", FAILED: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

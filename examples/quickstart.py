@@ -1,0 +1,59 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Builds a MicroEP group, feeds it a skewed expert-load micro-batch, and
+shows the LP-scheduled balance vs vanilla expert parallelism — the core of
+MicroMoE (paper §4-5) with no model around it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lp import solve_lpp1
+from repro.core.placement import latin_placement, vanilla_placement
+from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
+from repro.data.synthetic import zipf_expert_loads
+
+ROWS, COLS, EXPERTS = 4, 4, 32          # 16 devices, k=2 replica slots
+TOKENS = 32_000
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    g = ROWS * COLS
+
+    # a Zipf(1.0)-skewed micro-batch: tokens per expert, split over sources
+    loads = np.asarray(zipf_expert_loads(key, EXPERTS, TOKENS, s=1.0))
+    rng = np.random.default_rng(0)
+    input_eg = np.stack([rng.multinomial(l, np.ones(g) / g) for l in loads])
+    ideal = TOKENS / g
+    print(f"experts={EXPERTS} devices={g} tokens={TOKENS}")
+    print(f"most loaded expert: {loads.max()} tokens "
+          f"({loads.max()/loads.mean():.1f}x the mean)\n")
+
+    for name, placement, mode in [
+        ("vanilla EP (Megatron)", vanilla_placement(ROWS, COLS, EXPERTS),
+         "vanilla"),
+        ("MicroEP latin placement", latin_placement(ROWS, COLS, EXPERTS),
+         "microep"),
+    ]:
+        statics = ScheduleStatics.from_placement(placement)
+        sched = MicroEPScheduler(statics, mode=mode)
+        out = sched(jnp.asarray(input_eg, jnp.int32))
+        print(f"{name:28s} max device load {float(out.max_load):8.0f} "
+              f"({float(out.max_load)/ideal:5.2f}x ideal)")
+
+    # the graph-theoretic certificate (paper Eq. 3): LP optimum == max
+    # induced subgraph density
+    p = latin_placement(ROWS, COLS, EXPERTS)
+    res = solve_lpp1(loads.astype(np.float64),
+                     ScheduleStatics.from_placement(p).dev, g)
+    print(f"\nLP optimum (HiGHS oracle): {res.objective:.1f} tokens "
+          f"= {res.objective/ideal:.3f}x ideal")
+    print("MicroEP schedules every micro-batch to this optimum "
+          "(+ integer rounding).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing."""
+from .ckpt import save_checkpoint, restore_checkpoint, latest_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]

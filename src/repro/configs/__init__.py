@@ -1,0 +1,23 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+models).  ``get_config(name)`` / ``list_configs()`` are the public API."""
+from .base import (ArchConfig, InputShape, SHAPES, get_config, list_configs,
+                   register)
+
+_LOADED = False
+
+ASSIGNED = [
+    "rwkv6-7b", "recurrentgemma-9b", "qwen2-vl-7b", "musicgen-medium",
+    "gemma3-27b", "dbrx-132b", "gemma3-4b", "olmoe-1b-7b", "gemma-2b",
+    "qwen1.5-0.5b",
+]
+PAPER = ["paper-gpt-32x1.3b", "paper-mixtral-16x2b"]
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (rwkv6_7b, recurrentgemma_9b, qwen2_vl_7b, musicgen_medium,
+                   gemma3_27b, gemma3_4b, dbrx_132b, olmoe_1b_7b, gemma_2b,
+                   qwen1_5_0_5b, paper_gpt_32x1_3b, paper_mixtral_16x2b)
+    _LOADED = True

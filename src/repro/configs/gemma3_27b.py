@@ -1,0 +1,12 @@
+"""Gemma 3 27B — dense, 5:1 local:global attention, qk-norm, 128k context
+[hf:google/gemma-3-1b-pt family]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b", family="dense",
+    num_layers=62, d_model=5376, num_heads=32, num_kv_heads=16, head_dim=128,
+    d_ff=21504, vocab=262144, ffn_kind="geglu", qk_norm=True,
+    pattern=("attn_local",) * 5 + ("attn",), window=1024,
+    sub_quadratic=True,  # 5/6 of layers windowed; global layers decode O(T)
+    source="hf:google/gemma-3-1b-pt (Gemma 3 family)",
+))

@@ -1,0 +1,11 @@
+"""Gemma 3 4B — dense, 5:1 local:global, qk-norm [hf:google/gemma-3-1b-pt]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-4b", family="dense",
+    num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab=262144, ffn_kind="geglu", qk_norm=True,
+    pattern=("attn_local",) * 5 + ("attn",), window=1024,
+    sub_quadratic=True,
+    source="hf:google/gemma-3-1b-pt (Gemma 3 family)",
+))

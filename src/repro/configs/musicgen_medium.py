@@ -1,0 +1,12 @@
+"""MusicGen medium transformer backbone — decoder-only over EnCodec tokens
+[arXiv:2306.05284].  EnCodec frontend stubbed: input_specs() feeds frame
+embeddings; single-stream (delay-pattern flattened) vocabulary of 2048."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048, ffn_kind="gelu_mlp", norm="ln",
+    frontend_stub="audio",
+    source="arXiv:2306.05284 (MusicGen)",
+))

@@ -1,0 +1,13 @@
+"""Qwen2-VL 7B language backbone — M-RoPE, GQA kv=4, QKV bias
+[arXiv:2409.12191].  Vision frontend stubbed: input_specs() feeds patch
+embeddings + 3-D position ids."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab=152064, ffn_kind="swiglu",
+    qkv_bias=True, rope_theta=1e6, mrope_sections=(16, 24, 24),
+    frontend_stub="vision",
+    source="arXiv:2409.12191 (Qwen2-VL)",
+))

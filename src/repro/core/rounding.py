@@ -1,0 +1,47 @@
+"""Integer rounding of fractional replica loads (largest-remainder, jittable).
+
+The LP yields fractional x[e, r]; the dispatcher needs integer token counts
+with  Σ_r round(x[e]) == load_e  exactly.  Largest-remainder rounding adds at
+most 1 token over the fractional allocation per replica, so the max device
+load grows by at most (slots per device) over the LP optimum — negligible at
+token granularity (the paper rounds identically inside its C++ scheduler).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["round_replica_loads"]
+
+
+@jax.jit
+def round_replica_loads(
+    x: jax.Array, loads: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """int32[E, R] with row sums == loads and zeros on invalid replicas.
+
+    x: f32[E, R] fractional allocation (row sums ~= loads, padding zeros).
+    loads: int32[E].
+    valid: bool[E, R] replica validity mask (dev >= 0).
+    """
+    loads = loads.astype(jnp.int32)
+    x = jnp.where(valid, x, 0.0)
+    base = jnp.floor(x).astype(jnp.int32)
+    # clamp any float drift: never exceed the target sum
+    overshoot = jnp.maximum(base.sum(-1) - loads, 0)
+    # remove overshoot from the largest entries (rare; at most R)
+    order_desc = jnp.argsort(-base, axis=-1)
+    rank = jnp.argsort(order_desc, axis=-1)
+    base = jnp.maximum(base - (rank < overshoot[:, None]).astype(jnp.int32), 0)
+
+    frac = jnp.where(valid, x - base, -1.0)  # invalid sorts last
+    deficit = loads - base.sum(-1)  # int32[E], >= 0
+    # cap deficit by the number of valid replicas (paranoia; always true)
+    deficit = jnp.minimum(deficit, valid.sum(-1).astype(jnp.int32))
+    order = jnp.argsort(-frac, axis=-1)
+    rank_in_sorted = jnp.argsort(order, axis=-1)
+    bump = rank_in_sorted < deficit[:, None]
+    out = base + bump.astype(jnp.int32)
+    # deficit can exceed R only if loads > 0 with no valid replica (malformed
+    # placement); keep the invariant "sum == loads" best-effort via the bump.
+    return jnp.where(valid, out, 0)

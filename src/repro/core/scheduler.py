@@ -1,0 +1,160 @@
+"""MicroEP scheduler: per-micro-batch token scheduling (paper §5).
+
+Pipeline per micro-batch (identical, deterministic, on every device — the
+paper's *distributed scheduling*, §5.3):
+
+    counts all-gather -> LPP solve (warm-started) -> integer rounding ->
+    locality-aware routing (Alg. 1) -> flow tensor F[E, G, R]
+
+The flow tensor plus the placement table is everything the dispatcher needs
+to compute send offsets (on the source device) and receive layouts (on the
+destination device) with pure cumsums — both sides derive them from the same
+F, which is why no extra coordination round-trip is needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lp as lp_host
+from .placement import Placement
+from .rounding import round_replica_loads
+from .routing import RoutingResult, route_tokens
+from .solver_jax import SolverState, device_loads, solve_replica_loads
+
+__all__ = ["ScheduleStatics", "Schedule", "MicroEPScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleStatics:
+    """Static (trace-time) description of one MicroEP group's placement."""
+
+    placement: Placement
+    dev: np.ndarray          # int[E, R] replica -> flat device, -1 pad
+    slot: np.ndarray         # int[E, R] replica -> local slot id on its device
+    num_devices: int
+
+    @classmethod
+    def from_placement(cls, p: Placement) -> "ScheduleStatics":
+        dev = lp_host.replica_devices(p)
+        flat = p.flat()
+        slot = np.full_like(dev, -1)
+        for e in range(p.num_experts):
+            for r in range(dev.shape[1]):
+                g = dev[e, r]
+                if g >= 0:
+                    slot[e, r] = int(np.nonzero(flat[g] == e)[0][0])
+        return cls(placement=p, dev=dev, slot=slot, num_devices=p.num_devices)
+
+    @property
+    def num_experts(self) -> int:
+        return self.placement.num_experts
+
+    @property
+    def max_replicas(self) -> int:
+        return self.dev.shape[1]
+
+
+class Schedule(NamedTuple):
+    """Per-micro-batch scheduling decision (identical on every device)."""
+
+    flow: jax.Array          # int32[E, G, R] routed token counts
+    x_int: jax.Array         # int32[E, R] integer replica loads
+    solver_state: SolverState  # warm-start carry for the next micro-batch
+    max_load: jax.Array      # f32[] resulting max device load (diagnostic)
+    balance: jax.Array       # f32[] max/mean device load (diagnostic)
+
+
+class MicroEPScheduler:
+    """Schedules tokens within one MicroEP group (paper §5.1-5.2).
+
+    Modes:
+      * microep: solve LPP 1 in-graph (water-filling GS) and route (Alg. 1).
+      * vanilla: no scheduling freedom — each token goes to the replica in
+        its own EP group (row); reproduces Megatron EP for baselines.
+    """
+
+    def __init__(
+        self,
+        statics: ScheduleStatics,
+        sweeps: int = 6,
+        locality: bool = True,
+        mode: str = "microep",
+        sequencing: str = "proportional",
+    ):
+        assert mode in ("microep", "vanilla")
+        self.statics = statics
+        self.sweeps = sweeps
+        self.locality = locality
+        self.mode = mode
+        self.sequencing = sequencing
+        # keep host numpy here: converting at call time keeps this object
+        # safe to cache/reuse across different jit traces
+        self._dev = np.asarray(statics.dev, np.int32)
+
+    def init_state(self) -> SolverState:
+        e, r = self.statics.dev.shape
+        return SolverState(x=jnp.zeros((e, r), jnp.float32))
+
+    def __call__(
+        self, input_eg: jax.Array, state: Optional[SolverState] = None
+    ) -> Schedule:
+        """input_eg: int32[E, G] per-(expert, source-device) token counts."""
+        st = self.statics
+        dev = jnp.asarray(self._dev, jnp.int32)
+        valid = dev >= 0
+        loads = input_eg.sum(axis=1).astype(jnp.int32)           # [E]
+
+        if self.mode == "vanilla":
+            # Each source row dispatches within its own EP group: replica on
+            # the token's own row.  flow[e, g, r] = input if dev[e,r] is in
+            # g's row else 0.  With one replica per row (symmetric placement)
+            # this is exactly Megatron EP.
+            cols = st.placement.cols
+            src_row = jnp.arange(st.num_devices, dtype=jnp.int32) // cols
+            rep_row = jnp.where(valid, dev // cols, -1)          # [E, R]
+            same_row = rep_row[:, None, :] == src_row[None, :, None]
+            flow = jnp.where(same_row, input_eg[:, :, None], 0).astype(jnp.int32)
+            x_int = flow.sum(axis=1)
+            dl = device_loads(x_int.astype(jnp.float32), dev, st.num_devices)
+            state_out = state if state is not None else self.init_state()
+        else:
+            sol = solve_replica_loads(
+                loads.astype(jnp.float32),
+                dev,
+                st.num_devices,
+                x_init=None if state is None else state.x,
+                sweeps=self.sweeps,
+            )
+            x_int = round_replica_loads(sol.x, loads, valid)
+            routed = route_tokens(input_eg, x_int, dev,
+                                  locality=self.locality,
+                                  sequencing=self.sequencing)
+            flow = routed.flow
+            dl = device_loads(x_int.astype(jnp.float32), dev, st.num_devices)
+            state_out = sol
+
+        mean = jnp.maximum(dl.mean(), 1e-9)
+        if self.mode == "vanilla":
+            # vanilla already built flow above
+            pass
+        return Schedule(
+            flow=flow,
+            x_int=x_int,
+            solver_state=state_out,
+            max_load=dl.max(),
+            balance=dl.max() / mean,
+        )
+
+    # ---------------- host-side oracle (paper's HiGHS path) ----------------
+    def schedule_host(self, input_eg: np.ndarray) -> np.ndarray:
+        """Solve with HiGHS on the host (paper §5.1 exact path).  Returns the
+        optimal fractional x[E, R].  Used by tests/benches as the oracle."""
+        loads = np.asarray(input_eg).sum(axis=1)
+        res = lp_host.solve_lpp1(loads, self.statics.dev, self.statics.num_devices)
+        return res.x

@@ -1,0 +1,132 @@
+"""Jittable on-device solver for LPP 1 (TPU adaptation of paper §5.1).
+
+The paper solves LPP 1 with HiGHS on the host CPU, overlapped with GPU work.
+Inside a pjit-compiled TPU step a host round-trip costs a device→host sync,
+so we solve the LP *in-graph*:
+
+The feasible region of LPP 1 is a product of scaled simplices
+(x_e ∈ load_e · Δ^{R_e}).  The achievable device-load vectors L(x) form a
+base polytope of a supermodular set function (paper Eq. 2/3); on such
+polytopes the *least-majorized* element exists and simultaneously minimizes
+every symmetric convex function — in particular both Σ_g L_g² and max_g L_g.
+So minimizing the smooth QP  Σ_g L_g²  solves the min-max LP exactly.
+
+We minimize the QP by Gauss-Seidel block coordinate descent: one block = one
+expert's replica-load vector, whose subproblem
+
+    min_{x_e >= 0, Σ x_e = load_e}  Σ_r (b_r + x_e^r)²
+
+(b_r = device load excluding e) is an exact *water-filling* step: pour
+load_e onto the levels b_r.  Each sweep is a `lax.scan` over experts; the
+iterate stays feasible at every step, so fixed-sweep truncation is safe
+(warm-started from the previous micro-batch it converges in 2-4 sweeps —
+the in-graph analog of the paper's warm start).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SolverState", "water_fill", "solve_replica_loads", "device_loads"]
+
+
+class SolverState(NamedTuple):
+    x: jax.Array  # f32[E, R] replica loads (padding replicas forced to 0)
+
+
+def water_fill(levels: jax.Array, budget: jax.Array, valid: jax.Array) -> jax.Array:
+    """Pour ``budget`` onto ``levels`` to equalize: returns alloc[R] >= 0 with
+    sum = budget minimizing Σ (levels + alloc)² over valid entries.
+
+    levels: f32[R]; budget: f32[]; valid: bool[R] (at least one True).
+    """
+    big = jnp.asarray(1e30, levels.dtype)
+    lv = jnp.where(valid, levels, big)
+    order = jnp.argsort(lv)
+    srt = lv[order]
+    r = lv.shape[0]
+    # For j+1 active replicas: tau_j = (budget + Σ_{i<=j} srt_i) / (j+1)
+    csum = jnp.cumsum(srt)
+    j1 = jnp.arange(1, r + 1, dtype=levels.dtype)
+    tau = (budget + csum) / j1
+    # valid j: tau_j >= srt_j (water covers the j-th level) and
+    #          (j == last or tau_j <= srt_{j+1})
+    nxt = jnp.concatenate([srt[1:], jnp.full((1,), big, levels.dtype)])
+    ok = (tau >= srt - 1e-6) & (tau <= nxt + 1e-6)
+    # first valid j (there is always exactly one for budget > 0)
+    idx = jnp.argmax(ok)
+    level = tau[idx]
+    alloc_sorted = jnp.clip(level - srt, 0.0, None)
+    # keep exact budget: scale tiny numeric drift
+    total = alloc_sorted.sum()
+    alloc_sorted = alloc_sorted * jnp.where(total > 0, budget / total, 0.0)
+    inv = jnp.argsort(order)
+    return alloc_sorted[inv] * valid
+
+
+def device_loads(x: jax.Array, dev: jax.Array, num_devices: int) -> jax.Array:
+    """f32[G] total load per device.  dev: int32[E, R] (-1 padding)."""
+    flat_dev = jnp.where(dev >= 0, dev, num_devices)  # padding into overflow bin
+    loads = jnp.zeros(num_devices + 1, x.dtype).at[flat_dev.ravel()].add(x.ravel())
+    return loads[:num_devices]
+
+
+@functools.partial(jax.jit, static_argnames=("num_devices", "sweeps"))
+def solve_replica_loads(
+    loads: jax.Array,
+    dev: jax.Array,
+    num_devices: int,
+    x_init: jax.Array | None = None,
+    sweeps: int = 6,
+) -> SolverState:
+    """Solve LPP 1 on device.
+
+    Args:
+      loads: f32[E] total load per expert in the MicroEP group.
+      dev: int32[E, R] flat device id per replica (-1 = padding).
+      num_devices: |G_MicroEP|.
+      x_init: optional f32[E, R] warm start (previous micro-batch solution);
+        it is re-projected onto the current loads before use.
+      sweeps: Gauss-Seidel sweeps (fixed for static compilation).
+
+    Returns SolverState with x: f32[E, R], Σ_r x[e] == loads[e].
+    """
+    n_e, r_max = dev.shape
+    valid = dev >= 0
+    loads = loads.astype(jnp.float32)
+
+    if x_init is None:
+        # proportional split over valid replicas
+        denom = jnp.maximum(valid.sum(-1, keepdims=True), 1)
+        x = jnp.where(valid, loads[:, None] / denom, 0.0)
+    else:
+        # rescale warm start to the new loads (keeps the *shape* of the split)
+        s = x_init.sum(-1, keepdims=True)
+        denom = jnp.maximum(valid.sum(-1, keepdims=True), 1)
+        prop = jnp.where(valid, loads[:, None] / denom, 0.0)
+        x = jnp.where(s > 0, x_init * loads[:, None] / jnp.maximum(s, 1e-9), prop)
+        x = jnp.where(valid, x, 0.0)
+
+    dl = device_loads(x, dev, num_devices)
+
+    def expert_step(carry, e):
+        x, dl = carry
+        xe = x[e]
+        dev_e = dev[e]
+        valid_e = dev_e >= 0
+        safe_dev = jnp.where(valid_e, dev_e, 0)
+        b = dl[safe_dev] - xe  # device load excluding e
+        alloc = water_fill(b, loads[e], valid_e)
+        dl = dl.at[safe_dev].add(jnp.where(valid_e, alloc - xe, 0.0))
+        x = x.at[e].set(alloc)
+        return (x, dl), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(expert_step, carry, jnp.arange(n_e))
+        return carry, None
+
+    (x, dl), _ = jax.lax.scan(sweep, (x, dl), None, length=sweeps)
+    return SolverState(x=x)

@@ -1,0 +1,6 @@
+"""Data pipelines: synthetic LM streams and Zipf expert-load workloads."""
+from .synthetic import (SyntheticLM, make_batch, zipf_expert_loads,
+                        frontend_stub_batch)
+
+__all__ = ["SyntheticLM", "make_batch", "zipf_expert_loads",
+           "frontend_stub_batch"]

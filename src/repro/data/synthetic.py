@@ -1,0 +1,128 @@
+"""Synthetic data pipelines.
+
+``SyntheticLM`` emits a *learnable* token stream: each sequence follows a
+noisy affine recurrence ``tok_{t+1} = (a · tok_t + b) mod V`` with per-stream
+(a, b) drawn from a small pool, corrupted by uniform noise with probability
+``noise``.  A model that learns the transition structure pushes the loss far
+below the unigram entropy — which is what the end-to-end training examples
+assert (loss actually *decreases*, not just runs).
+
+``zipf_expert_loads`` generates the skewed expert-load workloads of the
+paper's Fig. 7 (token count of the i-th most popular expert ∝ i^-s).
+
+``frontend_stub_batch`` builds the stand-in embeddings for the stubbed
+vision/audio frontends (the one permitted carve-out): patch/frame embeddings
+of the right shape plus M-RoPE 3-D position ids for VLM inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticLM", "make_batch", "zipf_expert_loads",
+           "frontend_stub_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    """Deterministic, seekable synthetic LM stream."""
+
+    vocab: int
+    seq_len: int
+    batch: int
+    noise: float = 0.1
+    n_maps: int = 8
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        """Batch for a given step (pure function of (seed, step))."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return make_batch(key, self.vocab, self.batch, self.seq_len,
+                          self.noise, self.n_maps)
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch(key, vocab: int, batch: int, seq_len: int,
+               noise: float = 0.1, n_maps: int = 8) -> dict:
+    """tokens int32[B, T] + next-token labels int32[B, T] (-1 on the last)."""
+    k_map, k_start, k_noise, k_rand = jax.random.split(key, 4)
+    # pool of affine maps; multipliers odd => bijective mod 2^k-ish vocab
+    mults = 2 * jax.random.randint(k_map, (n_maps,), 1, max(vocab // 2, 2)) + 1
+    adds = jax.random.randint(jax.random.fold_in(k_map, 1), (n_maps,), 0, vocab)
+    which = jax.random.randint(jax.random.fold_in(k_map, 2), (batch,), 0, n_maps)
+    a = mults[which][:, None]
+    b = adds[which][:, None]
+    start = jax.random.randint(k_start, (batch, 1), 0, vocab)
+
+    def step_fn(tok, i):
+        nxt = (a[:, 0] * tok + b[:, 0]) % vocab
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step_fn, start[:, 0], jnp.arange(seq_len - 1))
+    tokens = jnp.concatenate([start, seq.T], axis=1).astype(jnp.int32)
+    # corrupt with uniform noise
+    flip = jax.random.bernoulli(k_noise, noise, tokens.shape)
+    rand = jax.random.randint(k_rand, tokens.shape, 0, vocab)
+    tokens = jnp.where(flip, rand, tokens).astype(jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], -jnp.ones((batch, 1), jnp.int32)], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def frontend_stub_batch(key, cfg, batch: int, seq_len: int,
+                        dtype=jnp.float32) -> dict:
+    """Precomputed frontend embeddings for vlm/audio backbones.
+
+    VLM: patch embeddings + 3-D M-RoPE position ids laid out as a
+    (grid_h x grid_w) image patch block followed by text positions, matching
+    Qwen2-VL's position scheme.  Audio: EnCodec token ids are the real
+    interface (the backbone owns the codec vocabulary), so the stub is only
+    needed for conditioning-free training and returns a plain token batch.
+    """
+    if cfg.frontend_stub == "vision":
+        k1, k2 = jax.random.split(key)
+        embeds = (jax.random.normal(k1, (batch, seq_len, cfg.d_model))
+                  * 0.02).astype(dtype)
+        # first quarter of the sequence: image patches on an hxw grid
+        n_img = seq_len // 4
+        side = max(int(np.sqrt(n_img)), 1)
+        n_img = side * side
+        t_pos = np.zeros((seq_len, 3), np.int32)
+        idx = np.arange(n_img)
+        t_pos[:n_img, 0] = 0                       # temporal: single image
+        t_pos[:n_img, 1] = idx // side             # height
+        t_pos[:n_img, 2] = idx % side              # width
+        text = np.arange(seq_len - n_img) + side   # text resumes after max
+        t_pos[n_img:, :] = text[:, None]
+        positions = jnp.broadcast_to(jnp.asarray(t_pos)[None],
+                                     (batch, seq_len, 3))
+        labels = jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab)
+        labels = labels.at[:, :n_img].set(-1)      # no loss on image patches
+        return {"embeds": embeds, "positions": positions,
+                "labels": labels.astype(jnp.int32)}
+    # audio (and any other token-native stub): plain token batch
+    return make_batch(key, cfg.vocab, batch, seq_len)
+
+
+def zipf_expert_loads(key, num_experts: int, total_tokens: int,
+                      s: float) -> jax.Array:
+    """int32[E] token counts with Zipf(s) popularity (Fig. 7 workload)."""
+    ranks = jnp.arange(1, num_experts + 1, dtype=jnp.float32)
+    p = ranks ** (-s)
+    p = p / p.sum()
+    # multinomial via categorical draws (exact token-count semantics)
+    draws = jax.random.categorical(
+        key, jnp.log(p)[None, :].repeat(total_tokens, 0))
+    counts = jnp.zeros(num_experts, jnp.int32).at[draws].add(1)
+    # randomize which expert is popular (the paper permutes identities)
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), num_experts)
+    return counts[perm]

@@ -1,0 +1,126 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU the wrappers call the Pallas kernels compiled natively; on CPU
+(this container) they run either in Pallas ``interpret=True`` mode (tests) or
+fall back to the jnp oracle (fast path for CPU training examples).  The
+switch is explicit, never silent: callers pick via ``impl=``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .grouped_matmul import grouped_ffn_flat_pallas, grouped_ffn_pallas
+from .wkv6_chunk import wkv6_pallas
+
+__all__ = ["grouped_ffn", "grouped_ffn_flat", "wkv6", "default_impl"]
+
+
+def default_impl() -> str:
+    """'pallas' on TPU, 'ref' elsewhere (interpret mode reserved for tests)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def grouped_ffn(
+    x: jax.Array,
+    counts: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    activation: str = "swiglu",
+    impl: str | None = None,
+    bm: int = 128,
+    bf: int = 512,
+) -> jax.Array:
+    """Ragged per-slot gated FFN.  x: [S, C, H] -> [S, C, H]."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.grouped_ffn_ref(x, counts, w_gate, w_up, w_down, activation)
+    interpret = impl == "interpret"
+    c0, f0 = x.shape[1], w_gate.shape[-1]
+    xp = _pad_axis(x, 1, bm)
+    wgp = _pad_axis(w_gate, 2, bf)
+    wup = _pad_axis(w_up, 2, bf)
+    wdp = _pad_axis(w_down, 1, bf)
+    out = grouped_ffn_pallas(
+        xp, counts, wgp, wup, wdp,
+        activation=activation, bm=bm, bf=bf, interpret=interpret,
+    )
+    return out[:, :c0, :]
+
+
+def grouped_ffn_flat(
+    x: jax.Array,            # [N, H], N a multiple of bm, sorted by group
+    group_start: jax.Array,  # int32[S], bm-aligned
+    group_end: jax.Array,    # int32[S]
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    activation: str = "swiglu",
+    impl: str | None = None,
+    bm: int = 128,
+    bf: int = 512,
+) -> jax.Array:
+    """Flat MegaBlocks-style ragged FFN (dispatcher's native layout)."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.grouped_ffn_flat_ref(
+            x, group_start, group_end, w_gate, w_up, w_down, activation
+        )
+    n = x.shape[0]
+    s = w_gate.shape[0]
+    # tile group ids from the (bm-aligned) starts
+    tiles = jnp.arange(n // bm, dtype=jnp.int32) * bm
+    tile_gid = jnp.clip(
+        jnp.searchsorted(group_start, tiles, side="right") - 1, 0, s - 1
+    ).astype(jnp.int32)
+    f0 = w_gate.shape[-1]
+    wgp = _pad_axis(w_gate, 2, bf)
+    wup = _pad_axis(w_up, 2, bf)
+    wdp = _pad_axis(w_down, 1, bf)
+    return grouped_ffn_flat_pallas(
+        x, tile_gid, group_end, wgp, wup, wdp,
+        activation=activation, bm=bm, bf=bf, interpret=(impl == "interpret"),
+    )
+
+
+def wkv6(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lw: jax.Array,
+    u: jax.Array,
+    chunk: int = 128,
+    impl: str | None = None,
+) -> jax.Array:
+    """RWKV-6 recurrence over [BH, T, D] (zero initial state)."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        d = q.shape[-1]
+        o, _ = jax.vmap(
+            lambda q_, k_, v_, lw_, u_: ref.wkv6_chunk_ref(
+                q_, k_, v_, jnp.exp(lw_), u_, jnp.zeros((d, d), jnp.float32)
+            )
+        )(q, k, v, lw, u)
+        return o
+    t = q.shape[1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        q, k, v = (_pad_axis(a, 1, chunk) for a in (q, k, v))
+        lw = _pad_axis(lw, 1, chunk)
+    out = wkv6_pallas(q, k, v, lw, u, chunk=chunk, interpret=(impl == "interpret"))
+    return out[:, :t, :]

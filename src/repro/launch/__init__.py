@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, distributed runtime, dry-run, drivers."""

@@ -1,0 +1,259 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Sources:
+  * ``compiled.cost_analysis()`` — per-device HLO FLOPs and bytes accessed
+    (the compiled module is the post-SPMD per-device program).
+  * ``compiled.as_text()`` — optimized HLO; collective traffic is parsed by
+    summing operand sizes of all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute ops.  Shapes in the partitioned module
+    are per-device, so the parsed bytes are per-device traffic; dividing by
+    the per-chip link bandwidth equals the prompt's
+    ``collective_bytes_total / (chips · link_bw)``.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline",
+           "RooflineReport", "model_flops", "count_params"]
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+DCN_BW = 6.25e9            # bytes/s per chip for the cross-pod ('pod') axis
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    dcn_bw: float = DCN_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype)
+    if bpe is None:
+        return 0
+    if not dims:
+        return bpe
+    return int(np.prod([int(d) for d in dims.split(",")])) * bpe
+
+
+def _result_bytes(lhs: str) -> int:
+    """Sum all result shapes found on the LHS of an op definition (handles
+    tuple results, including XLA's 256-way tuple-form all-to-all with
+    ``/*index=k*/`` comments)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        total += _shape_bytes(dt, dims)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        first = m.group(1)
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota format
+    if m:
+        return max(int(m.group(2)), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device operand bytes by collective kind + op counts."""
+
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not (ls.startswith("%") or ls.startswith("ROOT")) or " = " not in ls:
+            continue
+        # find the op-name token: "<kind>(" or "<kind>-start(" after " = "
+        kind = hit = None
+        for k in _COLLECTIVES:
+            for suffix in ("(", "-start("):
+                idx = ls.find(f" {k}{suffix}")
+                if idx >= 0 and (hit is None or idx < hit):
+                    kind, hit = k, idx
+        if kind is None:
+            continue
+        if f" {kind}-done(" in ls:
+            continue  # avoid double counting async start/done pairs
+        lhs = ls[:hit]            # "%name = <result shape(s)>"
+        lhs = lhs.split(" = ", 1)[1] if " = " in lhs else lhs
+        res = _result_bytes(lhs)
+        g = _group_size(ls)
+        if kind == "all-gather":
+            op_bytes = res // max(g, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = res * g
+        else:  # all-reduce, all-to-all, collective-permute
+            op_bytes = res
+        bytes_by[kind] += op_bytes
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: int
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    useful_ratio: float          # model_flops / (flops_per_device * chips)
+    bottleneck: str
+    peak_mem_bytes: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def raw_costs(compiled) -> dict:
+    """Per-device additive cost vector of one compiled module."""
+    ca = compiled.cost_analysis()
+    cs = parse_collectives(compiled.as_text())
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": float(ca.get("bytes accessed", 0.0))}
+    for k, v in cs.bytes_by_kind.items():
+        out[f"coll_{k}"] = float(v)
+        out[f"cnt_{k}"] = float(cs.count_by_kind[k])
+    return out
+
+
+def combine_costs(*terms) -> dict:
+    """Linear combination of cost vectors: terms = [(coeff, costs), ...].
+
+    FLOPs, bytes and collective bytes are additive over program regions, so
+    a depth-L model's cost is  fixed + reps·group (+ remainder), each
+    obtained exactly from two (three) small unrolled compiles."""
+    keys = set()
+    for _, c in terms:
+        keys |= set(c)
+    return {k: sum(a * c.get(k, 0.0) for a, c in terms) for k in keys}
+
+
+def roofline_from_raw(arch: str, shape: str, mesh_name: str, costs: dict,
+                      chips: int, model_flops_total: float,
+                      hw: HW = HW()) -> RooflineReport:
+    flops = max(costs.get("flops", 0.0), 0.0)
+    byts = max(costs.get("bytes", 0.0), 0.0)
+    coll = {k[5:]: max(int(costs[k]), 0) for k in costs
+            if k.startswith("coll_")}
+    counts = {k[4:]: max(int(costs[k]), 0) for k in costs
+              if k.startswith("cnt_")}
+    total_coll = sum(coll.values())
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = total_coll / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes=total_coll,
+        collectives=coll, collective_counts=counts,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops_total=model_flops_total,
+        useful_ratio=(model_flops_total / (flops * chips))
+        if flops > 0 else 0.0,
+        bottleneck=bottleneck)
+
+
+def roofline(arch: str, shape: str, mesh_name: str, compiled,
+             chips: int, model_flops_total: float,
+             hw: HW = HW()) -> RooflineReport:
+    rep = roofline_from_raw(arch, shape, mesh_name, raw_costs(compiled),
+                            chips, model_flops_total, hw)
+    try:
+        ma = compiled.memory_analysis()
+        rep.peak_mem_bytes = float(ma.temp_size_in_bytes
+                                   + ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes)
+    except Exception:
+        pass
+    return rep
+
+
+# --------------------------------------------------------------------------
+# model FLOPs (6·N·D dense / 6·N_active·D MoE)
+# --------------------------------------------------------------------------
+
+
+def count_params(cfg) -> dict:
+    """Parameter counts from the abstract master tree: total, expert, and
+    per-token-active (non-expert + top_k · per-expert)."""
+    import jax
+    import jax.numpy as jnp
+    from ..models import decoder as dec
+
+    shapes = jax.eval_shape(
+        lambda k: dec.init_params(k, cfg, jnp.float32),
+        jax.random.PRNGKey(0))
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        from ..sharding import _path_str
+        if "experts" in _path_str(path):
+            expert += n
+        total += n
+    dense = total - expert
+    if cfg.moe:
+        e_virt = cfg.num_experts * max(cfg.etp, 1)
+        per_expert = expert // max(e_virt, 1)
+        active = dense + cfg.top_k * max(cfg.etp, 1) * per_expert
+    else:
+        active = total
+    return {"total": total, "expert": expert, "dense": dense,
+            "active": active}
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for forward-only (prefill,
+    decode).  D = processed tokens."""
+    n = count_params(cfg)["active"]
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens

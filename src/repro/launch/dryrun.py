@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and extract the roofline terms (DESIGN.md §8).
+
+The two lines above MUST run before any other import — jax locks the device
+count at first initialization.  (No ``from __future__ import annotations``
+here for the same reason: nothing may precede the XLA_FLAGS lines.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+
+Skip rules (reported, not silent):
+  * long_500k needs sub-quadratic attention — skipped for pure
+    full-attention archs (dbrx, olmoe, gemma-2b, qwen*, musicgen, the paper
+    configs); runs for rwkv6 / recurrentgemma / gemma3-* (DESIGN.md §5).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ASSIGNED, PAPER, SHAPES, get_config
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..train.loop import TrainState
+from . import analysis as A
+from . import runtime as R
+from .mesh import make_production_mesh
+
+# Micro-batch counts: the scanned (memory) pass uses the production
+# grad-accumulation depth; the unrolled (cost) pass uses one micro-batch —
+# per-token FLOPs and collective bytes are identical, and unrolling 8
+# micro-batches would multiply compile time for no information.
+N_MICRO_SCAN = {"train_4k": 8}
+N_MICRO = {"train_4k": 1}
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skip: long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is pure full-attention (DESIGN.md §5)")
+    return None
+
+
+def _lower_compile(dr, cfg, shape, shape_name, n_micro, grad_rs=False):
+    if shape.kind == "train":
+        master = dr.master_sds()
+        opt = jax.eval_shape(adamw_init, master)
+        ts = TrainState(master=master, opt=opt,
+                        solver=dr.solver_sds() if cfg.moe else None,
+                        step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch = R.input_specs(dr, shape)
+        fn = R.make_train_fn(dr, n_micro=n_micro, grad_rs=grad_rs)
+        return jax.jit(fn).lower(ts, batch).compile()
+    if shape.kind == "prefill":
+        params = dr.params_sds()
+        batch = R.input_specs(dr, shape)
+        fn = R.make_forward_fn(dr)
+        return jax.jit(fn).lower(params, batch).compile()
+    params = dr.params_sds()
+    state = R.decode_state_sds(dr, shape)
+    batch = R.input_specs(dr, shape)
+    fn = R.make_serve_fn(dr)
+    return jax.jit(fn).lower(params, state, batch).compile()
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              mode: str = "microep", placement: str = "latin",
+              capacity_factor: float = 2.0, remat: bool = True,
+              verbose: bool = True, cost_pass: bool = None,
+              extra: dict | None = None, grad_rs: bool = False):
+    """Lower + compile one (arch × shape × mesh); returns the roofline
+    report dict (or a skip record).
+
+    Two compiles per combo:
+      * SCANNED program (production layout: lax.scan over layer groups and
+        micro-batches) -> memory_analysis.  Scan gives XLA's scheduler real
+        loop boundaries, so the per-device peak reflects deployment.
+      * UNROLLED program -> cost_analysis + collective parsing.  XLA counts
+        a while-loop body once, so only straight-line HLO yields true
+        FLOP/byte/collective totals.  Single-pod only (the roofline table
+        is single-pod; the multi-pod pass proves sharding).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = should_skip(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+    if cost_pass is None:
+        cost_pass = not multi_pod
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    kw = dict(dtype=jnp.bfloat16, impl="ref", mode=mode,
+              placement_strategy=placement,
+              capacity_factor=capacity_factor, remat=remat,
+              **(extra or {}))
+
+    # pass 1: scanned (memory)
+    dr_scan = R.build_runtime(cfg, mesh, unroll=False, **kw)
+    c_scan = _lower_compile(dr_scan, cfg, shape, shape_name,
+                            N_MICRO_SCAN.get(shape_name, 8),
+                            grad_rs=grad_rs)
+    ma = c_scan.memory_analysis()
+    t_scan = time.perf_counter() - t0
+
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok", "mode": mode, "placement": placement,
+           "mem_args_gib": round(ma.argument_size_in_bytes / 2**30, 3),
+           "mem_temp_gib": round(ma.temp_size_in_bytes / 2**30, 3),
+           "mem_out_gib": round(ma.output_size_in_bytes / 2**30, 3),
+           "scan_compile_s": round(t_scan, 1)}
+
+    if cost_pass:
+        # Exact depth extrapolation: FLOPs/bytes/collective bytes are
+        # additive over program regions, so compile small UNROLLED programs
+        # at depth P (one pattern group), 2P, and P+rem, and recover
+        #   total = fixed + reps·group + remainder
+        # exactly — instead of unrolling all num_layers (hours on 1 core).
+        p_len = len(cfg.pattern)
+        reps = cfg.num_layers // p_len
+        rem = cfg.num_layers % p_len
+        n_micro = N_MICRO.get(shape_name, 1)
+
+        def cost_at(num_layers: int) -> dict:
+            # layout="list": per-layer parameter tuples.  Stacked [L, ...]
+            # buffers make the gradient accumulation scatter O(L) per layer
+            # (an O(L²) cost-model artifact, measured: per-layer diffs grow
+            # ~1.4 %/layer flops, ~6 %/layer bytes); flat layouts keep the
+            # per-layer cost constant so the linear fit is exact.
+            cfg_l = dataclasses.replace(cfg, num_layers=num_layers)
+            dr_u = R.build_runtime(cfg_l, mesh, unroll=True, layout="list",
+                                   **kw)
+            c = _lower_compile(dr_u, cfg_l, shape, shape_name, n_micro,
+                               grad_rs=grad_rs)
+            return A.raw_costs(c)
+
+        if reps >= 3:
+            # Newton forward quadratic through depths P, 2P, 3P:
+            #   total(n groups) = C1 + (n-1)·ΔC + (n-1)(n-2)/2·Δ²C
+            # Measured (qwen 24L): the quadratic fit reproduces the full
+            # 24-layer unroll's cost_analysis to 0.1 % (2.606e13 vs
+            # 2.609e13 FLOP/device); a linear fit errs 10 % (flops) /
+            # 40 % (bytes) because per-layer HLO cost carries a small
+            # linear-in-depth term.
+            c1 = cost_at(p_len)
+            c2 = cost_at(2 * p_len)
+            c3 = cost_at(3 * p_len)
+            n = float(reps)
+            d1 = A.combine_costs((1.0, c2), (-1.0, c1))       # ΔC
+            d2 = A.combine_costs((1.0, c3), (-2.0, c2), (1.0, c1))  # Δ²C
+            costs = A.combine_costs(
+                (1.0, c1), (n - 1.0, d1),
+                ((n - 1.0) * (n - 2.0) / 2.0, d2))
+            if rem:
+                c_rem = cost_at(p_len + rem)
+                costs = A.combine_costs((1.0, costs), (1.0, c_rem),
+                                        (-1.0, c1))
+        else:  # shallow configs: compile the real depth directly
+            costs = cost_at(cfg.num_layers)
+
+        mf = A.model_flops(cfg, shape, shape.kind)
+        rep = A.roofline_from_raw(arch, shape_name, mesh_name, costs,
+                                  chips, mf)
+        out.update(rep.as_dict())
+        out["status"] = "ok"
+        out["cost_compile_s"] = round(time.perf_counter() - t0 - t_scan, 1)
+
+    if verbose:
+        print(f"== {arch} × {shape_name} × {mesh_name} ==")
+        print(f"  memory/device: args {out['mem_args_gib']:.2f} GiB, "
+              f"temp {out['mem_temp_gib']:.2f} GiB, "
+              f"out {out['mem_out_gib']:.2f} GiB (scanned program)")
+        if cost_pass:
+            print(f"  cost/device: {out['flops_per_device']:.3e} FLOP, "
+                  f"{out['bytes_per_device']:.3e} B")
+            print(f"  collectives: {out['collectives']}")
+            print(f"  roofline: compute {out['compute_s']*1e3:.2f} ms | "
+                  f"memory {out['memory_s']*1e3:.2f} ms | collective "
+                  f"{out['collective_s']*1e3:.2f} ms -> "
+                  f"{out['bottleneck']}-bound; useful "
+                  f"{out['useful_ratio']:.3f}")
+        print(f"  compile: scan {out['scan_compile_s']}s"
+              + (f", unrolled {out['cost_compile_s']}s" if cost_pass else ""),
+              flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--paper", action="store_true",
+                    help="include the paper's own model configs")
+    ap.add_argument("--mode", default="microep",
+                    choices=["microep", "vanilla"])
+    ap.add_argument("--placement", default="latin")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    if args.paper:
+        archs += PAPER
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    failures = 0
+
+    def flush():
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    results.append(lower_one(arch, shape, multi,
+                                             mode=args.mode,
+                                             placement=args.placement))
+                except Exception as e:
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if multi else "16x16",
+                                    "status": "error", "error": str(e)})
+                flush()   # incremental: survive timeouts/crashes
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {failures} failed "
+          f"of {len(results)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Production mesh definitions (DESIGN.md §3).
+
+Kept as FUNCTIONS so importing this module never touches jax device state —
+the dry-run must set XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods,
+    (pod=2, data=16, model=16); the 'pod' axis carries only data-parallel
+    gradient reduction (DCN-class links), MicroEP groups stay inside a pod
+    (ICI-class links) — the paper's PP-per-node analogue under slow
+    inter-node links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host platform devices (tests / examples).  Requires
+    the caller to have set --xla_force_host_platform_device_count."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: compare optimization levers on one
+(arch × shape) pair via small fixed-depth compiles (list layout).
+
+Per-variant we compile ONE unrolled program at a fixed small depth and
+report the cost vector; since every lever acts per-layer (or on the fixed
+part, which the same compile also contains), the relative delta on the
+dominant roofline term at depth L is the relative delta at full depth to
+first order.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen1.5-0.5b \
+      --shape train_4k --depth 3 \
+      --variant base --variant grad_rs --variant seq_parallel --variant both
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from . import analysis as A
+from . import runtime as R
+from .dryrun import _lower_compile
+from .mesh import make_production_mesh
+
+VARIANTS = {
+    # name -> (build_runtime extra kwargs, grad_rs flag)
+    "base": ({}, False),
+    "grad_rs": ({}, True),
+    "seq_parallel": ({"seq_parallel": True}, False),
+    "both": ({"seq_parallel": True}, True),
+    "cf1.25": ({"capacity_factor": 1.25}, False),
+    "cf4.0": ({"capacity_factor": 4.0}, False),
+    "vanilla_ep": ({"mode": "vanilla", "placement_strategy": "vanilla",
+                    "capacity_factor": 8.0}, False),
+    "no_locality": ({"locality": False}, False),
+    "no_remat": ({"remat": False}, False),
+    "greedy_seq": ({"sequencing": "greedy"}, False),
+}
+
+
+def run_variant(arch, shape_name, depth, name, n_micro=1):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    extra, grad_rs = VARIANTS[name]
+    cfg_l = dataclasses.replace(cfg, num_layers=depth)
+    mesh = make_production_mesh()
+    t0 = time.perf_counter()
+    dr = R.build_runtime(cfg_l, mesh, dtype=jnp.bfloat16, impl="ref",
+                         unroll=True, layout="list", remat=True,
+                         **extra)
+    c = _lower_compile(dr, cfg_l, shape, shape_name, n_micro,
+                       grad_rs=grad_rs)
+    rc = A.raw_costs(c)
+    rc["variant"] = name
+    rc["compile_s"] = round(time.perf_counter() - t0, 1)
+    coll = sum(v for k, v in rc.items()
+               if isinstance(v, float) and k.startswith("coll_"))
+    print(f"{arch} × {shape_name} depth={depth} [{name}]: "
+          f"flops={rc['flops']:.3e} bytes={rc['bytes']:.3e} "
+          f"coll={coll:.3e} "
+          f"(ar={rc.get('coll_all-reduce', 0):.2e} "
+          f"a2a={rc.get('coll_all-to-all', 0):.2e} "
+          f"ag={rc.get('coll_all-gather', 0):.2e} "
+          f"rs={rc.get('coll_reduce-scatter', 0):.2e}) "
+          f"[{rc['compile_s']}s]", flush=True)
+    return rc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    results = [run_variant(args.arch, args.shape, args.depth, v)
+               for v in (args.variant or ["base"])]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,385 @@
+"""Distributed runtime: wires the decoder to a mesh.
+
+GSPMD (jit + sharding constraints) distributes everything EXCEPT the MoE
+dispatch; the paper's contribution — per-micro-batch LP scheduling + token
+dispatch across the MicroEP group — runs as an explicit ``shard_map`` island
+(DESIGN.md §3).  The island's group axes are ('data','model'): one MicroEP
+group per pod; the 'pod' axis carries only gradient reduction.
+
+Placement grid == mesh grid: rows = data axis, cols = model axis.  Expert
+tensor parallelism (dbrx etp=2, mixtral etp=2) is implemented as *virtual
+experts*: expert e is stored as etp shards with d_ff/etp each, a token
+routed to e visits all shards, and the combine's top-(K·etp) weighted sum
+reconstructs the full down-projection.  This keeps expert-TP inside the
+standard dispatch/combine collectives — no sub-axis process groups, which
+XLA SPMD cannot express (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .. import sharding as sh
+from ..configs.base import ArchConfig, InputShape
+from ..core.placement import (Placement, latin_placement, random_placement,
+                              vanilla_placement, asymmetric_placement)
+from ..core.scheduler import MicroEPScheduler, ScheduleStatics
+from ..core.solver_jax import SolverState
+from ..data.synthetic import frontend_stub_batch
+from ..models import decoder as dec
+from ..moe import dispatch as D
+from ..moe.layer import MoEFFNSpec, MoEMetrics, moe_ffn
+from ..moe.router import top_k_gating
+from ..optim.adamw import AdamWConfig
+from ..train.loop import LayoutHooks, TrainState, make_train_step
+
+__all__ = ["DistRuntime", "build_runtime", "make_placement", "input_specs"]
+
+
+def make_placement(cfg: ArchConfig, mi: sh.MeshInfo,
+                   strategy: str = "latin", seed: int = 0,
+                   loads: Optional[np.ndarray] = None) -> Placement:
+    """Expert placement over the (data × model) grid (paper §6)."""
+    e_virt = cfg.num_experts * max(cfg.etp, 1)
+    rows, cols = mi.data, mi.model
+    if strategy == "vanilla":
+        return vanilla_placement(rows, cols, e_virt)
+    if strategy == "random":
+        return random_placement(rows, cols, e_virt, seed=seed)
+    if strategy == "latin":
+        return latin_placement(rows, cols, e_virt)
+    if strategy == "asymmetric":
+        assert loads is not None, "asymmetric placement needs expert loads"
+        return asymmetric_placement(rows, cols, e_virt, loads, seed=seed)
+    raise ValueError(strategy)
+
+
+@dataclasses.dataclass
+class DistRuntime:
+    """Everything needed to run one architecture on one mesh."""
+
+    cfg: ArchConfig
+    mesh: Mesh
+    mi: sh.MeshInfo
+    rt: dec.Runtime                   # decoder runtime (moe island installed)
+    hooks: LayoutHooks                # master -> working transform
+    placement: Optional[Placement]
+    sched_statics: Optional[ScheduleStatics]
+    capacity_factor: float
+    mode: str                          # "microep" | "vanilla"
+    dtype: Any
+    layout: str = "scan"               # "scan" | "list" (dry-run cost pass)
+
+    # ---------------- abstract shapes for lowering ----------------------
+    def master_sds(self):
+        shapes = jax.eval_shape(
+            lambda k: dec.init_params(k, self.cfg, jnp.float32,
+                                      layout=self.layout),
+            jax.random.PRNGKey(0))
+        specs = sh.master_pspecs(shapes, self.mi, self.cfg)
+        return jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=self.mi.named(sp)),
+            shapes, specs)
+
+    def params_sds(self):
+        master = self.master_sds()
+        shapes = jax.eval_shape(self.hooks.to_working, master)
+        specs = sh.param_pspecs(shapes, self.mi, self.cfg)
+        return jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=self.mi.named(sp)),
+            shapes, specs)
+
+    def solver_sds(self):
+        if not self.cfg.moe:
+            return None
+        r = self.sched_statics.max_replicas
+        e = self.cfg.num_experts * max(self.cfg.etp, 1)
+        shapes = jax.eval_shape(
+            functools.partial(_init_solver, self.cfg, self.mi.pods, e, r,
+                              self.layout))
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=self.mi.named(P("pod" if self.mi.has_pod else None))),
+            shapes)
+
+    def init_solver(self):
+        e = self.cfg.num_experts * max(self.cfg.etp, 1)
+        r = self.sched_statics.max_replicas if self.cfg.moe else 1
+        return _init_solver(self.cfg, self.mi.pods, e, r, self.layout)
+
+
+def _init_solver(cfg: ArchConfig, pods: int, e_virt: int, r: int,
+                 layout: str = "scan"):
+    if not cfg.moe:
+        return None
+    reps, rem = cfg.num_layers // len(cfg.pattern), \
+        cfg.num_layers % len(cfg.pattern)
+
+    def one():
+        return SolverState(x=jnp.zeros((pods, e_virt, r), jnp.float32))
+
+    if layout == "list":
+        return {"list": tuple(one() for _ in range(cfg.num_layers))}
+    st = {}
+    if reps > 0:
+        st["scan"] = tuple(
+            jax.tree_util.tree_map(lambda x: jnp.stack([x] * reps), one())
+            for _ in cfg.pattern)
+    if rem > 0:
+        st["rem"] = tuple(one() for _ in range(rem))
+    return st
+
+
+# --------------------------------------------------------------------------
+# the MoE shard_map island
+# --------------------------------------------------------------------------
+
+
+def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
+                     sched_statics: ScheduleStatics,
+                     mode: str, capacity_factor: float,
+                     impl: Optional[str], locality: bool = True,
+                     sweeps: int = 6, sequencing: str = "proportional",
+                     comm_alpha: float = 0.0):
+    etp = max(cfg.etp, 1)
+    top_k_eff = cfg.top_k * etp
+    act = "swiglu" if cfg.ffn_kind == "gelu_mlp" else cfg.ffn_kind
+    group_axes = ("data", "model")
+    all_axes = (("pod",) if mi.has_pod else ()) + group_axes
+    total_dev = mi.group_size * mi.pods
+    scheduler = MicroEPScheduler(sched_statics, sweeps=sweeps,
+                                 locality=locality, mode=mode,
+                                 sequencing=sequencing)
+
+    @functools.lru_cache(maxsize=8)
+    def statics_for(tokens_per_device: int) -> D.DispatchStatics:
+        return D.build_statics(sched_statics, tokens_per_device,
+                               top_k_eff, capacity_factor, bm=128)
+
+    def moe_apply(p_moe, x2d, state):
+        n, h = x2d.shape
+        pad = (-n) % total_dev
+        npad = n + pad
+        if pad:
+            x2d = jnp.concatenate(
+                [x2d, jnp.zeros((pad, h), x2d.dtype)], axis=0)
+        valid = jnp.arange(npad) < n
+        t_local = npad // total_dev
+        spec = MoEFFNSpec(
+            statics=statics_for(t_local), scheduler=scheduler,
+            top_k=top_k_eff, activation=act, group_axes=group_axes,
+            kernel_impl=impl)
+
+        def inner(w_router, experts, x_loc, st_loc, valid_loc):
+            experts_loc = jax.tree_util.tree_map(lambda w: w[0, 0], experts)
+            st = jax.tree_util.tree_map(lambda s: s[0], st_loc) \
+                if st_loc is not None else None
+            r = top_k_gating(x_loc, w_router, cfg.top_k, valid=valid_loc)
+            r = dec.expand_router_etp(r, etp)
+            out, metrics, new_st = moe_ffn(
+                spec, x_loc, w_router, experts_loc, state=st, router_out=r)
+            metrics = jax.tree_util.tree_map(
+                lambda v: jax.lax.pmean(v.astype(jnp.float32), all_axes),
+                metrics)
+            new_st = jax.tree_util.tree_map(lambda s: s[None], new_st)
+            return out, metrics, new_st
+
+        tok_spec = P(("pod",) + group_axes if mi.has_pod else group_axes)
+        pod_spec = P("pod") if mi.has_pod else P()
+        out, metrics, new_state = shard_map(
+            inner, mesh=mi.mesh,
+            in_specs=(P(), P("data", "model"), tok_spec, pod_spec, tok_spec),
+            out_specs=(tok_spec, P(), pod_spec),
+            check_rep=False,
+        )(p_moe["router"], p_moe["experts"], x2d, state, valid)
+        return out[:n], metrics, new_state
+
+    return moe_apply
+
+
+# --------------------------------------------------------------------------
+# layout hooks: canonical master <-> working placement layout
+# --------------------------------------------------------------------------
+
+
+def _build_hooks(cfg: ArchConfig, mi: sh.MeshInfo,
+                 placement: Optional[Placement], dtype) -> LayoutHooks:
+    if placement is None:
+        return LayoutHooks.cast_only(dtype)
+    table = jnp.asarray(placement.table, jnp.int32)   # [D, M, S]
+    work_spec = mi.named(P("data", "model", None, None, None))
+
+    def to_working(master):
+        def leaf(path, x):
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+            ps = sh._path_str(path)
+            if "experts" in ps:
+                # canonical [E_virt, H, F] (maybe scanned [R, E, H, F])
+                if x.ndim == 4:   # scanned
+                    w = x[:, table]        # [R, D, M, S, H, F]
+                    w = w.astype(dtype)
+                    return jax.lax.with_sharding_constraint(
+                        w, mi.named(P(None, "data", "model", None, None, None)))
+                w = x[table].astype(dtype)
+                return jax.lax.with_sharding_constraint(w, work_spec)
+            return x.astype(dtype)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(master)
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaf(p, x) for p, x in flat])
+
+    return LayoutHooks(to_working=to_working)
+
+
+# --------------------------------------------------------------------------
+# runtime builder
+# --------------------------------------------------------------------------
+
+
+def build_runtime(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    dtype=jnp.bfloat16,
+    placement_strategy: str = "latin",
+    mode: str = "microep",
+    capacity_factor: float = 2.0,
+    impl: Optional[str] = "ref",
+    remat: bool = True,
+    locality: bool = True,
+    seed: int = 0,
+    loads: Optional[np.ndarray] = None,
+    unroll: bool = False,
+    sweeps: int = 6,
+    sequencing: str = "proportional",
+    layout: str = "scan",
+    seq_parallel: bool = False,
+) -> DistRuntime:
+    mi = sh.MeshInfo(mesh)
+    placement = sched_st = moe_apply = None
+    if cfg.moe:
+        placement = make_placement(cfg, mi, placement_strategy, seed, loads)
+        sched_st = ScheduleStatics.from_placement(placement)
+        moe_apply = _build_moe_apply(cfg, mi, sched_st, mode,
+                                     capacity_factor, impl,
+                                     locality=locality, sweeps=sweeps,
+                                     sequencing=sequencing)
+    rt = dec.Runtime(moe_apply=moe_apply,
+                     shard=sh.act_constraint(mi, seq_parallel=seq_parallel),
+                     impl=impl, remat=remat, unroll=unroll)
+    hooks = _build_hooks(cfg, mi, placement, dtype)
+    return DistRuntime(cfg=cfg, mesh=mesh, mi=mi, rt=rt, hooks=hooks,
+                       placement=placement, sched_statics=sched_st,
+                       capacity_factor=capacity_factor, mode=mode,
+                       dtype=dtype, layout=layout)
+
+
+# --------------------------------------------------------------------------
+# step functions + abstract inputs per input shape
+# --------------------------------------------------------------------------
+
+
+def make_train_fn(dr: DistRuntime, n_micro: int = 8,
+                  opt_cfg: AdamWConfig = AdamWConfig(),
+                  grad_rs: bool = False):
+    """jit-able train_step(TrainState, batch) on the mesh.
+
+    ``grad_rs``: constrain master grads to the ZeRO-1 master layout so the
+    DP reduction lowers as reduce-scatter (§Perf lever)."""
+    constraint = None
+    if grad_rs:
+        mi, cfg = dr.mi, dr.cfg
+
+        def constraint(grads):
+            specs = sh.master_pspecs(grads, mi, cfg)
+            return jax.tree_util.tree_map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, mi.named(sp)), grads, specs)
+
+    step = make_train_step(dr.cfg, dr.rt, opt_cfg, dr.hooks,
+                           n_micro=n_micro,
+                           master_grad_constraint=constraint)
+    return step
+
+
+def make_serve_fn(dr: DistRuntime):
+    """serve_step(params, state, batch) -> (next_tokens, new_state)."""
+    cfg, rt = dr.cfg, dr.rt
+
+    def serve_step(params, state, batch):
+        logits, new_state = dec.decode_step(params, cfg, state, batch, rt)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, new_state
+
+    return serve_step
+
+
+def make_forward_fn(dr: DistRuntime, last_only: bool = True):
+    """prefill_step(params, batch) -> logits.  Serving prefill needs only
+    the final position's next-token distribution; the full-logit variant
+    (last_only=False) exists for evaluation jobs."""
+    cfg, rt = dr.cfg, dr.rt
+
+    def prefill_step(params, batch):
+        logits, _, _ = dec.forward(params, cfg, batch, rt,
+                                   last_only=last_only)
+        return logits
+
+    return prefill_step
+
+
+def input_specs(dr: DistRuntime, shape: InputShape, with_labels: bool = True):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every model input of one (arch × input-shape) pair."""
+    cfg, mi = dr.cfg, dr.mi
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shape_, dtype, spec):
+        return jax.ShapeDtypeStruct(shape_, dtype, sharding=mi.named(spec))
+
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        bspec = sh.batch_pspecs({"x": jax.ShapeDtypeStruct((b,), i32)},
+                                mi)["x"]
+        row = bspec[0] if len(bspec) else None
+        if cfg.frontend_stub == "vision":
+            batch["embeds"] = sds((b, t, cfg.d_model), dr.dtype,
+                                  P(row, None, None))
+            batch["positions"] = sds((b, t, 3), i32, P(row, None, None))
+        else:
+            batch["tokens"] = sds((b, t), i32, P(row, None))
+        if with_labels and shape.kind == "train":
+            batch["labels"] = sds((b, t), i32, P(row, None))
+        return batch
+
+    # decode: one new token against a seq_len cache
+    batch = {}
+    bspec = sh.batch_pspecs({"x": jax.ShapeDtypeStruct((b,), i32)}, mi)["x"]
+    row = bspec[0] if len(bspec) else None
+    if cfg.frontend_stub == "vision":
+        batch["embeds"] = sds((b, 1, cfg.d_model), dr.dtype, P(row, None, None))
+    else:
+        batch["tokens"] = sds((b, 1), i32, P(row, None))
+    return batch
+
+
+def decode_state_sds(dr: DistRuntime, shape: InputShape):
+    cfg, mi = dr.cfg, dr.mi
+    shapes = jax.eval_shape(
+        functools.partial(dec.init_decode_state, cfg, shape.global_batch,
+                          shape.seq_len, dr.dtype, layout=dr.layout))
+    specs = sh.cache_pspecs(shapes, mi, cfg, shape.global_batch)
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=mi.named(sp)),
+        shapes, specs)

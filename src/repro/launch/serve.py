@@ -1,0 +1,77 @@
+"""Serving driver: batched greedy decoding against a KV/recurrent cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..data.synthetic import make_batch
+from ..models import decoder as dec
+from . import runtime as R
+from .mesh import make_local_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--data-axis", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(args.seed)
+    params = dec.init_params(key, cfg, jnp.float32)
+    rt = dec.Runtime(impl="ref")
+    if args.data_axis > 0:
+        mesh = make_local_mesh(args.data_axis, args.model_axis)
+        dr = R.build_runtime(cfg, mesh, dtype=jnp.float32, impl="ref",
+                             remat=False)
+        params = dr.hooks.to_working(params)
+        rt = dr.rt
+
+    max_seq = args.prompt_len + args.gen
+    prompt = make_batch(key, cfg.vocab, args.batch,
+                        args.prompt_len)["tokens"]
+    state = dec.init_decode_state(cfg, args.batch, max_seq, jnp.float32, rt)
+
+    @jax.jit
+    def step(params, state, tok):
+        logits, state = dec.decode_step(params, cfg, state,
+                                        {"tokens": tok}, rt)
+        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), state
+
+    # prefill token-by-token (cache-correct; a fused prefill is the
+    # prefill_32k dry-run path)
+    t0 = time.perf_counter()
+    tok = prompt[:, :1]
+    for i in range(args.prompt_len):
+        nxt, state = step(params, state, prompt[:, i:i + 1])
+    out = [nxt]
+    for _ in range(args.gen - 1):
+        nxt, state = step(params, state, out[-1][:, None])
+        out.append(nxt)
+    dt = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print("generated:", gen[:, :16])
+    steps = args.prompt_len + args.gen - 1
+    print(f"{steps} decode steps, {dt/steps*1e3:.1f} ms/step "
+          f"(batch {args.batch})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

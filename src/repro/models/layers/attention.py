@@ -1,0 +1,300 @@
+"""Multi-head attention: GQA/MQA, sliding windows, QKV bias, qk-norm,
+soft-capping, RoPE/M-RoPE, tensor-parallel heads, KV caches (dense, ring,
+and sequence-sharded for long-context decode).
+
+Per-device functions; the tensor-parallel axis shards *heads* (q heads and
+kv heads independently — when kv_heads < tp size the kv projection is
+replicated, matching common GQA TP practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .norms import rms_norm, init_rms
+from .rope import apply_mrope, apply_rope
+
+__all__ = ["AttnConfig", "init_attention", "attention", "decode_attention",
+           "KVCache", "init_kv_cache"]
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    window: int = 0              # 0 = global; > 0 = sliding window
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = ()   # non-empty => M-RoPE
+    tp: int = 1                  # tensor-parallel degree over heads
+
+    @property
+    def local_heads(self) -> int:
+        assert self.num_heads % self.tp == 0
+        return self.num_heads // self.tp
+
+    @property
+    def local_kv_heads(self) -> int:
+        # replicate kv heads when they don't divide over tp
+        return (self.num_kv_heads // self.tp
+                if self.num_kv_heads % self.tp == 0 else self.num_kv_heads)
+
+    @property
+    def kv_replicated(self) -> bool:
+        return self.num_kv_heads % self.tp != 0
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
+    """Local (per-tp-rank) parameter shapes."""
+    hq, hkv, hd, dm = cfg.local_heads, cfg.local_kv_heads, cfg.head_dim, cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sq = dm ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (dm, hq * hd)) * sq).astype(dtype),
+        "wk": (jax.random.normal(k2, (dm, hkv * hd)) * sq).astype(dtype),
+        "wv": (jax.random.normal(k3, (dm, hkv * hd)) * sq).astype(dtype),
+        "wo": (jax.random.normal(k4, (hq * hd, dm)) * (hq * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = init_rms(hd, dtype)
+        p["knorm"] = init_rms(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x: jax.Array, positions: jax.Array):
+    b, t, _ = x.shape
+    hq, hkv, hd = cfg.local_heads, cfg.local_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(p["qnorm"], q)
+        k = rms_norm(p["knorm"], k)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: AttnConfig, q, k, v, mask):
+    """q: [B, Hq, Tq, D]; k/v: [B, Hkv, Tk, D]; mask: [B or 1, 1, Tq, Tk]."""
+    b, hq, tq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum(
+        "bghtd,bhsd->bghts",
+        qf.reshape(b, g, hkv, tq, hd),
+        k.astype(jnp.float32),
+    )
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + mask[:, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghts,bhsd->bghtd", w, v.astype(jnp.float32))
+    return out.reshape(b, hq, tq, hd).astype(q.dtype)
+
+
+def _chunked_sdpa(cfg: AttnConfig, q, k, v, cq: int, unroll: bool = False):
+    """Flash-style causal attention: O(T·band) memory instead of O(T²).
+
+    Scans over query chunks of size ``cq``.  For windowed layers each query
+    chunk attends only to a fixed-size KV band (window + cq), so both memory
+    *and* FLOPs are banded; for global layers the band is the full prefix
+    (masked), keeping memory at one [cq, T] score tile.
+    """
+    b, hq, t, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    n_chunks = t // cq
+    band = min(t, ((cfg.window + cq + cq - 1) // cq) * cq) if cfg.window > 0 else t
+    scale = hd ** -0.5
+
+    def one_chunk(ci):
+        q_c = jax.lax.dynamic_slice(q, (0, 0, ci * cq, 0), (b, hq, cq, hd))
+        # kv band start (multiple of cq; clipped at 0 / t - band)
+        if cfg.window > 0:
+            lo = jnp.clip((ci + 1) * cq - band, 0, t - band)
+        else:
+            lo = jnp.zeros((), jnp.int32)
+        k_c = jax.lax.dynamic_slice(k, (0, 0, lo, 0), (b, hkv, band, hd))
+        v_c = jax.lax.dynamic_slice(v, (0, 0, lo, 0), (b, hkv, band, hd))
+        qi = ci * cq + jnp.arange(cq)
+        kj = lo + jnp.arange(band)
+        ok = qi[:, None] >= kj[None, :]
+        if cfg.window > 0:
+            ok &= qi[:, None] - kj[None, :] < cfg.window
+        mask = jnp.where(ok, 0.0, NEG_INF)[None, None]
+        qf = q_c.astype(jnp.float32) * scale
+        scores = jnp.einsum("bghtd,bhsd->bghts",
+                            qf.reshape(b, g, hkv, cq, hd),
+                            k_c.astype(jnp.float32))
+        if cfg.logit_softcap > 0:
+            c = cfg.logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        scores = scores + mask[:, None]
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bghts,bhsd->bghtd", w, v_c.astype(jnp.float32))
+        return out.reshape(b, hq, cq, hd).astype(q.dtype)
+
+    if unroll:
+        # straight-line HLO (roofline extraction: while-loop bodies are
+        # cost-counted once, so lax.map would under-report by n_chunks)
+        out = jnp.stack([one_chunk(jnp.asarray(i)) for i in range(n_chunks)])
+    else:
+        out = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # [N, B, Hq, cq, D]
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, t, hd)
+
+
+def attention(
+    p, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+    tp_axis: Optional[str] = None,
+    chunk_q: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Training/prefill self-attention (causal, optionally windowed).
+
+    Falls back to the dense [T, T] mask path for short sequences; long
+    sequences use the chunked flash-style path (memory O(T·band))."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if t > 2 * chunk_q and t % chunk_q == 0:
+        out = _chunked_sdpa(cfg, q, k, v, chunk_q, unroll=unroll)
+    else:
+        i = jnp.arange(t)
+        causal = i[:, None] >= i[None, :]
+        if cfg.window > 0:
+            causal &= i[:, None] - i[None, :] < cfg.window
+        mask = jnp.where(causal, 0.0, NEG_INF)[None, None]
+        out = _sdpa(cfg, q, k, v, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, -1) @ p["wo"]
+    if tp_axis is not None and cfg.tp > 1:
+        out = jax.lax.psum(out, tp_axis)
+    return out
+
+
+# ------------------------------ decode -----------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, Hkv, S, D]  (S = window for windowed layers)
+    v: jax.Array
+    length: jax.Array   # int32[] tokens already in cache (global position)
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, seq: int,
+                  dtype=jnp.float32, seq_shards: int = 1) -> KVCache:
+    s = cfg.window if cfg.window > 0 else seq
+    s_local = s // seq_shards if (cfg.window == 0 and seq_shards > 1) else s
+    return KVCache(
+        k=jnp.zeros((batch, cfg.local_kv_heads, s_local, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cfg.local_kv_heads, s_local, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(
+    p, cfg: AttnConfig, x: jax.Array, cache: KVCache,
+    tp_axis: Optional[str] = None,
+    seq_axis: Optional[str] = None,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x [B, 1, dm] attends to the cache + itself.
+
+    With ``seq_axis`` set (long-context, global layers) the cache's sequence
+    dim is sharded across that mesh axis: each shard computes partial
+    (max, denom, numer) flash statistics, combined with pmax/psum — the
+    distributed flash-decode described in DESIGN.md §6.
+    """
+    b, one, _ = x.shape
+    pos = cache.length
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    s_local = cache.k.shape[2]
+    if cfg.window > 0:
+        write_at = jnp.mod(pos, s_local)                  # ring buffer
+        in_range = jnp.ones((), bool)
+    elif seq_axis is not None:
+        shard = jax.lax.axis_index(seq_axis)
+        lo = shard * s_local
+        write_at = jnp.clip(pos - lo, 0, s_local - 1)
+        in_range = (pos >= lo) & (pos < lo + s_local)
+    else:
+        write_at = jnp.minimum(pos, s_local - 1)
+        in_range = pos < s_local
+
+    k_upd = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, 0, write_at, 0))
+    v_upd = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, 0, write_at, 0))
+    k_c = jnp.where(in_range, k_upd, cache.k)
+    v_c = jnp.where(in_range, v_upd, cache.v)
+
+    # validity of cache slots
+    idx = jnp.arange(s_local)
+    if cfg.window > 0:
+        valid = (idx[None, :] <
+                 jnp.minimum(pos + 1, s_local))           # ring: all written
+        # ring buffer holds the last `s_local` tokens; all slots < length+1
+        valid = idx[None, :] < jnp.minimum(pos + 1, s_local)
+    elif seq_axis is not None:
+        shard = jax.lax.axis_index(seq_axis)
+        gpos = shard * s_local + idx
+        valid = (gpos <= pos)[None, :]
+    else:
+        valid = (idx <= pos)[None, :]
+
+    hq, hkv, hd = cfg.local_heads, cfg.local_kv_heads, cfg.head_dim
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (hd ** -0.5)             # [B, Hq, 1, D]
+    scores = jnp.einsum(
+        "bghod,bhsd->bghos",
+        qf.reshape(b, g, hkv, 1, hd), k_c.astype(jnp.float32))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+
+    if seq_axis is None:
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bghos,bhsd->bghod", w, v_c.astype(jnp.float32))
+    else:
+        m_loc = jnp.max(scores, axis=-1, keepdims=True)
+        m = jax.lax.pmax(m_loc, seq_axis)
+        e = jnp.exp(scores - m)
+        denom = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), seq_axis)
+        numer = jax.lax.psum(
+            jnp.einsum("bghos,bhsd->bghod", e, v_c.astype(jnp.float32)),
+            seq_axis)
+        out = numer / jnp.maximum(denom, 1e-30)
+
+    out = out.reshape(b, hq, 1, hd).astype(x.dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["wo"]
+    if tp_axis is not None and cfg.tp > 1:
+        out = jax.lax.psum(out, tp_axis)
+    return out, KVCache(k=k_c, v=v_c, length=pos + 1)

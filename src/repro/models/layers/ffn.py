@@ -1,0 +1,45 @@
+"""Dense feed-forward layers (gated and plain), tensor-parallel aware.
+
+TP convention (Megatron): up/gate projections column-split over the tp axis,
+down projection row-split; one psum after the down projection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_ffn", "ffn"]
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, tp: int = 1,
+             dtype=jnp.float32):
+    """kind: 'geglu' | 'swiglu' | 'gelu_mlp'.  Local shapes: d_ff / tp."""
+    f_local = d_ff // tp
+    s1 = d_model ** -0.5
+    s2 = d_ff ** -0.5
+    ks = jax.random.split(key, 3)
+    p = {"w_down": (jax.random.normal(ks[2], (f_local, d_model)) * s2).astype(dtype)}
+    if kind in ("geglu", "swiglu"):
+        p["w_gate"] = (jax.random.normal(ks[0], (d_model, f_local)) * s1).astype(dtype)
+        p["w_up"] = (jax.random.normal(ks[1], (d_model, f_local)) * s1).astype(dtype)
+    else:
+        p["w_up"] = (jax.random.normal(ks[1], (d_model, f_local)) * s1).astype(dtype)
+    return p
+
+
+def ffn(p, x: jax.Array, kind: str, tp_axis: Optional[str] = None,
+        tp: int = 1) -> jax.Array:
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "gelu_mlp":
+        h = jax.nn.gelu(x @ p["w_up"])
+    else:
+        raise ValueError(kind)
+    out = h @ p["w_down"]
+    if tp_axis is not None and tp > 1:
+        out = jax.lax.psum(out, tp_axis)
+    return out

@@ -1,0 +1,95 @@
+"""RecurrentGemma / Griffin recurrent block [arXiv:2402.19427].
+
+Recurrent block = (linear in) -> temporal conv1d (width 4) -> RG-LRU ->
+gated (GeLU branch) -> linear out.
+
+RG-LRU:  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+         a_t = a_param^(c * r_t)        (log-space: c * r_t * log a)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A diagonal linear recurrence — training/prefill use an associative scan,
+decode is O(1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_rglru_block", "rglru_block", "RGLRUState"]
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array      # [B, W] recurrence state
+    conv: jax.Array   # [B, K-1, W] conv tail
+
+
+def init_rglru_block(key, d_model: int, width: int, conv_k: int = 4,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    sw = width ** -0.5
+    return {
+        "w_in_x": (jax.random.normal(ks[0], (d_model, width)) * s).astype(dtype),
+        "w_in_g": (jax.random.normal(ks[1], (d_model, width)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_k, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "wa": (jax.random.normal(ks[3], (width, width)) * sw).astype(dtype),
+        "wx": (jax.random.normal(ks[4], (width, width)) * sw).astype(dtype),
+        # a in (0,1): log(a) = -softplus? Griffin: a = sigmoid(Lambda)
+        "lam": (jax.random.normal(ks[5], (width,)) * 0.5 + 4.0).astype(dtype),
+        "w_out": (jax.random.normal(ks[6], (width, d_model)) * sw).astype(dtype),
+    }
+
+
+def _rglru_scan(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                h0: Optional[jax.Array]):
+    """x/r/i: [B, T, W]; returns (h_seq [B, T, W], h_last)."""
+    log_a0 = -_C * jax.nn.softplus(lam.astype(jnp.float32))   # log a (< 0)
+    log_a = r.astype(jnp.float32) * log_a0                    # [B, T, W]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    u = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    if h0 is not None:
+        # absorb the initial state as a step-0 input with decay 1
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0.astype(jnp.float32)[:, None], u], axis=1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(
+    p, x: jax.Array, state: Optional[RGLRUState] = None, conv_k: int = 4,
+):
+    """x: [B, T, dm] -> ([B, T, dm], new state)."""
+    b, t, _ = x.shape
+    gx = jax.nn.gelu(x @ p["w_in_g"])
+    cx = x @ p["w_in_x"]                                      # [B, T, W]
+    w = cx.shape[-1]
+
+    tail = (state.conv if state is not None
+            else jnp.zeros((b, conv_k - 1, w), cx.dtype))
+    padded = jnp.concatenate([tail, cx], axis=1)
+    conv = sum(
+        padded[:, j:j + t] * p["conv_w"][j][None, None]
+        for j in range(conv_k)
+    ) + p["conv_b"]
+    new_tail = padded[:, -(conv_k - 1):] if conv_k > 1 else tail
+
+    r = jax.nn.sigmoid(conv @ p["wa"])
+    i = jax.nn.sigmoid(conv @ p["wx"])
+    h, h_last = _rglru_scan(conv, r, i, p["lam"],
+                            state.h if state is not None else None)
+    out = (h * gx) @ p["w_out"]
+    return out, RGLRUState(h=h_last.astype(cx.dtype), conv=new_tail)

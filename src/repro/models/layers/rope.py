@@ -1,0 +1,61 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head dim into three sections rotated by
+(temporal, height, width) position components.  For pure-text tokens all
+three components equal the sequence index, which reduces M-RoPE to RoPE —
+the property the tests assert.  Vision patch embeddings (stubbed frontend)
+carry their own 3-D position ids.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_angles", "apply_rope", "apply_mrope"]
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """positions: [..., T] -> (sin, cos) of shape [..., T, head_dim//2]."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def _rotate(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [..., T, D]; sin/cos: [..., T, D//2] (broadcastable)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: [B, H, T, D]; positions: [B, T]."""
+    sin, cos = rope_angles(positions, x.shape[-1], theta)
+    return _rotate(x, sin[:, None], cos[:, None])
+
+
+def apply_mrope(
+    x: jax.Array,              # [B, H, T, D]
+    positions: jax.Array,      # [B, T, 3]  (t, h, w) components
+    sections: Sequence[int],   # head_dim//2 split, e.g. (16, 24, 24)
+    theta: float = 1000000.0,
+):
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section s of the frequency axis uses position component s
+    comp = jnp.concatenate([
+        jnp.full((sec,), i, jnp.int32) for i, sec in enumerate(sections)
+    ])
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(comp[None, None, :], positions.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # [B, T, half]
+    ang = pos * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    return _rotate(x, sin[:, None], cos[:, None])

@@ -1,0 +1,138 @@
+"""RWKV-6 (Finch) block [arXiv:2404.05892] — attention-free token mixing with
+data-dependent decay, plus the RWKV channel mixer.
+
+Time mixing:
+  token-shift interpolation (data-dependent via LoRA on the shift mix),
+  r/k/v/g projections, per-channel decay w_t = exp(-exp(w_proj(x_t))),
+  the WKV recurrence (kernels/wkv6_chunk.py — chunked, MXU-friendly),
+  group-norm over heads, gated output.
+
+Decode carries (state [B, H, D, D], last hidden [B, dm]) — O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels import ops, ref
+from .norms import init_ln, layer_norm
+
+__all__ = ["init_rwkv6", "rwkv6_time_mix", "rwkv6_decode",
+           "init_rwkv6_channel", "rwkv6_channel_mix", "RWKVState"]
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array       # [B, H, D, D]
+    shift_t: jax.Array   # [B, dm] last hidden (time-mix shift)
+    shift_c: jax.Array   # [B, dm] last hidden (channel-mix shift)
+
+
+def init_rwkv6(key, d_model: int, num_heads: int, lora_r: int = 64,
+               dtype=jnp.float32):
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 10)
+    s = d_model ** -0.5
+    return {
+        "mix_base": jnp.zeros((5, d_model), dtype),  # r,k,v,w,g shift mixes
+        "mix_lora_a": (jax.random.normal(ks[0], (d_model, 32)) * s).astype(dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (32, 5 * d_model)) * 0.01).astype(dtype),
+        "wr": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (d_model, d_model)) * s).astype(dtype),
+        "decay_base": jnp.full((d_model,), -5.0, dtype),
+        "decay_lora_a": (jax.random.normal(ks[6], (d_model, lora_r)) * s).astype(dtype),
+        "decay_lora_b": (jax.random.normal(ks[7], (lora_r, d_model)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[8], (num_heads, hd)) * 0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[9], (d_model, d_model)) * s).astype(dtype),
+        "gn": init_ln(d_model, dtype),
+    }
+
+
+def _mix_streams(p, x, x_prev):
+    """x, x_prev: [B, T, dm] -> five mixed streams [5, B, T, dm]."""
+    delta = x_prev - x
+    lora = jnp.tanh(x @ p["mix_lora_a"]) @ p["mix_lora_b"]      # [B,T,5*dm]
+    lora = jnp.moveaxis(lora.reshape(x.shape[:-1] + (5, x.shape[-1])), -2, 0)
+    mix = p["mix_base"][:, None, None, :] + lora                 # [5,B,T,dm]
+    return x[None] + delta[None] * mix
+
+
+def rwkv6_time_mix(
+    p, x: jax.Array, num_heads: int,
+    state: Optional[RWKVState] = None,
+    impl: Optional[str] = None,
+):
+    """x: [B, T, dm].  Returns ([B, T, dm], new wkv state, new shift)."""
+    b, t, dm = x.shape
+    hd = dm // num_heads
+    x_prev = jnp.concatenate(
+        [state.shift_t[:, None] if state is not None
+         else jnp.zeros((b, 1, dm), x.dtype), x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _mix_streams(p, x, x_prev)
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = -jnp.exp(p["decay_base"] +
+                  jnp.tanh(xw @ p["decay_lora_a"]) @ p["decay_lora_b"])
+
+    def split(a):  # [B, T, dm] -> [B*H, T, D]
+        return a.reshape(b, t, num_heads, hd).transpose(0, 2, 1, 3) \
+                .reshape(b * num_heads, t, hd)
+
+    u = jnp.broadcast_to(p["u"][None], (b, num_heads, hd)).reshape(-1, hd)
+    if state is None:
+        o = ops.wkv6(split(r), split(k), split(v), split(lw), u, impl=impl)
+        new_wkv = None  # training path does not carry state between calls
+    else:
+        o, new_wkv = _wkv_with_state(
+            split(r), split(k), split(v), split(lw), u,
+            state.wkv.reshape(b * num_heads, hd, hd))
+        new_wkv = new_wkv.reshape(b, num_heads, hd, hd)
+    o = o.reshape(b, num_heads, t, hd).transpose(0, 2, 1, 3)   # [B, T, H, D]
+    # GroupNorm with groups = heads (RWKV-6): normalize per head, affine
+    # parameters over the full channel dim.
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    o = ((of - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, t, dm)
+    o = (o * p["gn"]["scale"].astype(jnp.float32)
+         + p["gn"]["bias"].astype(jnp.float32)).astype(x.dtype)
+    out = (o * g) @ p["wo"]
+    return out, new_wkv, x[:, -1]
+
+
+def _wkv_with_state(r, k, v, lw, u, s0):
+    """Sequential oracle with explicit initial state (decode path)."""
+    def one(r_, k_, v_, lw_, u_, s_):
+        return ref.wkv6_chunk_ref(r_, k_, v_, jnp.exp(lw_), u_, s_)
+    o, s = jax.vmap(one)(r, k, v, lw, u, s0)
+    return o, s
+
+
+def init_rwkv6_channel(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    return {
+        "mix_k": jnp.zeros((d_model,), dtype),
+        "mix_r": jnp.zeros((d_model,), dtype),
+        "wk": (jax.random.normal(ks[0], (d_model, d_ff)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[1], (d_ff, d_model)) * d_ff ** -0.5).astype(dtype),
+        "wr": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+    }
+
+
+def rwkv6_channel_mix(p, x: jax.Array, state_prev: Optional[jax.Array] = None):
+    b, t, dm = x.shape
+    x_prev = jnp.concatenate(
+        [state_prev[:, None] if state_prev is not None
+         else jnp.zeros((b, 1, dm), x.dtype), x[:, :-1]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * jnp.tanh(p["mix_k"])
+    xr = x + delta * jnp.tanh(p["mix_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, -1]

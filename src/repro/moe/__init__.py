@@ -1,0 +1,38 @@
+"""Distributed MoE stack: router, dispatch (EP/MicroEP), experts, sync."""
+from .router import top_k_gating, zipf_gating, RouterOut
+from .experts import (
+    ExpertParams,
+    init_canonical_experts,
+    init_expert_slots,
+    expert_ffn_flat,
+)
+from .dispatch import (
+    DispatchStatics,
+    DispatchPlan,
+    build_statics,
+    make_plan,
+    combine,
+    flat_buffer_size,
+)
+from . import dispatch  # keep the *module* visible as repro.moe.dispatch
+from .layer import moe_ffn, MoEFFNSpec, MoEMetrics
+from .sync import (
+    SyncPlan,
+    build_sync_plan,
+    working_grads_to_canonical,
+    canonical_to_working,
+    sync_traffic_bytes,
+)
+from .baselines import baseline_max_load, SYSTEMS
+
+__all__ = [
+    "top_k_gating", "zipf_gating", "RouterOut",
+    "ExpertParams", "init_canonical_experts", "init_expert_slots",
+    "expert_ffn_flat",
+    "DispatchStatics", "DispatchPlan", "build_statics", "make_plan",
+    "combine", "flat_buffer_size",
+    "moe_ffn", "MoEFFNSpec", "MoEMetrics",
+    "SyncPlan", "build_sync_plan", "working_grads_to_canonical",
+    "canonical_to_working", "sync_traffic_bytes",
+    "baseline_max_load", "SYSTEMS",
+]

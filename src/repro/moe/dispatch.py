@@ -1,0 +1,274 @@
+"""Capacity-buffered token dispatch/combine for (Micro)EP — paper §4-5.
+
+All functions here run *per device inside shard_map*.  The flow tensor
+``F[E, G, R]`` produced by the scheduler is identical on every device
+(deterministic distributed scheduling, §5.3), so sender-side offsets and
+receiver-side layouts are derived independently yet consistently, with pure
+cumsums — no coordination round-trip beyond the tiny counts all-gather.
+
+Data layout (static shapes; the TPU/XLA adaptation of the paper's ragged
+NCCL all-to-all — see DESIGN.md §2):
+
+  send buffer  [G * cap, H]    chunk d = rows destined to device d (remote)
+  recv buffer  [G * cap, H]    chunk g = rows arriving from device g (a2a)
+  flat buffer  [N_flat,  H]    rows sorted by local expert slot, bm-aligned
+                               group starts (grouped-FFN layout)
+
+**Locality fast path** (paper §5.2 locality-aware routing): rows whose
+scheduled replica lives on their own device never enter the all-to-all —
+they are scattered straight into the flat buffer.  This is both the
+bandwidth saving the paper measures (Fig. 11) and what keeps the static
+per-chunk capacity small: only *remote* flow crosses the network, and the
+LP + Algorithm 1 keep remote flow spread across destinations.
+
+Within the chunk (src g → dst d), rows are segment-ordered by the
+*destination's local slot index*; segment sizes are entries of F, so both
+sides compute identical layouts.  Within a segment (one expert), the sender
+orders its expert-e tokens by local rank and splits them across replicas in
+the canonical order «local replica first, then ascending replica index»
+(Algorithm 1's sequencing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.scheduler import ScheduleStatics
+
+__all__ = ["DispatchStatics", "DispatchPlan", "build_statics", "make_plan",
+           "dispatch", "combine", "flat_buffer_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchStatics:
+    """Trace-time constants derived from placement (host numpy)."""
+
+    sched: ScheduleStatics
+    # [G, S]: expert hosted at (device, slot) and its replica row in dev[E,R]
+    exp_of_dev_slot: np.ndarray
+    rep_of_dev_slot: np.ndarray
+    tokens_per_device: int
+    top_k: int
+    cap: int          # rows per (src, dst) remote chunk
+    bm: int           # row-tile alignment of the flat buffer
+    num_slots: int
+
+    @property
+    def group_size(self) -> int:
+        return self.sched.num_devices
+
+    @property
+    def num_experts(self) -> int:
+        return self.sched.num_experts
+
+    @property
+    def c_in(self) -> int:
+        return self.tokens_per_device * self.top_k
+
+
+def build_statics(
+    sched: ScheduleStatics, tokens_per_device: int, top_k: int,
+    capacity_factor: float = 2.0, bm: int = 128,
+) -> DispatchStatics:
+    p = sched.placement
+    g, s = p.num_devices, p.slots
+    flat = p.flat()
+    exp_of = flat.astype(np.int32)
+    rep_of = np.zeros((g, s), np.int32)
+    for gi in range(g):
+        for si in range(s):
+            e = int(flat[gi, si])
+            rep_of[gi, si] = int(np.nonzero(sched.dev[e] == gi)[0][0])
+    c_in = tokens_per_device * top_k
+    cap = int(np.ceil(c_in * capacity_factor / max(g, 1)))
+    cap = max(cap, 8)
+    return DispatchStatics(
+        sched=sched, exp_of_dev_slot=exp_of, rep_of_dev_slot=rep_of,
+        tokens_per_device=tokens_per_device, top_k=top_k,
+        cap=cap, bm=bm, num_slots=s,
+    )
+
+
+def flat_buffer_size(st: DispatchStatics) -> int:
+    """Rows of the slot-sorted flat buffer: remote recv rows + own local rows
+    + per-group bm alignment slack, rounded up to a bm multiple."""
+    n = st.group_size * st.cap + st.c_in + st.num_slots * st.bm
+    return int(np.ceil(n / st.bm) * st.bm)
+
+
+class DispatchPlan(NamedTuple):
+    """Per-device gather/scatter indices for one micro-batch."""
+
+    send_pos: jax.Array     # int32[C_in] remote rows: send-buffer pos (trash = G*cap)
+    local_pos: jax.Array    # int32[C_in] local rows: flat-buffer pos (trash = N_flat)
+    flat_pos: jax.Array     # int32[G*cap] recv row -> flat row (trash = N_flat)
+    group_start: jax.Array  # int32[S] bm-aligned starts in the flat buffer
+    group_end: jax.Array    # int32[S] start + received rows per slot
+    overflow: jax.Array     # int32[] token-replicas dropped to residual
+    valid: jax.Array        # bool[C_in] row actually dispatched
+    is_local: jax.Array     # bool[C_in] row took the local fast path
+
+
+def _expert_ranks(ex: jax.Array, num_experts: int):
+    """Per-row rank among rows of the same expert."""
+    c_in = ex.shape[0]
+    order = jnp.argsort(ex, stable=True)
+    sorted_ex = ex[order]
+    counts = jnp.zeros(num_experts + 1, jnp.int32).at[ex].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(c_in, dtype=jnp.int32) - starts[sorted_ex]
+    rank = jnp.zeros(c_in, jnp.int32).at[order].set(rank_sorted)
+    return rank
+
+
+def make_plan(
+    st: DispatchStatics,
+    ex: jax.Array,            # int32[C_in] expert id per local row (E = pad)
+    flow: jax.Array,          # int32[E, G, R] the schedule's flow tensor
+    my_index: jax.Array,      # int32[] flat device index in the group
+) -> DispatchPlan:
+    e_n, g_n, r_n = flow.shape
+    s_n, cap, bm = st.num_slots, st.cap, st.bm
+    dev = jnp.asarray(st.sched.dev, jnp.int32)          # [E, R]
+    slot = jnp.asarray(st.sched.slot, jnp.int32)        # [E, R]
+    exp_of = jnp.asarray(st.exp_of_dev_slot, jnp.int32)  # [G, S]
+    rep_of = jnp.asarray(st.rep_of_dev_slot, jnp.int32)  # [G, S]
+    n_flat = flat_buffer_size(st)
+
+    my_flow = flow[:, my_index, :]                       # [E, R] my sends
+    valid_rep = dev >= 0
+
+    # ---- sender: replica choice per local row --------------------------
+    # canonical per-(expert, src) replica order: local replica first, then
+    # ascending replica index (Algorithm 1's sequencing).
+    is_local_rep = (dev == my_index) & valid_rep
+    order_key = jnp.where(is_local_rep, -1, jnp.arange(r_n)[None, :])
+    order_key = jnp.where(valid_rep, order_key, r_n + 1)
+    rep_order = jnp.argsort(order_key, axis=1)           # [E, R]
+    flow_sorted = jnp.take_along_axis(my_flow, rep_order, axis=1)
+    cum_sorted = jnp.cumsum(flow_sorted, axis=1)         # [E, R]
+
+    rank = _expert_ranks(ex, e_n)
+    cum_row = cum_sorted[jnp.minimum(ex, e_n - 1)]        # [C_in, R]
+    pos_in_order = jnp.sum(rank[:, None] >= cum_row, axis=1)
+    pos_clamped = jnp.minimum(pos_in_order, r_n - 1)
+    rep_row = jnp.take_along_axis(
+        rep_order[jnp.minimum(ex, e_n - 1)], pos_clamped[:, None], axis=1)[:, 0]
+    routed = (pos_in_order < r_n) & (ex < e_n)
+    seg_off_row = rank - jnp.where(
+        pos_clamped > 0,
+        jnp.take_along_axis(cum_row, (pos_clamped - 1)[:, None], axis=1)[:, 0],
+        0,
+    )
+    dst_dev = dev[jnp.minimum(ex, e_n - 1), rep_row]      # [C_in]
+    dst_slot = slot[jnp.minimum(ex, e_n - 1), rep_row]
+    row_local = routed & (dst_dev == my_index)
+
+    # ---- chunk layouts (sender & receiver compute these identically) ----
+    # send_seg[d, s] = rows I send into segment (dst d, slot s)
+    send_seg = flow[exp_of, my_index, rep_of]             # [G, S]
+    send_seg_start = jnp.cumsum(send_seg, axis=1) - send_seg
+    chunk_off = send_seg_start[dst_dev, dst_slot] + seg_off_row
+    overflowed = ~row_local & (chunk_off >= cap)
+    remote_ok = routed & ~row_local & ~overflowed
+    send_pos = jnp.where(remote_ok, dst_dev * cap + chunk_off, g_n * cap)
+
+    # ---- receiver layout: recv/local rows -> flat slot-sorted buffer ----
+    # recv_seg[g, s] = rows from src g into my slot s
+    #                = flow[exp_of[me, s], g, rep_of[me, s]]
+    recv_seg = flow[exp_of[my_index], :, rep_of[my_index]].T  # [G, S]
+    recv_seg_start = jnp.cumsum(recv_seg, axis=1) - recv_seg  # within chunk
+    slot_counts = recv_seg.sum(axis=0)                        # [S]
+    group_sizes_pad = ((slot_counts + bm - 1) // bm) * bm
+    group_start = jnp.cumsum(group_sizes_pad) - group_sizes_pad
+    group_end = group_start + slot_counts
+    inter_src = jnp.cumsum(recv_seg, axis=0) - recv_seg       # [G, S]
+
+    # remote recv rows: slot = #segments of chunk g whose end <= c
+    c_ids = jnp.arange(cap, dtype=jnp.int32)[None, :]         # [1, cap]
+    seg_edges = recv_seg_start + recv_seg                     # [G, S] ends
+    slot_of = jnp.sum(c_ids[:, :, None] >= seg_edges[:, None, :], axis=-1)
+    slot_of = jnp.minimum(slot_of, s_n - 1)                   # [G, cap]
+    src_ids = jnp.arange(g_n, dtype=jnp.int32)[:, None]
+    in_use = (c_ids < recv_seg.sum(axis=1)[:, None]) & (src_ids != my_index)
+    off_in_seg = c_ids - jnp.take_along_axis(recv_seg_start, slot_of, axis=1)
+    flat_row = (
+        group_start[slot_of]
+        + jnp.take_along_axis(inter_src, slot_of, axis=1)
+        + off_in_seg
+    )
+    flat_pos = jnp.where(in_use & (flat_row < n_flat), flat_row, n_flat)
+    flat_pos = flat_pos.reshape(-1)
+
+    # local fast-path rows: same formula with src = me, c = chunk_off
+    loc_flat = (
+        group_start[dst_slot]
+        + inter_src[my_index, dst_slot]
+        + seg_off_row
+    )
+    loc_ok = row_local & (loc_flat < n_flat)
+    local_pos = jnp.where(loc_ok, loc_flat, n_flat)
+
+    overflow = jnp.sum(overflowed & routed) + jnp.sum(row_local & ~loc_ok)
+    return DispatchPlan(
+        send_pos=send_pos.astype(jnp.int32),
+        local_pos=local_pos.astype(jnp.int32),
+        flat_pos=flat_pos.astype(jnp.int32),
+        group_start=group_start.astype(jnp.int32),
+        group_end=group_end.astype(jnp.int32),
+        overflow=overflow.astype(jnp.int32),
+        valid=(remote_ok | loc_ok),
+        is_local=loc_ok,
+    )
+
+
+def dispatch(
+    st: DispatchStatics,
+    plan: DispatchPlan,
+    rows: jax.Array,                 # [C_in, H] token-replica hidden states
+    group_axes: Sequence[str],
+) -> jax.Array:
+    """Send rows to their replicas; returns the flat slot-sorted buffer."""
+    g_n, cap, h = st.group_size, st.cap, rows.shape[-1]
+    n_flat = flat_buffer_size(st)
+    flat = jnp.zeros((n_flat + 1, h), rows.dtype)
+    # local fast path: no collective
+    flat = flat.at[plan.local_pos].set(jnp.where(plan.is_local[:, None], rows, 0))
+    if group_axes:
+        send = jnp.zeros((g_n * cap + 1, h), rows.dtype)
+        send = send.at[plan.send_pos].set(rows)[: g_n * cap]
+        recv = jax.lax.all_to_all(
+            send.reshape(g_n, cap, h), tuple(group_axes),
+            split_axis=0, concat_axis=0, tiled=False,
+        ).reshape(g_n * cap, h)
+        flat = flat.at[plan.flat_pos].add(recv)
+    return flat[:n_flat]
+
+
+def combine(
+    st: DispatchStatics,
+    plan: DispatchPlan,
+    flat_out: jax.Array,             # [N_flat, H] expert outputs
+    group_axes: Sequence[str],
+) -> jax.Array:
+    """Inverse of dispatch: returns per-local-row outputs [C_in, H]."""
+    g_n, cap, h = st.group_size, st.cap, flat_out.shape[-1]
+    pad = jnp.zeros((1, h), flat_out.dtype)
+    flat_padded = jnp.concatenate([flat_out, pad])
+    out_local = flat_padded[plan.local_pos]                   # [C_in, H]
+    if group_axes:
+        recv = flat_padded[plan.flat_pos]                     # [G*cap, H]
+        send = jax.lax.all_to_all(
+            recv.reshape(g_n, cap, h), tuple(group_axes),
+            split_axis=0, concat_axis=0, tiled=False,
+        ).reshape(g_n * cap, h)
+        send = jnp.concatenate([send, pad])
+        out_remote = send[plan.send_pos]
+    else:
+        out_remote = jnp.zeros_like(out_local)
+    out = jnp.where(plan.is_local[:, None], out_local, out_remote)
+    return jnp.where(plan.valid[:, None], out, 0)

@@ -1,0 +1,110 @@
+"""The MoE FFN layer with MicroEP scheduling — the paper's technique as a
+first-class module.
+
+``moe_ffn`` is a *per-device* function (call it inside shard_map; or with
+``group_axes=()`` on a single device — the degenerate G=1 group used by CPU
+smoke tests).  Steps (paper §4 "Runtime"):
+
+  gate -> counts all-gather -> schedule (LP solve + rounding + Alg.1 routing)
+       -> dispatch all-to-all -> grouped expert FFN -> combine all-to-all
+       -> weighted top-K merge
+
+The scheduler's solver state (warm start) threads through micro-batches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.scheduler import MicroEPScheduler, ScheduleStatics
+from ..core.solver_jax import SolverState
+from . import dispatch as D
+from .experts import ExpertParams, expert_ffn_flat
+from .router import RouterOut, top_k_gating
+
+__all__ = ["MoEMetrics", "moe_ffn", "MoEFFNSpec"]
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array
+    z_loss: jax.Array
+    max_load: jax.Array      # scheduled max device load (tokens)
+    balance: jax.Array       # max / mean device load
+    overflow: jax.Array      # rows dropped to residual by capacity clipping
+
+
+class MoEFFNSpec(NamedTuple):
+    """Static configuration bundle for one MoE layer."""
+
+    statics: D.DispatchStatics
+    scheduler: MicroEPScheduler
+    top_k: int
+    activation: str
+    group_axes: tuple
+    tp_axis: Optional[str] = None   # intra-expert tensor axis (F sharded)
+    kernel_impl: Optional[str] = None
+
+
+def _gather_counts(cnt: jax.Array, group_axes: Sequence[str]) -> jax.Array:
+    """int32[E] local counts -> int32[E, G] per-source counts."""
+    if not group_axes:
+        return cnt[:, None]
+    g = jax.lax.all_gather(cnt, tuple(group_axes), tiled=False)  # [G, E]
+    return g.T
+
+
+def moe_ffn(
+    spec: MoEFFNSpec,
+    x: jax.Array,                  # [T, H] local tokens
+    w_router: jax.Array,           # [H, E] (replicated)
+    experts: ExpertParams,         # local slots [S, H, F_local]
+    state: Optional[SolverState] = None,
+    router_out: Optional[RouterOut] = None,  # override (synthetic benches)
+    valid: jax.Array | None = None,
+):
+    t, h = x.shape
+    st = spec.statics
+    k = spec.top_k
+
+    r = router_out if router_out is not None else top_k_gating(
+        x, w_router, k, valid=valid
+    )
+
+    # token-replica rows: [T*K]
+    ex = r.expert_ids.reshape(-1)
+    rows = jnp.repeat(x, k, axis=0)
+
+    cnt = jnp.zeros(st.num_experts + 1, jnp.int32).at[ex].add(1)[: st.num_experts]
+    input_eg = _gather_counts(cnt, spec.group_axes)          # [E, G]
+
+    sched = spec.scheduler(input_eg, state)
+    my_index = (
+        jax.lax.axis_index(spec.group_axes).astype(jnp.int32)
+        if spec.group_axes else jnp.zeros((), jnp.int32)
+    )
+    plan = D.make_plan(st, ex, sched.flow, my_index)
+
+    flat = D.dispatch(st, plan, rows, spec.group_axes)
+
+    out_flat = expert_ffn_flat(
+        flat, plan.group_start, plan.group_end, experts,
+        spec.activation, impl=spec.kernel_impl,
+    )
+    if spec.tp_axis is not None:
+        out_flat = jax.lax.psum(out_flat, spec.tp_axis)
+
+    out_rows = D.combine(st, plan, out_flat, spec.group_axes)
+
+    out = (out_rows.reshape(t, k, h) * r.gate_w[:, :, None].astype(x.dtype)
+           ).sum(axis=1)
+
+    metrics = MoEMetrics(
+        aux_loss=r.aux_loss,
+        z_loss=r.z_loss,
+        max_load=sched.max_load,
+        balance=sched.balance,
+        overflow=plan.overflow,
+    )
+    return out, metrics, sched.solver_state

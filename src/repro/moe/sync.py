@@ -1,0 +1,181 @@
+"""Expert parameter/gradient movement between *working* (placement) layout
+and *canonical* layout — the TPU/XLA adaptation of the paper's EDP gradient
+sync and of adaptive replacement's parameter migration (DESIGN.md §2).
+
+Why this exists: the paper syncs each expert's replicas over an arbitrary
+NCCL process group (its §B.3 slot restriction avoids deadlocks).  XLA SPMD
+has no irregular groups inside a multi-axis shard_map (probed: psum
+``axis_index_groups`` is NotImplemented there).  Instead:
+
+  canonical layout: expert e is owned by device (row, e // k) at canonical
+  slot e % k — identical on every row, so row-internal moves suffice.
+
+  working -> canonical (grad sync):
+     local self-owned slots accumulate directly; every other replica slot
+     travels to its canonical owner through one of a few ppermutes.  The
+     (replica-slot -> owner) edges form a bipartite multigraph of max degree
+     Δ ≤ slots-per-device (typically 2-4); greedy edge coloring splits it
+     into Δ' ≤ 2Δ-1 partial permutations, each a single ``lax.ppermute``
+     over the merged group axes.  Traffic ≈ Δ'·(expert bytes) per device —
+     ~the ideal EDP-group reduce, not the E×-blowup of a naive all-reduce.
+     A final psum(_scatter) over the replica rows ('data', + 'pod')
+     completes the reduction.
+
+  canonical -> working (redistribute): the reversed edges, same colorings.
+     This single primitive is also the *migration* operator of adaptive
+     replacement (§6.4): changing placement = rebuild plan + one
+     redistribute; bytes are measured exactly (Fig. 10 analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.placement import Placement
+
+__all__ = ["SyncPlan", "build_sync_plan", "working_grads_to_canonical",
+           "canonical_to_working", "sync_traffic_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPlan:
+    """Host-side plan; per-device index tables are mesh-sharded [G, ...]."""
+
+    placement: Placement
+    num_matchings: int
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...]   # per matching: (src, dst)
+    send_slot: np.ndarray    # int32[n_match, G] local slot to send (-1 none)
+    recv_slot: np.ndarray    # int32[n_match, G] canonical slot to add (-1)
+    self_slot: np.ndarray    # int32[G, k] canon slot j -> local slot (-1)
+    k_canonical: int
+
+
+def build_sync_plan(placement: Placement) -> SyncPlan:
+    p = placement
+    rows, cols, slots = p.rows, p.cols, p.slots
+    k = p.num_experts // cols           # canonical slots per device
+    g_n = p.num_devices
+    flat = p.flat()
+
+    self_slot = np.full((g_n, k), -1, np.int32)
+    edges: List[Tuple[int, int, int, int]] = []   # (src, dst, src_slot, canon_slot)
+    for i in range(rows):
+        for c in range(cols):
+            g = i * cols + c
+            for s in range(slots):
+                e = int(flat[g, s])
+                owner_col = e // k
+                canon_s = e % k
+                if owner_col == c:
+                    self_slot[g, canon_s] = s
+                else:
+                    edges.append((g, i * cols + owner_col, s, canon_s))
+
+    # greedy edge coloring into partial matchings
+    matchings: List[List[Tuple[int, int, int, int]]] = []
+    for edge in edges:
+        placed = False
+        for m in matchings:
+            if all(edge[0] != e0 and edge[1] != e1 for (e0, e1, _, _) in m):
+                m.append(edge)
+                placed = True
+                break
+        if not placed:
+            matchings.append([edge])
+
+    n_m = len(matchings)
+    send_slot = np.full((max(n_m, 1), g_n), -1, np.int32)
+    recv_slot = np.full((max(n_m, 1), g_n), -1, np.int32)
+    perms = []
+    for mi, m in enumerate(matchings):
+        perm = []
+        for (src, dst, s, cs) in m:
+            perm.append((src, dst))
+            send_slot[mi, src] = s
+            recv_slot[mi, dst] = cs
+        perms.append(tuple(perm))
+    return SyncPlan(
+        placement=p, num_matchings=n_m, perms=tuple(perms),
+        send_slot=send_slot, recv_slot=recv_slot,
+        self_slot=self_slot, k_canonical=k,
+    )
+
+
+def _gather_leaf(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """x: [S, ...]; idx scalar (-1 -> zeros)."""
+    safe = jnp.maximum(idx, 0)
+    out = x[safe]
+    return jnp.where(idx >= 0, out, jnp.zeros_like(out))
+
+
+def working_grads_to_canonical(
+    plan: SyncPlan,
+    local_grads,                    # pytree of [S, ...] leaves
+    send_slot: jax.Array,           # int32[n_match] this device's table slice
+    recv_slot: jax.Array,           # int32[n_match]
+    self_slot: jax.Array,           # int32[k]
+    group_axes: Sequence[str],
+):
+    """Returns pytree of [k, ...] canonical partial sums (caller psums over
+    the replica rows / pods)."""
+    k = plan.k_canonical
+
+    def per_leaf(g):
+        # self-owned slots
+        canon = jax.vmap(lambda j: _gather_leaf(g, self_slot[j]))(jnp.arange(k))
+        for mi in range(plan.num_matchings):
+            buf = _gather_leaf(g, send_slot[mi])
+            if group_axes:
+                buf = jax.lax.ppermute(buf, tuple(group_axes),
+                                       perm=plan.perms[mi])
+            rs = recv_slot[mi]
+            upd = jnp.where(rs >= 0, 1.0, 0.0).astype(buf.dtype)
+            canon = canon.at[jnp.maximum(rs, 0)].add(buf * upd)
+        return canon
+
+    return jax.tree_util.tree_map(per_leaf, local_grads)
+
+
+def canonical_to_working(
+    plan: SyncPlan,
+    canonical,                      # pytree of [k, ...] leaves
+    send_slot: jax.Array,           # int32[n_match]  (same tables as sync)
+    recv_slot: jax.Array,           # int32[n_match]
+    self_slot: jax.Array,           # int32[k]
+    group_axes: Sequence[str],
+):
+    """Reverse of the grad path: canonical params -> working [S, ...] slots.
+    Uses the reversed permutations; the canonical side sends ``recv_slot``'s
+    canonical slot, the replica side deposits into ``send_slot``'s slot."""
+    p = plan.placement
+    s_n = p.slots
+
+    def per_leaf(c):
+        out = jnp.zeros((s_n,) + c.shape[1:], c.dtype)
+        # self-owned slots
+        for j in range(plan.k_canonical):
+            sl = self_slot[j]
+            out = out.at[jnp.maximum(sl, 0)].add(
+                jnp.where(sl >= 0, 1.0, 0.0).astype(c.dtype) * c[j]
+            )
+        for mi in range(plan.num_matchings):
+            buf = _gather_leaf(c, recv_slot[mi])
+            if group_axes:
+                rev = tuple((d, s) for (s, d) in plan.perms[mi])
+                buf = jax.lax.ppermute(buf, tuple(group_axes), perm=rev)
+            ss = send_slot[mi]
+            upd = jnp.where(ss >= 0, 1.0, 0.0).astype(buf.dtype)
+            out = out.at[jnp.maximum(ss, 0)].add(buf * upd)
+        return out
+
+    return jax.tree_util.tree_map(per_leaf, canonical)
+
+
+def sync_traffic_bytes(plan: SyncPlan, bytes_per_expert: int) -> int:
+    """Exact ppermute traffic of one working->canonical pass (per device,
+    upper bound over devices)."""
+    return plan.num_matchings * bytes_per_expert

@@ -1,0 +1,6 @@
+"""Optimizers and LR schedules (pure JAX)."""
+from .adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from .schedule import warmup_cosine
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "warmup_cosine"]

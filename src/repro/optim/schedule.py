@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio * base_lr``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, base_lr * cos)

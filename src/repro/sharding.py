@@ -1,0 +1,274 @@
+"""PartitionSpec policies: parameter, optimizer, batch and cache shardings
+per architecture family × input shape (DESIGN.md §3).
+
+Policy summary (mesh axes: optional 'pod', 'data', 'model'):
+
+  * activations/batch       — batch over ('pod','data'); 'model' replicated
+                              (tensor-parallel intermediate shardings are
+                              GSPMD-propagated from the weight specs below).
+  * attention wq/wk/wv      — output (heads) over 'model' (kv replicated when
+                              kv_heads doesn't divide); wo input over 'model'.
+  * dense FFN               — w_gate/w_up column-split over 'model'; w_down
+                              row-split (Megatron pattern).
+  * embedding               — vocab over 'model' (memory + sharded logits).
+  * MoE expert slots        — working layout [D, M, S, H, F] over
+                              ('data','model'): the placement grid is the
+                              mesh (paper §4, MicroEP group = merged grid).
+  * masters/optimizer state — working spec + largest replicated dim
+                              additionally sharded over 'data' (ZeRO-1).
+  * KV caches (decode)      — heads over 'model'; batch over 'data' when it
+                              divides, else the *sequence* dim over 'data'
+                              (long-context decode, DESIGN.md §6).
+
+Specs are assigned by leaf path patterns so the policy lives in ONE place
+and applies to every architecture uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .configs.base import ArchConfig
+
+__all__ = ["MeshInfo", "param_pspec", "param_pspecs", "master_pspec",
+           "batch_pspecs", "cache_pspecs", "act_constraint"]
+
+
+class MeshInfo:
+    """Axis bookkeeping for a production or test mesh."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.has_pod = "pod" in names
+        self.dp_axes = (("pod", "data") if self.has_pod else ("data",))
+        self.tp_axis = "model"
+        self.data = mesh.shape["data"]
+        self.model = mesh.shape["model"]
+        self.pods = mesh.shape.get("pod", 1)
+
+    @property
+    def dp_size(self) -> int:
+        return self.data * self.pods
+
+    @property
+    def group_size(self) -> int:
+        """Devices in one MicroEP group (= one pod's grid)."""
+        return self.data * self.model
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def _div(n: int, parts: int) -> bool:
+    return parts > 0 and n % parts == 0
+
+
+# --------------------------------------------------------------------------
+# parameter specs (working layout)
+# --------------------------------------------------------------------------
+
+# (path regex, rule) — first match wins.  Rules get (shape, mi, cfg).
+def _experts_rule(s, mi, cfg):
+    if len(s) == 5:        # working layout [D, M, S, H, F]
+        return P("data", "model", None, None, None)
+    # canonical master [E_virt, H, F]: experts over 'model', H over 'data'
+    e, h, f = s
+    return P("model" if _div(e, mi.model) else None,
+             "data" if _div(h, mi.data) else None, None)
+
+
+_RULES = [
+    # MoE expert weights (working or canonical layout — shape dispatched)
+    (r"experts/w_(gate|up|down)$", _experts_rule),
+    (r"/router$", lambda s, mi, cfg: P(None, None)),
+    # attention
+    (r"attn/w[qkv]$",
+     lambda s, mi, cfg: P(None, "model") if _div(s[1], mi.model) else P(None, None)),
+    (r"attn/wo$",
+     lambda s, mi, cfg: P("model", None) if _div(s[0], mi.model) else P(None, None)),
+    (r"attn/b[qkv]$",
+     lambda s, mi, cfg: P("model") if _div(s[0], mi.model) else P(None)),
+    # dense FFN (and rwkv channel mix uses wk/wv names under chan/)
+    (r"ffn/w_(gate|up)$", lambda s, mi, cfg: P(None, "model")),
+    (r"ffn/w_down$", lambda s, mi, cfg: P("model", None)),
+    (r"chan/wk$", lambda s, mi, cfg: P(None, "model")),
+    (r"chan/wv$", lambda s, mi, cfg: P("model", None)),
+    (r"chan/wr$", lambda s, mi, cfg: P(None, None)),
+    # rwkv time mix
+    (r"time/w[rkvg]$", lambda s, mi, cfg: P(None, "model")),
+    (r"time/wo$", lambda s, mi, cfg: P("model", None)),
+    (r"time/u$",
+     lambda s, mi, cfg: P("model", None) if _div(s[0], mi.model) else P(None, None)),
+    (r"time/decay_lora_b$", lambda s, mi, cfg: P(None, "model")),
+    (r"time/mix_lora_b$", lambda s, mi, cfg: P(None, None)),
+    # rglru
+    (r"rec/w_in_[xg]$", lambda s, mi, cfg: P(None, "model")),
+    (r"rec/(conv_w|conv_b|lam)$",
+     lambda s, mi, cfg: P(*([None] * (len(s) - 1) + ["model"]))),
+    (r"rec/w[ax]$", lambda s, mi, cfg: P(None, "model")),
+    (r"rec/w_out$", lambda s, mi, cfg: P("model", None)),
+    # embedding / head
+    (r"^embed$",
+     lambda s, mi, cfg: P("model", None) if _div(s[0], mi.model) else P(None, None)),
+    (r"^head$",
+     lambda s, mi, cfg: P(None, "model") if _div(s[1], mi.model) else P(None, None)),
+]
+
+
+def _strip_scan(path: str) -> str:
+    """Remove the layers_{scan,rem,list} prefix and group index."""
+    return re.sub(r"^layers_(scan|rem|list)/\d+/", "", path)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: Sequence[int], mi: MeshInfo,
+                cfg: ArchConfig, scanned: bool) -> P:
+    """Spec for one working-parameter leaf.  ``scanned`` leaves carry a
+    leading layer-repetition dim (never sharded)."""
+    body = _strip_scan(path)
+    ndim = len(shape)
+    inner = shape[1:] if scanned else shape
+    for pat, rule in _RULES:
+        if re.search(pat, body):
+            spec = rule(tuple(inner), mi, cfg)
+            return P(*((None,) + tuple(spec))) if scanned else spec
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params_shape, mi: MeshInfo, cfg: ArchConfig):
+    """Pytree of PartitionSpecs matching a params (or master) shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        scanned = ps.startswith("layers_scan")
+        specs.append(param_pspec(ps, np.shape(leaf), mi, cfg, scanned))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def master_pspec(spec: P, shape: Sequence[int], mi: MeshInfo) -> P:
+    """ZeRO-1: additionally shard the largest replicated dim over 'data'."""
+    if "data" in spec:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    cands = [(shape[i], i) for i in range(len(shape))
+             if dims[i] is None and _div(shape[i], mi.data)
+             and shape[i] >= mi.data]
+    if not cands:
+        return spec
+    _, i = max(cands)
+    dims[i] = "data"
+    return P(*dims)
+
+
+def master_pspecs(params_shape, mi: MeshInfo, cfg: ArchConfig):
+    specs = param_pspecs(params_shape, mi, cfg)
+    return jax.tree_util.tree_map(
+        lambda leaf, sp: master_pspec(sp, np.shape(leaf), mi),
+        params_shape, specs)
+
+
+# --------------------------------------------------------------------------
+# batch / activation / cache specs
+# --------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_shape, mi: MeshInfo):
+    """Batch leaves are [B, ...]: shard B over ('pod','data') when it
+    divides, else over 'data', else replicate (long_500k B=1)."""
+    def one(leaf):
+        b = np.shape(leaf)[0]
+        nd = len(np.shape(leaf))
+        if _div(b, mi.dp_size):
+            return P(*((mi.dp_axes if len(mi.dp_axes) > 1 else mi.dp_axes[0],)
+                       + (None,) * (nd - 1)))
+        if _div(b, mi.data):
+            return P(*(("data",) + (None,) * (nd - 1)))
+        return P(*([None] * nd))
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_pspecs(state_shape, mi: MeshInfo, cfg: ArchConfig, batch: int):
+    """Decode-state specs.  KV caches [.., B, Hkv, S, D]: heads over 'model'
+    when they divide; batch over 'data' when it divides, else the sequence
+    dim over 'data' (long-context decode)."""
+    batch_div = _div(batch, mi.data)
+
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        nd = len(shape)
+        ps = _path_str(path)
+        if ps == "pos" or nd == 0:
+            return P()
+        scanned = ps.startswith("scan")
+        inner = shape[1:] if scanned else shape
+        dims = [None] * len(inner)
+        if re.search(r"/(k|v)$", ps) and len(inner) == 4:
+            b, hkv, s, d = inner
+            if _div(hkv, mi.model):
+                dims[1] = "model"
+            if batch_div:
+                dims[0] = "data"
+            elif _div(s, mi.data) and s >= 4096:
+                dims[2] = "data"
+        elif re.search(r"/wkv$", ps) and len(inner) == 4:
+            if batch_div:
+                dims[0] = "data"
+            if _div(inner[1], mi.model):
+                dims[1] = "model"
+        elif len(inner) >= 2:
+            if batch_div:
+                dims[0] = "data"
+            if _div(inner[-1], mi.model):
+                dims[-1] = "model"
+        spec = P(*dims)
+        return P(*((None,) + tuple(spec))) if scanned else spec
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def act_constraint(mi: MeshInfo, seq_parallel: bool = False):
+    """Runtime.shard hook: constrain [B, T, ...] activations and logits.
+
+    ``seq_parallel``: shard the sequence axis of inter-block activations
+    over 'model' (Korthikanti-style sequence parallelism).  GSPMD then
+    lowers the Megatron TP boundary all-reduces into
+    reduce-scatter + all-gather pairs — half the link bytes (§Perf lever).
+    """
+    def shard(x, name):
+        b = x.shape[0]
+        if _div(b, mi.dp_size):
+            bax = mi.dp_axes if len(mi.dp_axes) > 1 else mi.dp_axes[0]
+        elif _div(b, mi.data):
+            bax = "data"
+        else:
+            bax = None
+        if name == "logits" and _div(x.shape[-1], mi.model):
+            spec = P(*((bax,) + (None,) * (x.ndim - 2) + ("model",)))
+        elif (name == "act" and seq_parallel and x.ndim >= 3
+              and _div(x.shape[1], mi.model)):
+            spec = P(*((bax, "model") + (None,) * (x.ndim - 2)))
+        else:
+            spec = P(*((bax,) + (None,) * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, mi.named(spec))
+    return shard

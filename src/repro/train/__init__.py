@@ -1,0 +1,6 @@
+"""Training loop and metrics."""
+from .loop import TrainState, LayoutHooks, make_train_step, init_train_state
+from .metrics import MetricLogger
+
+__all__ = ["TrainState", "LayoutHooks", "make_train_step",
+           "init_train_state", "MetricLogger"]

@@ -1,0 +1,44 @@
+"""Minimal metric logging: stdout + in-memory history + optional CSV."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["MetricLogger"]
+
+
+class MetricLogger:
+    def __init__(self, csv_path: Optional[str] = None, print_every: int = 10):
+        self.history: List[Dict[str, float]] = []
+        self.csv_path = csv_path
+        self.print_every = print_every
+        self._t0 = time.perf_counter()
+        self._writer = None
+        self._file = None
+
+    def log(self, step: int, metrics: Dict) -> None:
+        row = {"step": step,
+               "wall_s": round(time.perf_counter() - self._t0, 3)}
+        row.update({k: float(v) for k, v in metrics.items()})
+        self.history.append(row)
+        if self.csv_path:
+            new = self._file is None
+            if new:
+                os.makedirs(os.path.dirname(self.csv_path) or ".",
+                            exist_ok=True)
+                self._file = open(self.csv_path, "w", newline="")
+                self._writer = csv.DictWriter(self._file,
+                                              fieldnames=list(row))
+                self._writer.writeheader()
+            self._writer.writerow(row)
+            self._file.flush()
+        if step % self.print_every == 0:
+            parts = " ".join(f"{k}={v:.4g}" for k, v in row.items()
+                             if k not in ("step",))
+            print(f"[step {step}] {parts}", flush=True)
+
+    def close(self) -> None:
+        if self._file:
+            self._file.close()

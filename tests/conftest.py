@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+multi-device behaviour is exercised via subprocess tests (test_distributed)
+so the device count stays per-process."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# single-CPU-core container: a leaner default profile keeps the full suite
+# affordable; crank with HYPOTHESIS_PROFILE=thorough for deeper sweeps
+settings.register_profile(
+    "fast", max_examples=15, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.register_profile("thorough", max_examples=100, deadline=None)
+import os
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "fast"))
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,140 @@
+"""Model layer unit tests: RoPE/M-RoPE, chunked vs dense attention, sliding
+windows, GQA/MQA, RG-LRU scan, RWKV shift/state semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers.attention import (AttnConfig, attention,
+                                           decode_attention, init_attention,
+                                           init_kv_cache)
+from repro.models.layers.rglru import (RGLRUState, init_rglru_block,
+                                       rglru_block)
+from repro.models.layers.rope import apply_mrope, apply_rope
+from repro.models.layers.rwkv6 import (init_rwkv6_channel,
+                                       rwkv6_channel_mix)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """Pure-text tokens: all three M-RoPE components equal the sequence
+    index, which must reduce M-RoPE to plain RoPE [arXiv:2409.12191]."""
+    b, h, t, d = 2, 3, 8, 32
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, h, t, d))
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    pos3 = jnp.broadcast_to(pos[..., None], (b, t, 3))
+    a = apply_rope(x, pos, theta=1e6)
+    m = apply_mrope(x, pos3, sections=(4, 6, 6), theta=1e6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(m), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """Attention scores under RoPE depend only on relative offsets."""
+    h, d = 1, 64
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, h, 1, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, h, 1, d))
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.asarray([[pq]]))
+        kr = apply_rope(k, jnp.asarray([[pk]]))
+        return float(jnp.einsum("bhqd,bhkd->bhqk", qr, kr)[0, 0, 0, 0])
+
+    np.testing.assert_allclose(score(5, 3), score(105, 103), rtol=1e-4)
+    np.testing.assert_allclose(score(7, 0), score(1007, 1000), rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_chunked_attention_matches_dense(window):
+    cfg = AttnConfig(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                     window=window)
+    key = jax.random.PRNGKey(2)
+    p = init_attention(key, cfg)
+    t = 128
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, t, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (2, t))
+    dense = attention(p, cfg, x, pos, chunk_q=t)          # dense path
+    chunked = attention(p, cfg, x, pos, chunk_q=16)       # chunked path
+    chunked_u = attention(p, cfg, x, pos, chunk_q=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(chunked_u), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_masks_far_tokens():
+    """A token beyond the window cannot influence the output."""
+    cfg = AttnConfig(d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     window=4)
+    key = jax.random.PRNGKey(3)
+    p = init_attention(key, cfg)
+    t = 16
+    x = jax.random.normal(key, (1, t, 32)) * 0.3
+    pos = jnp.arange(t)[None]
+    base = attention(p, cfg, x, pos)
+    x2 = x.at[0, 0].add(10.0)  # token 0 far outside window of token 15
+    pert = attention(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(base[0, -1]),
+                               np.asarray(pert[0, -1]), rtol=1e-4, atol=1e-4)
+    assert float(jnp.abs(base[0, 1] - pert[0, 1]).max()) > 1e-3
+
+
+def test_mqa_kv_heads_shared():
+    """MQA (kv=1): both query-head groups attend to the same kv stream."""
+    cfg = AttnConfig(d_model=32, num_heads=4, num_kv_heads=1, head_dim=8)
+    p = init_attention(jax.random.PRNGKey(4), cfg)
+    assert p["wk"].shape == (32, 8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 32))
+    out = attention(p, cfg, x, jnp.arange(8)[None])
+    assert out.shape == (1, 8, 32) and jnp.isfinite(out).all()
+
+
+def test_decode_ring_buffer_window():
+    """Windowed decode ring buffer: after > window steps the output equals
+    attention over only the last `window` tokens."""
+    cfg = AttnConfig(d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     window=4)
+    key = jax.random.PRNGKey(6)
+    p = init_attention(key, cfg)
+    t = 10
+    x = jax.random.normal(key, (1, t, 32)) * 0.5
+    pos = jnp.arange(t)[None]
+    ref = attention(p, cfg, x, pos)       # banded training attention
+    cache = init_kv_cache(cfg, 1, t)
+    outs = []
+    for i in range(t):
+        o, cache = decode_attention(p, cfg, x[:, i:i + 1], cache)
+        outs.append(o[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_matches_sequential():
+    """Associative-scan RG-LRU == explicit sequential recurrence, and a
+    split evaluation with carried state matches the full one."""
+    dm, w, t = 16, 24, 12
+    key = jax.random.PRNGKey(7)
+    p = init_rglru_block(key, dm, w)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, t, dm)) * 0.5
+    full, st_full = rglru_block(p, x)
+    a, st_a = rglru_block(p, x[:, :7])
+    b, st_b = rglru_block(p, x[:, 7:], state=st_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], axis=1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_b.h), np.asarray(st_full.h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_channel_mix_shift_state():
+    dm, ff = 16, 32
+    key = jax.random.PRNGKey(8)
+    p = init_rwkv6_channel(key, dm, ff)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, 6, dm))
+    full, last = rwkv6_channel_mix(p, x)
+    a, la = rwkv6_channel_mix(p, x[:, :3])
+    b, lb = rwkv6_channel_mix(p, x[:, 3:], state_prev=la)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], axis=1)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(last))

@@ -1,0 +1,189 @@
+"""LPP 1 (paper §5.1): HiGHS oracle vs the in-graph water-filling solver,
+Eq. 3 density identity, rounding invariants.  Property-based via hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import replica_devices, solve_lpp1, solve_lpp4
+from repro.core.placement import (latin_placement, max_induced_density,
+                                  random_placement, vanilla_placement)
+from repro.core.rounding import round_replica_loads
+from repro.core.scheduler import ScheduleStatics
+from repro.core.solver_jax import device_loads, solve_replica_loads, water_fill
+
+
+def _random_instance(rng, rows, cols, k, max_load=200):
+    e = cols * k
+    p = random_placement(rows, cols, e, seed=int(rng.integers(1 << 30)))
+    dev = replica_devices(p)
+    loads = rng.integers(0, max_load, size=e).astype(np.float64)
+    return p, dev, loads
+
+
+# ---------------------------------------------------------------- water fill
+
+@given(st.integers(1, 8), st.floats(0.0, 1e4), st.integers(0, 1 << 30))
+@settings(max_examples=50, deadline=None)
+def test_water_fill_properties(r, budget, seed):
+    rng = np.random.default_rng(seed)
+    levels = jnp.asarray(rng.uniform(0, 100, r), jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=r) < 0.7)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    alloc = water_fill(levels, jnp.float32(budget), valid)
+    assert float(alloc.min()) >= -1e-4
+    np.testing.assert_allclose(float(alloc.sum()), budget, rtol=1e-5,
+                               atol=1e-3)
+    # equalization: all replicas receiving mass end at the same level,
+    # no replica above that level got mass
+    lv = np.asarray(levels)
+    a = np.asarray(alloc)
+    final = lv + a
+    active = (a > 1e-3) & np.asarray(valid)
+    if active.any() and budget > 1e-3:
+        top = final[active]
+        assert top.max() - top.min() < 1e-2 * max(top.max(), 1.0)
+        idle = (~active) & np.asarray(valid)
+        if idle.any():
+            assert lv[idle].min() >= top.max() - 1e-2 * max(top.max(), 1.0)
+
+
+# ------------------------------------------------- solver vs oracle vs Eq. 3
+
+@pytest.mark.parametrize("rows,cols,k,seed", [
+    (2, 4, 2, 0), (4, 4, 2, 1), (2, 8, 4, 2), (8, 8, 1, 3), (4, 2, 8, 4),
+])
+def test_solver_matches_higgs_oracle(rows, cols, k, seed):
+    rng = np.random.default_rng(seed)
+    p, dev, loads = _random_instance(rng, rows, cols, k)
+    res = solve_lpp1(loads, dev, p.num_devices)
+    sol = solve_replica_loads(jnp.asarray(loads, jnp.float32),
+                              jnp.asarray(dev, jnp.int32),
+                              p.num_devices, sweeps=30)
+    dl = device_loads(sol.x, jnp.asarray(dev, jnp.int32), p.num_devices)
+    # conservation per expert
+    np.testing.assert_allclose(np.asarray(sol.x.sum(-1)), loads, rtol=1e-4,
+                               atol=1e-2)
+    # max device load within 1% + 1 token of the LP optimum
+    assert float(dl.max()) <= res.max_load * 1.01 + 1.0
+
+
+@pytest.mark.parametrize("rows,cols,k,seed", [
+    (2, 4, 2, 10), (2, 4, 4, 11), (4, 4, 1, 12),
+])
+def test_lp_optimum_equals_density_eq3(rows, cols, k, seed):
+    """Paper Eq. 3: LP optimum == max induced subgraph density (exact
+    bitmask enumeration for <= 16 devices)."""
+    rng = np.random.default_rng(seed)
+    p, dev, loads = _random_instance(rng, rows, cols, k)
+    assert p.num_devices <= 20
+    res = solve_lpp1(loads, dev, p.num_devices)
+    m_graph = max_induced_density(p, loads)
+    np.testing.assert_allclose(res.objective, m_graph, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(0, 1 << 30))
+@settings(max_examples=20, deadline=None)
+def test_lp_lower_bounds_hypothesis(seed):
+    """LP optimum >= mean load (density of the full set) and >= any single
+    expert's load / its replica count."""
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(2, 4))
+    cols = int(rng.integers(2, 5))
+    k = int(rng.integers(1, 3))
+    p, dev, loads = _random_instance(rng, rows, cols, k)
+    res = solve_lpp1(loads, dev, p.num_devices)
+    assert res.objective >= loads.sum() / p.num_devices - 1e-6
+    counts = p.replica_count()
+    for e in range(len(loads)):
+        assert res.objective >= loads[e] / counts[e] - 1e-6
+
+
+def test_warm_start_converges_faster():
+    rng = np.random.default_rng(5)
+    p, dev, loads = _random_instance(rng, 4, 8, 2)
+    devj = jnp.asarray(dev, jnp.int32)
+    oracle = solve_lpp1(loads, dev, p.num_devices).max_load
+    # cold with few sweeps vs warm from a perturbed previous solution
+    base = solve_replica_loads(jnp.asarray(loads, jnp.float32), devj,
+                               p.num_devices, sweeps=30)
+    loads2 = loads * rng.uniform(0.9, 1.1, size=loads.shape)
+    warm = solve_replica_loads(jnp.asarray(loads2, jnp.float32), devj,
+                               p.num_devices, x_init=base.x, sweeps=2)
+    cold = solve_replica_loads(jnp.asarray(loads2, jnp.float32), devj,
+                               p.num_devices, sweeps=2)
+    o2 = solve_lpp1(loads2, dev, p.num_devices).max_load
+    warm_max = float(device_loads(warm.x, devj, p.num_devices).max())
+    cold_max = float(device_loads(cold.x, devj, p.num_devices).max())
+    assert warm_max <= cold_max + 1e-3
+    assert warm_max <= o2 * 1.05 + 1.0
+
+
+# ----------------------------------------------------------------- rounding
+
+@given(st.integers(0, 1 << 30))
+@settings(max_examples=30, deadline=None)
+def test_rounding_invariants(seed):
+    rng = np.random.default_rng(seed)
+    e, r = int(rng.integers(1, 10)), int(rng.integers(1, 6))
+    valid = rng.uniform(size=(e, r)) < 0.8
+    valid[:, 0] = True
+    loads = rng.integers(0, 100, size=e)
+    # fractional allocation with row sums == loads
+    x = rng.uniform(size=(e, r)) * valid
+    x = x / np.maximum(x.sum(-1, keepdims=True), 1e-9) * loads[:, None]
+    out = round_replica_loads(jnp.asarray(x, jnp.float32),
+                              jnp.asarray(loads, jnp.int32),
+                              jnp.asarray(valid))
+    out = np.asarray(out)
+    assert (out >= 0).all()
+    assert (out[~valid] == 0).all()
+    np.testing.assert_array_equal(out.sum(-1), loads)
+    # largest-remainder: each entry within 1 of the fractional value
+    assert (np.abs(out - x) <= 1.0 + 1e-5).all()
+
+
+# ------------------------------------------------------------------- LPP 4
+
+def test_lpp4_reduces_comm_volume():
+    """Appendix A.1: with alpha > 0 the comm-aware LP never has a larger
+    comm volume than the comp-only LP for the same loads."""
+    rng = np.random.default_rng(7)
+    p, dev, loads = _random_instance(rng, 2, 4, 2)
+    g = p.num_devices
+    e = len(loads)
+    inputs = rng.multinomial(1, np.ones(g) / g, size=e).astype(np.float64)
+    inputs = inputs * loads[:, None]
+    r1 = solve_lpp1(loads, dev, g)
+    r4 = solve_lpp4(loads, inputs, dev, g, alpha=0.5)
+    assert r4.status == 0
+
+    def comm_of(x):
+        send = np.zeros(g)
+        recv = np.zeros(g)
+        for ei in range(e):
+            for ri in range(dev.shape[1]):
+                gi = dev[ei, ri]
+                if gi < 0:
+                    continue
+                local = min(x[ei, ri], inputs[ei, gi])
+                recv[gi] += x[ei, ri] - local
+        for gi in range(g):
+            inp = inputs[:, gi].sum()
+            loc = sum(min(x[ei, ri], inputs[ei, gi])
+                      for ei in range(e) for ri in range(dev.shape[1])
+                      if dev[ei, ri] == gi)
+            send[gi] = inp - loc
+        return max(send.max(), recv.max())
+
+    assert comm_of(r4.x) <= comm_of(r1.x) + 1e-6
+    # and comp stays within a bounded factor of the optimum
+    dl4 = np.zeros(g)
+    for ei in range(e):
+        for ri in range(dev.shape[1]):
+            if dev[ei, ri] >= 0:
+                dl4[dev[ei, ri]] += r4.x[ei, ri]
+    assert dl4.max() <= r1.max_load * 3 + 1e-6

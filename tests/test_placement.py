@@ -1,0 +1,190 @@
+"""Expert placement strategies & graph theory (paper §6, Appendix B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import (cayley_bipartite, cayley_complete_plus,
+                               cayley_cycle, cayley_graph_auto, cayley_torus,
+                               edges_to_two_row_placement,
+                               max_density_subgraph_exact)
+from repro.core.placement import (Placement, asymmetric_placement,
+                                  latin_placement, max_induced_density,
+                                  random_placement, vanilla_placement)
+from repro.core.replacement import ReplacementConfig, ReplacementManager
+
+
+def _valid_placement(p: Placement):
+    flat = p.flat()
+    # every expert placed at least once, each device hosts an expert at most
+    # once (replicas of one expert on distinct devices)
+    assert set(np.unique(flat)) == set(range(p.num_experts))
+    for g in range(p.num_devices):
+        vals, counts = np.unique(flat[g], return_counts=True)
+        assert (counts == 1).all(), f"device {g} hosts a duplicate expert"
+
+
+@pytest.mark.parametrize("rows,cols,e", [(2, 4, 8), (4, 4, 8), (16, 16, 64),
+                                         (16, 16, 32)])
+def test_strategies_valid(rows, cols, e):
+    for p in (vanilla_placement(rows, cols, e),
+              random_placement(rows, cols, e, seed=1),
+              latin_placement(rows, cols, e)):
+        _valid_placement(p)
+        assert p.table.shape == (rows, cols, e // cols)
+
+
+def test_latin_consistent_slots():
+    """Paper §B.3: all replicas of an expert share the local slot index
+    (deadlock-free DDP ordering) — latin preserves slot classes."""
+    p = latin_placement(8, 8, 32)
+    assert p.consistent_slots()
+
+
+def test_vanilla_density_vs_latin():
+    """Vanilla (identical rows) has disjoint column EDP groups: one hot
+    expert pins its column.  Latin spreads it — strictly better Eq. 3
+    density for a skewed load."""
+    rows, cols, e = 4, 4, 16
+    loads = np.zeros(e)
+    loads[0] = 100.0
+    loads[1:] = 1.0
+    v = max_induced_density(vanilla_placement(rows, cols, e), loads)
+    l = max_induced_density(latin_placement(rows, cols, e), loads)
+    assert l < v
+
+
+def test_asymmetric_beats_uniform_on_skew():
+    rows, cols, e = 4, 4, 16
+    rng = np.random.default_rng(0)
+    loads = (np.arange(1, e + 1, dtype=np.float64) ** -1.5)[::-1] * 1000
+    rng.shuffle(loads)
+    uni = max_induced_density(latin_placement(rows, cols, e), loads)
+    asym = asymmetric_placement(rows, cols, e, loads, seed=0, num_samples=32)
+    _valid_placement(asym)
+    a = max_induced_density(asym, loads)
+    assert a <= uni + 1e-9
+    # heavy experts get more replicas
+    heavy = int(np.argmax(loads))
+    light = int(np.argmin(loads))
+    assert asym.replica_count()[heavy] >= asym.replica_count()[light]
+
+
+@given(st.integers(0, 1 << 30))
+@settings(max_examples=20, deadline=None)
+def test_density_bounds(seed):
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(1, 4))
+    cols = int(rng.integers(2, 5))
+    k = int(rng.integers(1, 3))
+    e = cols * k
+    p = random_placement(rows, cols, e, seed=seed % 997)
+    loads = rng.uniform(0, 50, e)
+    m = max_induced_density(p, loads)
+    counts = p.replica_count()
+    # m >= average density and >= every single-expert density
+    assert m >= loads.sum() / p.num_devices - 1e-9
+    assert m >= max(loads[i] / counts[i] for i in range(e)) - 1e-9
+    assert m <= loads.sum() + 1e-9
+
+
+# ------------------------------------------------ Appendix B Cayley graphs
+
+def test_cayley_cycle_example1():
+    edges = cayley_cycle(8)
+    assert len(edges) == 8
+    deg = np.zeros(8, int)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    assert (deg == 2).all()
+
+
+def test_cayley_torus_example2():
+    edges = cayley_torus(4)
+    assert len(edges) == 32
+    deg = np.zeros(16, int)
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    assert (deg == 4).all()
+
+
+def test_cayley_bipartite_example3_k44():
+    """Appendix B Example 3: Z_2 x Z_4 with generators {(0,±1),(1,±1)} is
+    isomorphic to K_{4,4}.  Every generator flips the parity of the Z_4
+    component, so the bipartition classes are {b even} and {b odd}; all
+    4x4 cross pairs must appear."""
+    edges = cayley_bipartite(8)
+    assert len(edges) == 16
+
+    def parity(v):
+        return (v % 4) % 2
+
+    assert all(parity(u) != parity(v) for u, v in edges)
+    pairs = {(min(u, v), max(u, v)) for u, v in edges}
+    assert len(pairs) == 16  # all cross pairs distinct -> K_{4,4}
+
+
+def test_cayley_complete_plus_example4():
+    edges = cayley_complete_plus(8, 32)
+    assert len(edges) == 32
+    pairs = {(min(u, v), max(u, v)) for u, v in edges}
+    assert len(pairs) == 28  # contains the full K_8
+
+
+def test_cayley_min_max_edge_property():
+    """Appendix B.2 Example 3 property: K44's max induced edge count at
+    every subset size is minimal among 4-regular graphs on 8 vertices —
+    check it beats the 'two disjoint K_4 + matching'-style circulant."""
+    k44 = cayley_bipartite(8)
+    w = [1.0] * 16
+    m_k44 = max_density_subgraph_exact(8, k44, w)
+    circ = [(i, (i + 1) % 8) for i in range(8)] + \
+           [(i, (i + 2) % 8) for i in range(8)]
+    m_circ = max_density_subgraph_exact(8, circ, [1.0] * 16)
+    assert m_k44 <= m_circ + 1e-9
+
+
+def test_edges_to_two_row_placement():
+    p = edges_to_two_row_placement(cayley_bipartite(8), cols=4)
+    _valid_placement(p)
+    assert p.rows == 2 and p.cols == 4 and p.slots == 4
+    # Eq. 3 densities agree between the two representations
+    rng = np.random.default_rng(3)
+    loads = rng.uniform(0, 10, 16)
+    m1 = max_induced_density(p, loads)
+    m2 = max_density_subgraph_exact(8, cayley_bipartite(8), loads)
+    np.testing.assert_allclose(m1, m2, rtol=1e-9)
+
+
+def test_cayley_graph_auto_shapes():
+    for n, m in [(8, 8), (16, 32), (8, 16), (8, 32), (8, 12)]:
+        edges = cayley_graph_auto(n, m)
+        assert len(edges) == m
+        assert all(0 <= u < n and 0 <= v < n for u, v in edges)
+
+
+# ------------------------------------------------ adaptive replacement §6.4
+
+def test_adaptive_replacement_triggers_on_drift():
+    rows, cols, e = 4, 4, 16
+    p0 = latin_placement(rows, cols, e)
+    mgr = ReplacementManager(p0, ReplacementConfig(
+        check_every=4, threshold=1.05, ema_decay=0.5, mc_samples=16))
+    rng = np.random.default_rng(0)
+    balanced = np.ones(e) * 100
+    for _ in range(8):
+        assert not mgr.observe(balanced + rng.integers(0, 5, e))
+    assert mgr.replacements == 0
+    # drift to extreme skew
+    skew = np.ones(e)
+    skew[3] = 5000.0
+    changed = False
+    for _ in range(12):
+        changed |= mgr.observe(skew)
+    assert changed and mgr.replacements >= 1
+    m_new = max_induced_density(mgr.placement, skew, num_samples=64,
+                                rng=rng)
+    m_old = max_induced_density(p0, skew, num_samples=64, rng=rng)
+    assert m_new <= m_old + 1e-9
+    assert mgr.migration_bytes(1000) > 0

@@ -1,0 +1,167 @@
+"""End-to-end scheduling (counts -> LP -> rounding -> routing -> flow) and
+the single-device dispatch/combine path (G=1 MicroEP group)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lp import solve_lpp1
+from repro.core.placement import latin_placement, vanilla_placement
+from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
+from repro.data.synthetic import zipf_expert_loads
+from repro.moe import dispatch as D
+from repro.moe.experts import init_canonical_experts
+from repro.moe.layer import MoEFFNSpec, moe_ffn
+from repro.moe.router import top_k_gating, zipf_gating
+
+
+def _sched(rows, cols, e, mode="microep", strategy="latin"):
+    p = (latin_placement if strategy == "latin" else vanilla_placement)(
+        rows, cols, e)
+    st = ScheduleStatics.from_placement(p)
+    return p, st, MicroEPScheduler(st, mode=mode, sweeps=12)
+
+
+@pytest.mark.parametrize("s", [0.2, 0.6, 1.0, 1.4])
+def test_schedule_balance_tracks_lp_optimum(s):
+    """Fig. 7 core property: the schedule's max device load matches the LP
+    optimum (+ integer rounding slack) for Zipf-skewed loads."""
+    rows, cols, e = 4, 8, 32
+    p, st, sched = _sched(rows, cols, e)
+    key = jax.random.PRNGKey(int(s * 10))
+    loads = zipf_expert_loads(key, e, total_tokens=8000, s=s)
+    # spread each expert's tokens over source devices uniformly at random
+    rng = np.random.default_rng(1)
+    g = p.num_devices
+    input_eg = np.stack([rng.multinomial(int(l), np.ones(g) / g)
+                         for l in np.asarray(loads)]).astype(np.int32)
+    out = sched(jnp.asarray(input_eg))
+    oracle = solve_lpp1(np.asarray(loads, np.float64), st.dev, g)
+    slack = p.slots + g  # rounding + proportional-sequencing slack
+    assert float(out.max_load) <= oracle.max_load + slack
+    # flow conserves tokens
+    np.testing.assert_array_equal(np.asarray(out.flow).sum(axis=2), input_eg)
+
+
+def test_vanilla_mode_reproduces_megatron_loads():
+    """mode='vanilla': each token computed in its own EP group — device load
+    = sum of its canonical experts' loads in that row."""
+    rows, cols, e = 2, 4, 8
+    p, st, sched = _sched(rows, cols, e, mode="vanilla", strategy="vanilla")
+    rng = np.random.default_rng(0)
+    g = p.num_devices
+    input_eg = rng.integers(0, 40, size=(e, g)).astype(np.int32)
+    out = sched(jnp.asarray(input_eg))
+    flow = np.asarray(out.flow)
+    # expected: tokens of expert e from row i land on (i, col(e))
+    k = e // cols
+    for ei in range(e):
+        col = ei // k
+        for gi in range(g):
+            row = gi // cols
+            dst = row * cols + col
+            sent = flow[ei, gi].sum()
+            assert sent == input_eg[ei, gi]
+            # all flow goes to the replica on this row
+            r = int(np.nonzero(st.dev[ei] == dst)[0][0])
+            assert flow[ei, gi, r] == input_eg[ei, gi]
+
+
+def test_schedule_deterministic():
+    """§5.3: identical inputs -> identical schedules (distributed
+    consistency)."""
+    _, st, sched = _sched(2, 4, 8)
+    rng = np.random.default_rng(2)
+    input_eg = jnp.asarray(rng.integers(0, 30, size=(8, 8)), jnp.int32)
+    a = sched(input_eg)
+    b = sched(input_eg)
+    np.testing.assert_array_equal(np.asarray(a.flow), np.asarray(b.flow))
+
+
+def test_warm_start_threading():
+    _, st, sched = _sched(2, 4, 8)
+    rng = np.random.default_rng(3)
+    state = sched.init_state()
+    for i in range(4):
+        input_eg = jnp.asarray(rng.integers(0, 30, size=(8, 8)), jnp.int32)
+        out = sched(input_eg, state)
+        state = out.solver_state
+        assert np.isfinite(float(out.max_load))
+
+
+# ----------------------------------------------- single-device dispatch path
+
+def _local_moe(key, e, top_k, t, h, f, impl="ref"):
+    p = vanilla_placement(1, 1, e)
+    st = ScheduleStatics.from_placement(p)
+    statics = D.build_statics(st, tokens_per_device=t, top_k=top_k,
+                              capacity_factor=2.0, bm=8)
+    sched = MicroEPScheduler(st, mode="microep")
+    spec = MoEFFNSpec(statics=statics, scheduler=sched, top_k=top_k,
+                      activation="swiglu", group_axes=(), kernel_impl=impl)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (t, h), jnp.float32) * 0.5
+    w_router = jax.random.normal(ks[1], (h, e)) * 0.1
+    experts = init_canonical_experts(ks[2], e, h, f)
+    return spec, x, w_router, experts
+
+
+def test_moe_ffn_matches_dense_reference():
+    """The full dispatch->grouped-FFN->combine pipeline equals the dense
+    'every token through its experts' einsum reference."""
+    key = jax.random.PRNGKey(0)
+    e, top_k, t, h, f = 4, 2, 64, 32, 48
+    spec, x, w_router, experts = _local_moe(key, e, top_k, t, h, f)
+    out, metrics, _ = moe_ffn(spec, x, w_router, experts)
+    assert int(metrics.overflow) == 0
+
+    r = top_k_gating(x, w_router, top_k)
+    dense = jnp.zeros_like(x)
+    for kk in range(top_k):
+        ids = r.expert_ids[:, kk]
+        wg = experts.w_gate[ids]
+        wu = experts.w_up[ids]
+        wd = experts.w_down[ids]
+        hdn = jax.nn.silu(jnp.einsum("th,thf->tf", x, wg)) * \
+            jnp.einsum("th,thf->tf", x, wu)
+        dense += r.gate_w[:, kk:kk + 1] * jnp.einsum("tf,tfh->th", hdn, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_ffn_differentiable():
+    key = jax.random.PRNGKey(1)
+    spec, x, w_router, experts = _local_moe(key, 4, 2, 32, 16, 24)
+
+    def loss(x, experts):
+        out, _, _ = moe_ffn(spec, x, w_router, experts)
+        return jnp.sum(out ** 2)
+
+    gx, ge = jax.grad(loss, argnums=(0, 1))(x, experts)
+    assert jnp.isfinite(gx).all()
+    assert all(jnp.isfinite(g).all() for g in jax.tree_util.tree_leaves(ge))
+    assert float(jnp.abs(gx).sum()) > 0
+
+
+def test_dispatch_roundtrip_identity():
+    """combine(dispatch(x)) with identity expert == gate-weighted sum of
+    the token's own rows (conservation through the buffers)."""
+    key = jax.random.PRNGKey(2)
+    e, top_k, t, h = 4, 2, 48, 16
+    spec, x, w_router, experts = _local_moe(key, e, top_k, t, h, 24)
+    st = spec.statics
+    r = top_k_gating(x, w_router, top_k)
+    ex = r.expert_ids.reshape(-1)
+    rows = jnp.repeat(x, top_k, axis=0)
+    cnt = jnp.zeros(e + 1, jnp.int32).at[ex].add(1)[:e]
+    sched = spec.scheduler(cnt[:, None])
+    plan = D.make_plan(st, ex, sched.flow, jnp.zeros((), jnp.int32))
+    flat = D.dispatch(st, plan, rows, ())
+    back = D.combine(st, plan, flat, ())
+    np.testing.assert_allclose(np.asarray(back), np.asarray(rows),
+                               rtol=1e-6, atol=1e-6)
+    # flat buffer group ranges contain exactly the right tokens per slot
+    gs, ge_ = np.asarray(plan.group_start), np.asarray(plan.group_end)
+    for s in range(st.num_slots):
+        expert = int(st.exp_of_dev_slot[0, s])
+        assert ge_[s] - gs[s] == int(cnt[expert])
