@@ -9,9 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lp import replica_devices, solve_lpp1
-from repro.core.placement import (asymmetric_placement, latin_placement,
-                                  random_placement, vanilla_placement)
-from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
+from repro.engine import MicroEPEngine, PlacementSpec, SchedulePolicy
 
 # ---- TPU v5e time model (the paper's straggler model, §2.3/§7.4:
 # FFN time ∝ max device load; a2a time ∝ max send/recv bytes) -------------
@@ -43,18 +41,22 @@ def zipf_input(rng, e: int, g: int, tokens_per_dev: int, s: float):
     return out.astype(np.int32)
 
 
+def make_engine(rows: int, cols: int, e: int, strategy: str = "latin",
+                mode: str = "microep", loads=None,
+                seed: int = 0) -> MicroEPEngine:
+    """One engine per benchmark geometry — the single construction path."""
+    return MicroEPEngine.build(
+        e, (rows, cols),
+        placement=PlacementSpec(strategy=strategy, seed=seed, loads=loads),
+        policy=SchedulePolicy(mode=mode, sweeps=8))
+
+
 def make_scheduler(rows: int, cols: int, e: int, strategy: str = "latin",
                    mode: str = "microep", loads=None, seed: int = 0):
-    if strategy == "vanilla":
-        p = vanilla_placement(rows, cols, e)
-    elif strategy == "random":
-        p = random_placement(rows, cols, e, seed=seed)
-    elif strategy == "asymmetric":
-        p = asymmetric_placement(rows, cols, e, loads, seed=seed)
-    else:
-        p = latin_placement(rows, cols, e)
-    st = ScheduleStatics.from_placement(p)
-    return p, st, MicroEPScheduler(st, mode=mode, sweeps=8)
+    """Legacy view of :func:`make_engine`: (placement, statics, scheduler)."""
+    eng = make_engine(rows, cols, e, strategy=strategy, mode=mode,
+                      loads=loads, seed=seed)
+    return eng.placement, eng.statics, eng.scheduler
 
 
 def time_it(fn: Callable, iters: int = 20, warmup: int = 3) -> float:

@@ -16,10 +16,9 @@ from repro.core.graphs import (cayley_bipartite, cayley_cycle,
                                cayley_graph_auto, cayley_torus,
                                edges_to_two_row_placement,
                                max_density_subgraph_exact)
-from repro.core.placement import (asymmetric_placement, latin_placement,
-                                  max_induced_density, random_placement,
-                                  vanilla_placement)
+from repro.core.placement import max_induced_density
 from repro.data.synthetic import zipf_expert_loads
+from repro.engine import placement_strategies
 
 
 def main():
@@ -42,20 +41,18 @@ def main():
     loads_by_s = {s: np.asarray(zipf_expert_loads(
         jax.random.PRNGKey(int(s * 10)), args.experts, args.tokens, s))
         .astype(np.float64) for s in skews}
-    for name in ("vanilla", "random", "latin", "asymmetric"):
+    # every registered strategy, through the engine's plugin registry;
+    # strategy-specific kwargs ride along (smaller MC search keeps the
+    # explorer interactive)
+    extras = {"asymmetric": {"num_samples": 32}}
+    for name in placement_strategies:
+        strategy = placement_strategies.get(name)
         cells = []
         for s in skews:
             loads = loads_by_s[s]
             ideal = loads.sum() / g
-            if name == "vanilla":
-                p = vanilla_placement(args.rows, args.cols, args.experts)
-            elif name == "random":
-                p = random_placement(args.rows, args.cols, args.experts)
-            elif name == "latin":
-                p = latin_placement(args.rows, args.cols, args.experts)
-            else:
-                p = asymmetric_placement(args.rows, args.cols, args.experts,
-                                         loads, num_samples=32)
+            p = strategy(args.rows, args.cols, args.experts, loads=loads,
+                         **extras.get(name, {}))
             m = max_induced_density(p, loads, num_samples=256, rng=rng)
             cells.append(f"{m/ideal:6.3f} ")
         print(f"{name:12s} " + " ".join(cells) + "   (Eq.3 m / ideal)")

@@ -1,8 +1,10 @@
-"""Quickstart: the paper's technique in 60 lines.
+"""Quickstart: the paper's technique in 60 lines, through the engine API.
 
-Builds a MicroEP group, feeds it a skewed expert-load micro-batch, and
-shows the LP-scheduled balance vs vanilla expert parallelism — the core of
-MicroMoE (paper §4-5) with no model around it.
+``MicroEPEngine.build`` assembles the whole pipeline — placement table,
+schedule statics, LP scheduler — from a strategy name and a policy.  We
+feed it a skewed expert-load micro-batch and show the LP-scheduled balance
+vs vanilla expert parallelism — the core of MicroMoE (paper §4-5) with no
+model around it.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lp import solve_lpp1
-from repro.core.placement import latin_placement, vanilla_placement
-from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
 from repro.data.synthetic import zipf_expert_loads
+from repro.engine import MicroEPEngine, SchedulePolicy
 
 ROWS, COLS, EXPERTS = 4, 4, 32          # 16 devices, k=2 replica slots
 TOKENS = 32_000
@@ -32,25 +32,27 @@ def main():
     print(f"most loaded expert: {loads.max()} tokens "
           f"({loads.max()/loads.mean():.1f}x the mean)\n")
 
+    # one facade call per system: (placement strategy, scheduling mode)
     for name, placement, mode in [
-        ("vanilla EP (Megatron)", vanilla_placement(ROWS, COLS, EXPERTS),
-         "vanilla"),
-        ("MicroEP latin placement", latin_placement(ROWS, COLS, EXPERTS),
-         "microep"),
+        ("vanilla EP (Megatron)", "vanilla", "vanilla"),
+        ("MicroEP latin placement", "latin", "microep"),
     ]:
-        statics = ScheduleStatics.from_placement(placement)
-        sched = MicroEPScheduler(statics, mode=mode)
-        out = sched(jnp.asarray(input_eg, jnp.int32))
+        eng = MicroEPEngine.build(EXPERTS, (ROWS, COLS),
+                                  placement=placement,
+                                  policy=SchedulePolicy(mode=mode))
+        out = eng.schedule(jnp.asarray(input_eg, jnp.int32))
         print(f"{name:28s} max device load {float(out.max_load):8.0f} "
               f"({float(out.max_load)/ideal:5.2f}x ideal)")
 
     # the graph-theoretic certificate (paper Eq. 3): LP optimum == max
-    # induced subgraph density
-    p = latin_placement(ROWS, COLS, EXPERTS)
-    res = solve_lpp1(loads.astype(np.float64),
-                     ScheduleStatics.from_placement(p).dev, g)
-    print(f"\nLP optimum (HiGHS oracle): {res.objective:.1f} tokens "
-          f"= {res.objective/ideal:.3f}x ideal")
+    # induced subgraph density.  schedule_host is the exact HiGHS oracle.
+    eng = MicroEPEngine.build(EXPERTS, (ROWS, COLS), placement="latin")
+    x_opt = eng.schedule_host(input_eg)
+    m = eng.statics  # trace-time replica->device tables, if you need them
+    opt_load = max(
+        x_opt[m.dev == gdev].sum() for gdev in range(g))
+    print(f"\nLP optimum (HiGHS oracle): {opt_load:.1f} tokens "
+          f"= {opt_load/ideal:.3f}x ideal")
     print("MicroEP schedules every micro-batch to this optimum "
           "(+ integer rounding).")
 

@@ -63,11 +63,12 @@ def main():
 
     if args.mesh:
         d, m = (int(v) for v in args.mesh.split("x"))
+        from repro.engine import RuntimeConfig
         from repro.launch import runtime as R
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh(d, m)
-        dr = R.build_runtime(cfg, mesh, dtype=jnp.float32, impl="ref",
-                             remat=False)
+        dr = R.build_runtime(cfg, mesh, RuntimeConfig(
+            dtype="float32", impl="ref", remat=False))
         ts = TrainState(master=master, opt=adamw_init(master),
                         solver=dr.init_solver(), step=jnp.zeros((), jnp.int32))
         step = jax.jit(R.make_train_fn(dr, n_micro=4, opt_cfg=opt_cfg))

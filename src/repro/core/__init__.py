@@ -8,6 +8,13 @@ Layers (bottom-up):
   routing            — Algorithm 1 locality-aware routing, vectorized (§5.2)
   scheduler          — per-micro-batch distributed scheduling (§5.3)
   replacement        — adaptive replacement manager (§6.4)
+
+These are the engine's internals.  Application code constructs and drives
+them through the :class:`repro.engine.MicroEPEngine` facade (see ENGINE.md):
+``ScheduleStatics`` / ``MicroEPScheduler`` are not meant to be assembled by
+hand outside ``repro.core``/``repro.engine`` (grep-enforced), and placement
+strategies are looked up via ``repro.engine.placement_strategies`` rather
+than called directly when a strategy *name* is in play.
 """
 from .placement import (
     Placement,

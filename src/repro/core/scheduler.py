@@ -10,6 +10,10 @@ The flow tensor plus the placement table is everything the dispatcher needs
 to compute send offsets (on the source device) and receive layouts (on the
 destination device) with pure cumsums — both sides derive them from the same
 F, which is why no extra coordination round-trip is needed.
+
+Construction note: ``ScheduleStatics`` and ``MicroEPScheduler`` are engine
+internals.  Code outside ``repro.core``/``repro.engine`` should build them
+through the :class:`repro.engine.MicroEPEngine` facade.
 """
 from __future__ import annotations
 
@@ -87,7 +91,14 @@ class MicroEPScheduler:
         mode: str = "microep",
         sequencing: str = "proportional",
     ):
-        assert mode in ("microep", "vanilla")
+        if mode not in ("microep", "vanilla"):
+            raise ValueError(
+                f"MicroEPScheduler mode={mode!r} is not a registered option; "
+                f"choose one of: microep, vanilla")
+        if sequencing not in ("proportional", "greedy"):
+            raise ValueError(
+                f"MicroEPScheduler sequencing={sequencing!r} is not a "
+                f"registered option; choose one of: proportional, greedy")
         self.statics = statics
         self.sweeps = sweeps
         self.locality = locality
@@ -140,9 +151,6 @@ class MicroEPScheduler:
             state_out = sol
 
         mean = jnp.maximum(dl.mean(), 1e-9)
-        if self.mode == "vanilla":
-            # vanilla already built flow above
-            pass
         return Schedule(
             flow=flow,
             x_int=x_int,

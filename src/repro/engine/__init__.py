@@ -1,0 +1,43 @@
+"""Unified MicroEP engine API: typed configs, strategy registries, and one
+build facade.
+
+This package is the single supported way to construct and drive the
+paper's MicroEP scheduling machinery:
+
+  * :class:`~repro.engine.config.PlacementSpec`,
+    :class:`~repro.engine.config.SchedulePolicy`,
+    :class:`~repro.engine.config.RuntimeConfig` — typed, validated,
+    dict/CLI round-trippable configuration (config.py).
+  * ``register_placement_strategy`` / ``register_baseline_system`` —
+    string-keyed plugin registries (registry.py).
+  * :class:`~repro.engine.engine.MicroEPEngine` — the facade owning
+    placement, schedule statics, scheduler, dispatch statics, and the
+    HiGHS oracle (engine.py).
+
+See ENGINE.md at the repo root for the full tour.
+"""
+# Import order matters: registry and config have no repro.moe dependency and
+# must initialize first so that repro.moe.baselines (pulled in transitively
+# by engine.py via repro.moe.layer) can import the baseline registry while
+# this package is still mid-initialization.
+from .registry import (
+    Registry,
+    RegistryError,
+    placement_strategies,
+    baseline_systems,
+    register_placement_strategy,
+    register_baseline_system,
+    get_placement_strategy,
+    get_baseline_system,
+)
+from .config import ConfigError, PlacementSpec, RuntimeConfig, SchedulePolicy
+from .engine import MicroEPEngine
+
+__all__ = [
+    "Registry", "RegistryError",
+    "placement_strategies", "baseline_systems",
+    "register_placement_strategy", "register_baseline_system",
+    "get_placement_strategy", "get_baseline_system",
+    "ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
+    "MicroEPEngine",
+]

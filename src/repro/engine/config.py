@@ -1,0 +1,313 @@
+"""Typed configuration surface for the MicroEP engine.
+
+Three frozen dataclasses replace the loose string/kwarg policy surface that
+used to be re-declared at every entry point:
+
+  * :class:`PlacementSpec`  — which placement strategy builds the expert
+    placement table (paper §6) and its inputs (seed, historical loads).
+  * :class:`SchedulePolicy` — how each micro-batch is scheduled (paper §5):
+    mode, solver sweeps, locality-aware routing, sequencing.
+  * :class:`RuntimeConfig`  — everything ``launch.runtime.build_runtime``
+    needs beyond (arch config, mesh): the two specs above plus dtype,
+    capacity factor, kernel impl, remat/unroll/layout/seq-parallel knobs.
+
+All three validate in ``__post_init__`` (errors list the accepted options),
+round-trip through ``to_dict``/``from_dict`` (JSON-friendly), and
+``RuntimeConfig`` additionally round-trips through an argparse parser
+(``add_cli_args`` / ``from_cli_args`` / ``to_cli_args``) so train, serve
+and the benches share one flag surface.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig"]
+
+
+class ConfigError(ValueError):
+    """Invalid engine configuration (message lists the accepted options)."""
+
+
+_MODES = ("microep", "vanilla")
+_SEQUENCINGS = ("proportional", "greedy")
+_LAYOUTS = ("scan", "list")
+_IMPLS = ("ref", "interpret", "pallas")
+_DTYPES = ("bfloat16", "float32", "float16")
+
+
+def _check_choice(kind: str, value, options) -> None:
+    if value not in options:
+        raise ConfigError(
+            f"{kind}={value!r} is not a registered option; "
+            f"choose one of: {', '.join(map(str, options))}")
+
+
+def _canonical_dtype(dtype) -> str:
+    """Normalize a dtype given as str / np.dtype / jnp scalar type."""
+    if dtype is None:
+        return "bfloat16"
+    try:
+        name = np.dtype(dtype).name
+    except TypeError:
+        name = str(dtype)
+    _check_choice("dtype", name, _DTYPES)
+    return name
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Which strategy builds the expert placement table (paper §6).
+
+    ``strategy`` is a key of ``repro.engine.placement_strategies`` (built-ins:
+    vanilla / random / latin / asymmetric; extend with
+    ``register_placement_strategy``).  ``loads`` feeds load-aware strategies
+    (§6.3) and is stored as a plain tuple so the spec stays hashable and
+    JSON-serializable.
+    """
+
+    strategy: str = "latin"
+    seed: int = 0
+    loads: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if not isinstance(self.strategy, str) or not self.strategy:
+            raise ConfigError(
+                f"PlacementSpec.strategy must be a non-empty string, "
+                f"got {self.strategy!r}")
+        if not isinstance(self.seed, (int, np.integer)):
+            raise ConfigError(
+                f"PlacementSpec.seed must be an int, got {self.seed!r}")
+        if self.loads is not None:
+            object.__setattr__(
+                self, "loads",
+                tuple(float(v) for v in np.asarray(self.loads).ravel()))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["loads"] is not None:
+            d["loads"] = list(d["loads"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PlacementSpec":
+        return cls(**_known_fields(cls, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePolicy:
+    """Per-micro-batch scheduling policy (paper §5).
+
+    mode       — 'microep' (LP solve + rounding + Alg. 1 routing) or
+                 'vanilla' (no freedom; Megatron EP baseline).
+    sweeps     — Gauss-Seidel sweeps of the in-graph water-filling solver.
+    locality   — Alg. 1 locality-aware routing (local replica first).
+    sequencing — replica fill order inside Alg. 1: 'proportional' | 'greedy'.
+    """
+
+    mode: str = "microep"
+    sweeps: int = 6
+    locality: bool = True
+    sequencing: str = "proportional"
+
+    def __post_init__(self):
+        _check_choice("SchedulePolicy.mode", self.mode, _MODES)
+        _check_choice("SchedulePolicy.sequencing", self.sequencing,
+                      _SEQUENCINGS)
+        if not isinstance(self.sweeps, (int, np.integer)) or self.sweeps < 1:
+            raise ConfigError(
+                f"SchedulePolicy.sweeps must be a positive int, "
+                f"got {self.sweeps!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SchedulePolicy":
+        return cls(**_known_fields(cls, d))
+
+
+# legacy build_runtime(**kwargs) name -> (section, field)
+_LEGACY_KWARGS = {
+    "dtype": (None, "dtype"),
+    "capacity_factor": (None, "capacity_factor"),
+    "impl": (None, "impl"),
+    "remat": (None, "remat"),
+    "unroll": (None, "unroll"),
+    "layout": (None, "layout"),
+    "seq_parallel": (None, "seq_parallel"),
+    "placement_strategy": ("placement", "strategy"),
+    "seed": ("placement", "seed"),
+    "loads": ("placement", "loads"),
+    "mode": ("policy", "mode"),
+    "sweeps": ("policy", "sweeps"),
+    "locality": ("policy", "locality"),
+    "sequencing": ("policy", "sequencing"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Full distributed-runtime configuration (one object, 15 ex-kwargs).
+
+    dtype           — working dtype ('bfloat16' | 'float32' | 'float16';
+                      jnp/np dtypes are normalized to the string name).
+    capacity_factor — per-(src, dst) dispatch chunk head-room (§4).
+    impl            — grouped-FFN kernel: 'ref' | 'interpret' | 'pallas'
+                      (None = kernel default).
+    remat / unroll  — layer-scan rematerialization / unrolling.
+    layout          — parameter stacking: 'scan' (production) | 'list'
+                      (dry-run cost pass).
+    seq_parallel    — sequence-parallel activation sharding.
+    """
+
+    placement: PlacementSpec = PlacementSpec()
+    policy: SchedulePolicy = SchedulePolicy()
+    dtype: str = "bfloat16"
+    capacity_factor: float = 2.0
+    impl: Optional[str] = "ref"
+    remat: bool = True
+    unroll: bool = False
+    layout: str = "scan"
+    seq_parallel: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.placement, str):
+            object.__setattr__(self, "placement",
+                               PlacementSpec(strategy=self.placement))
+        if not isinstance(self.placement, PlacementSpec):
+            raise ConfigError(
+                f"RuntimeConfig.placement must be a PlacementSpec or a "
+                f"strategy name, got {self.placement!r}")
+        if not isinstance(self.policy, SchedulePolicy):
+            raise ConfigError(
+                f"RuntimeConfig.policy must be a SchedulePolicy, "
+                f"got {self.policy!r}")
+        object.__setattr__(self, "dtype", _canonical_dtype(self.dtype))
+        if self.impl is not None:
+            _check_choice("RuntimeConfig.impl", self.impl, _IMPLS)
+        _check_choice("RuntimeConfig.layout", self.layout, _LAYOUTS)
+        if not self.capacity_factor > 0:
+            raise ConfigError(
+                f"RuntimeConfig.capacity_factor must be > 0, "
+                f"got {self.capacity_factor!r}")
+
+    # ------------------------------------------------------------- dtypes
+    @property
+    def jax_dtype(self):
+        import jax.numpy as jnp
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "float16": jnp.float16}[self.dtype]
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["placement"] = self.placement.to_dict()
+        d["policy"] = self.policy.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RuntimeConfig":
+        kw = dict(_known_fields(cls, d))
+        if isinstance(kw.get("placement"), Mapping):
+            kw["placement"] = PlacementSpec.from_dict(kw["placement"])
+        if isinstance(kw.get("policy"), Mapping):
+            kw["policy"] = SchedulePolicy.from_dict(kw["policy"])
+        return cls(**kw)
+
+    # ------------------------------------------------- legacy kwargs shim
+    @classmethod
+    def from_kwargs(cls, **kwargs) -> "RuntimeConfig":
+        """Build from the historical ``build_runtime`` keyword surface
+        (``placement_strategy=``, ``mode=``, ``locality=``, ...)."""
+        top: dict = {}
+        placement: dict = {}
+        policy: dict = {}
+        for k, v in kwargs.items():
+            if k not in _LEGACY_KWARGS:
+                raise ConfigError(
+                    f"unknown build_runtime option {k!r}; accepted options: "
+                    f"{', '.join(sorted(_LEGACY_KWARGS))}")
+            section, field = _LEGACY_KWARGS[k]
+            (top if section is None else
+             placement if section == "placement" else policy)[field] = v
+        return cls(placement=PlacementSpec(**placement),
+                   policy=SchedulePolicy(**policy), **top)
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "RuntimeConfig" = None) -> None:
+        """Install the shared engine flag surface on ``parser``.
+
+        ``defaults`` seeds per-entry-point defaults (train wants float32 +
+        no remat, serving wants bfloat16 + remat, ...).  ``loads`` has no
+        flag: load-aware placement takes measured loads, not CLI literals.
+        """
+        d = defaults if defaults is not None else RuntimeConfig()
+        b = argparse.BooleanOptionalAction
+        g = parser.add_argument_group("MicroEP engine")
+        g.add_argument("--placement", default=d.placement.strategy,
+                       help="placement strategy (registry key; built-ins: "
+                            "vanilla, random, latin, asymmetric)")
+        g.add_argument("--placement-seed", type=int,
+                       default=d.placement.seed)
+        g.add_argument("--mode", default=d.policy.mode, choices=_MODES)
+        g.add_argument("--sweeps", type=int, default=d.policy.sweeps)
+        g.add_argument("--locality", action=b, default=d.policy.locality)
+        g.add_argument("--sequencing", default=d.policy.sequencing,
+                       choices=_SEQUENCINGS)
+        g.add_argument("--dtype", default=d.dtype, choices=_DTYPES)
+        g.add_argument("--capacity-factor", type=float,
+                       default=d.capacity_factor)
+        g.add_argument("--impl", default=d.impl, choices=_IMPLS)
+        g.add_argument("--remat", action=b, default=d.remat)
+        g.add_argument("--unroll", action=b, default=d.unroll)
+        g.add_argument("--layout", default=d.layout, choices=_LAYOUTS)
+        g.add_argument("--seq-parallel", action=b, default=d.seq_parallel)
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "RuntimeConfig":
+        return cls(
+            placement=PlacementSpec(strategy=args.placement,
+                                    seed=args.placement_seed),
+            policy=SchedulePolicy(mode=args.mode, sweeps=args.sweeps,
+                                  locality=args.locality,
+                                  sequencing=args.sequencing),
+            dtype=args.dtype, capacity_factor=args.capacity_factor,
+            impl=args.impl, remat=args.remat, unroll=args.unroll,
+            layout=args.layout, seq_parallel=args.seq_parallel)
+
+    def to_cli_args(self) -> list:
+        """Flag list such that ``from_cli_args(parser.parse_args(...))``
+        reproduces this config (modulo ``loads``, which has no flag)."""
+        flags = [
+            "--placement", self.placement.strategy,
+            "--placement-seed", str(self.placement.seed),
+            "--mode", self.policy.mode,
+            "--sweeps", str(self.policy.sweeps),
+            "--locality" if self.policy.locality else "--no-locality",
+            "--sequencing", self.policy.sequencing,
+            "--dtype", self.dtype,
+            "--capacity-factor", str(self.capacity_factor),
+            "--remat" if self.remat else "--no-remat",
+            "--unroll" if self.unroll else "--no-unroll",
+            "--layout", self.layout,
+            "--seq-parallel" if self.seq_parallel else "--no-seq-parallel",
+        ]
+        if self.impl is not None:
+            flags += ["--impl", self.impl]
+        return flags
+
+
+def _known_fields(cls, d: Mapping[str, Any]) -> dict:
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ConfigError(
+            f"unknown {cls.__name__} field(s) {sorted(unknown)}; "
+            f"accepted fields: {', '.join(sorted(names))}")
+    return {k: d[k] for k in d}

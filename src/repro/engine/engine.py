@@ -1,0 +1,191 @@
+"""The MicroEP engine facade — the single construction path for the paper's
+pipeline (placement → LP schedule → rounding → Alg. 1 routing → dispatch).
+
+Everything that used to be hand-wired at every call site
+(``ScheduleStatics.from_placement`` + ``MicroEPScheduler(...)`` +
+``build_statics(...)`` + ``MoEFFNSpec(...)``) is owned by one object::
+
+    from repro.engine import MicroEPEngine, SchedulePolicy
+
+    eng = MicroEPEngine.build(num_experts=32, grid=(4, 4),
+                              placement="latin",
+                              policy=SchedulePolicy(sweeps=8))
+    out = eng.schedule(input_eg)            # per-micro-batch Schedule
+    spec = eng.moe_spec(tokens_per_device=256, top_k=2)   # MoE FFN layer
+    x_opt = eng.schedule_host(input_eg)     # HiGHS oracle (paper §5.1)
+
+No module outside ``repro.engine`` (and ``repro.core`` internals) should
+construct ``ScheduleStatics`` or ``MicroEPScheduler`` directly — a grep
+test enforces this.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from ..core.placement import Placement
+from ..core.scheduler import MicroEPScheduler, Schedule, ScheduleStatics
+from ..core.solver_jax import SolverState
+from ..moe import dispatch as D
+from ..moe.layer import MoEFFNSpec
+from .config import ConfigError, PlacementSpec, RuntimeConfig, SchedulePolicy
+from .registry import placement_strategies
+
+__all__ = ["MicroEPEngine"]
+
+PlacementLike = Union[PlacementSpec, Placement, str, None]
+PolicyLike = Union[SchedulePolicy, str, None]
+
+
+class MicroEPEngine:
+    """One MicroEP group's scheduling machinery, fully assembled.
+
+    Owns the placement table, the trace-time :class:`ScheduleStatics`, the
+    per-micro-batch :class:`MicroEPScheduler`, and (lazily, cached) the
+    dispatch statics per token geometry.  Construct via :meth:`build` or
+    :meth:`from_config`; never assemble the parts by hand.
+    """
+
+    def __init__(self, placement: Placement, policy: SchedulePolicy,
+                 statics: ScheduleStatics, scheduler: MicroEPScheduler):
+        self.placement = placement
+        self.policy = policy
+        self.statics = statics
+        self.scheduler = scheduler
+        self._dispatch_cache: dict = {}
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(
+        cls,
+        num_experts: int,
+        grid: Tuple[int, int],
+        placement: PlacementLike = None,
+        policy: PolicyLike = None,
+    ) -> "MicroEPEngine":
+        """Assemble an engine for ``num_experts`` experts on a (rows, cols)
+        device grid.
+
+        ``placement`` may be a :class:`PlacementSpec`, a strategy name from
+        the registry, a pre-built :class:`Placement` table (e.g. from the
+        adaptive replacement manager), or None (spec default).  ``policy``
+        may be a :class:`SchedulePolicy`, a mode name ('microep' |
+        'vanilla'), or None (policy default).
+        """
+        rows, cols = grid
+        if isinstance(policy, str):
+            policy = SchedulePolicy(mode=policy)
+        elif policy is None:
+            policy = SchedulePolicy()
+        if not isinstance(policy, SchedulePolicy):
+            raise ConfigError(
+                f"policy must be a SchedulePolicy or mode name, "
+                f"got {policy!r}")
+
+        if isinstance(placement, Placement):
+            table = placement
+            if table.rows != rows or table.cols != cols or \
+                    table.num_experts != num_experts:
+                raise ConfigError(
+                    f"pre-built placement is {table.rows}x{table.cols} with "
+                    f"{table.num_experts} experts; engine asked for "
+                    f"{rows}x{cols} with {num_experts}")
+        else:
+            if isinstance(placement, str):
+                placement = PlacementSpec(strategy=placement)
+            elif placement is None:
+                placement = PlacementSpec()
+            if not isinstance(placement, PlacementSpec):
+                raise ConfigError(
+                    f"placement must be a PlacementSpec, strategy name, or "
+                    f"Placement, got {placement!r}")
+            strategy = placement_strategies.get(placement.strategy)
+            table = strategy(rows, cols, num_experts,
+                             seed=placement.seed, loads=placement.loads)
+
+        statics = ScheduleStatics.from_placement(table)
+        scheduler = MicroEPScheduler(
+            statics, sweeps=policy.sweeps, locality=policy.locality,
+            mode=policy.mode, sequencing=policy.sequencing)
+        return cls(table, policy, statics, scheduler)
+
+    @classmethod
+    def from_config(cls, num_experts: int, grid: Tuple[int, int],
+                    config: RuntimeConfig) -> "MicroEPEngine":
+        return cls.build(num_experts, grid, placement=config.placement,
+                         policy=config.policy)
+
+    # -------------------------------------------------------- geometry
+    @property
+    def num_experts(self) -> int:
+        return self.placement.num_experts
+
+    @property
+    def num_devices(self) -> int:
+        return self.placement.num_devices
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (self.placement.rows, self.placement.cols)
+
+    @property
+    def max_replicas(self) -> int:
+        return self.statics.max_replicas
+
+    # ------------------------------------------------------- scheduling
+    def schedule(self, input_eg: jax.Array,
+                 state: Optional[SolverState] = None) -> Schedule:
+        """Schedule one micro-batch: int32[E, G] counts -> Schedule
+        (flow tensor, integer replica loads, warm-start carry)."""
+        return self.scheduler(input_eg, state)
+
+    def init_state(self) -> SolverState:
+        """Zero warm-start carry for the first micro-batch."""
+        return self.scheduler.init_state()
+
+    def schedule_host(self, input_eg: np.ndarray) -> np.ndarray:
+        """Exact fractional solve with HiGHS on the host (paper §5.1).
+        The oracle tests/benches compare the in-graph solver against."""
+        return self.scheduler.schedule_host(input_eg)
+
+    # --------------------------------------------------------- dispatch
+    def dispatch_statics(self, tokens_per_device: int, top_k: int,
+                         capacity_factor: float = 2.0,
+                         bm: int = 128) -> D.DispatchStatics:
+        """Trace-time dispatch constants for one token geometry (cached —
+        safe to call per jit trace)."""
+        key = (tokens_per_device, top_k, capacity_factor, bm)
+        out = self._dispatch_cache.get(key)
+        if out is None:
+            out = D.build_statics(self.statics, tokens_per_device, top_k,
+                                  capacity_factor=capacity_factor, bm=bm)
+            self._dispatch_cache[key] = out
+        return out
+
+    def moe_spec(
+        self,
+        tokens_per_device: int,
+        top_k: int,
+        *,
+        activation: str = "swiglu",
+        group_axes: tuple = (),
+        capacity_factor: float = 2.0,
+        bm: int = 128,
+        kernel_impl: Optional[str] = None,
+        tp_axis: Optional[str] = None,
+    ) -> MoEFFNSpec:
+        """Static spec for ``moe_ffn`` (one MoE layer on this group)."""
+        statics = self.dispatch_statics(tokens_per_device, top_k,
+                                        capacity_factor, bm)
+        return MoEFFNSpec(statics=statics, scheduler=self.scheduler,
+                          top_k=top_k, activation=activation,
+                          group_axes=group_axes, tp_axis=tp_axis,
+                          kernel_impl=kernel_impl)
+
+    def __repr__(self) -> str:
+        r, c = self.grid
+        return (f"MicroEPEngine({self.num_experts} experts on {r}x{c}, "
+                f"mode={self.policy.mode!r}, "
+                f"slots={self.placement.slots})")

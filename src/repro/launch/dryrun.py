@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ASSIGNED, PAPER, SHAPES, get_config
+from ..engine import RuntimeConfig
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..train.loop import TrainState
 from . import analysis as A
@@ -109,7 +110,8 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
               **(extra or {}))
 
     # pass 1: scanned (memory)
-    dr_scan = R.build_runtime(cfg, mesh, unroll=False, **kw)
+    dr_scan = R.build_runtime(
+        cfg, mesh, RuntimeConfig.from_kwargs(unroll=False, **kw))
     c_scan = _lower_compile(dr_scan, cfg, shape, shape_name,
                             N_MICRO_SCAN.get(shape_name, 8),
                             grad_rs=grad_rs)
@@ -141,8 +143,9 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             # ~1.4 %/layer flops, ~6 %/layer bytes); flat layouts keep the
             # per-layer cost constant so the linear fit is exact.
             cfg_l = dataclasses.replace(cfg, num_layers=num_layers)
-            dr_u = R.build_runtime(cfg_l, mesh, unroll=True, layout="list",
-                                   **kw)
+            dr_u = R.build_runtime(
+                cfg_l, mesh,
+                RuntimeConfig.from_kwargs(unroll=True, layout="list", **kw))
             c = _lower_compile(dr_u, cfg_l, shape, shape_name, n_micro,
                                grad_rs=grad_rs)
             return A.raw_costs(c)

@@ -23,13 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import SHAPES, get_config
+from ..engine import RuntimeConfig
 from . import analysis as A
 from . import runtime as R
 from .dryrun import _lower_compile
 from .mesh import make_production_mesh
 
 VARIANTS = {
-    # name -> (build_runtime extra kwargs, grad_rs flag)
+    # name -> (RuntimeConfig overrides in legacy-kwarg form, grad_rs flag)
     "base": ({}, False),
     "grad_rs": ({}, True),
     "seq_parallel": ({"seq_parallel": True}, False),
@@ -51,9 +52,10 @@ def run_variant(arch, shape_name, depth, name, n_micro=1):
     cfg_l = dataclasses.replace(cfg, num_layers=depth)
     mesh = make_production_mesh()
     t0 = time.perf_counter()
-    dr = R.build_runtime(cfg_l, mesh, dtype=jnp.bfloat16, impl="ref",
-                         unroll=True, layout="list", remat=True,
-                         **extra)
+    run_cfg = RuntimeConfig.from_kwargs(
+        dtype=jnp.bfloat16, impl="ref", unroll=True, layout="list",
+        remat=True, **extra)
+    dr = R.build_runtime(cfg_l, mesh, run_cfg)
     c = _lower_compile(dr, cfg_l, shape, shape_name, n_micro,
                        grad_rs=grad_rs)
     rc = A.raw_costs(c)

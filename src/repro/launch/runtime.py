@@ -1,5 +1,11 @@
 """Distributed runtime: wires the decoder to a mesh.
 
+Construction goes through the engine API: ``build_runtime(cfg, mesh,
+RuntimeConfig(...))`` builds one :class:`repro.engine.MicroEPEngine` per
+MicroEP group (placement, statics, scheduler, dispatch statics) and installs
+its ``moe_spec`` in the shard_map island below; the legacy keyword surface
+is a shim over :meth:`RuntimeConfig.from_kwargs`.
+
 GSPMD (jit + sharding constraints) distributes everything EXCEPT the MoE
 dispatch; the paper's contribution — per-micro-batch LP scheduling + token
 dispatch across the MicroEP group — runs as an explicit ``shard_map`` island
@@ -28,14 +34,14 @@ from jax.experimental.shard_map import shard_map
 
 from .. import sharding as sh
 from ..configs.base import ArchConfig, InputShape
-from ..core.placement import (Placement, latin_placement, random_placement,
-                              vanilla_placement, asymmetric_placement)
-from ..core.scheduler import MicroEPScheduler, ScheduleStatics
+from ..core.placement import Placement
+from ..core.scheduler import ScheduleStatics
 from ..core.solver_jax import SolverState
 from ..data.synthetic import frontend_stub_batch
+from ..engine import (ConfigError, MicroEPEngine, PlacementSpec,
+                      RuntimeConfig, SchedulePolicy, placement_strategies)
 from ..models import decoder as dec
-from ..moe import dispatch as D
-from ..moe.layer import MoEFFNSpec, MoEMetrics, moe_ffn
+from ..moe.layer import MoEMetrics, moe_ffn
 from ..moe.router import top_k_gating
 from ..optim.adamw import AdamWConfig
 from ..train.loop import LayoutHooks, TrainState, make_train_step
@@ -46,19 +52,13 @@ __all__ = ["DistRuntime", "build_runtime", "make_placement", "input_specs"]
 def make_placement(cfg: ArchConfig, mi: sh.MeshInfo,
                    strategy: str = "latin", seed: int = 0,
                    loads: Optional[np.ndarray] = None) -> Placement:
-    """Expert placement over the (data × model) grid (paper §6)."""
+    """Expert placement over the (data × model) grid (paper §6).
+
+    Thin wrapper over the engine's placement-strategy registry; ``strategy``
+    is any registered key (built-ins: vanilla, random, latin, asymmetric)."""
     e_virt = cfg.num_experts * max(cfg.etp, 1)
-    rows, cols = mi.data, mi.model
-    if strategy == "vanilla":
-        return vanilla_placement(rows, cols, e_virt)
-    if strategy == "random":
-        return random_placement(rows, cols, e_virt, seed=seed)
-    if strategy == "latin":
-        return latin_placement(rows, cols, e_virt)
-    if strategy == "asymmetric":
-        assert loads is not None, "asymmetric placement needs expert loads"
-        return asymmetric_placement(rows, cols, e_virt, loads, seed=seed)
-    raise ValueError(strategy)
+    fn = placement_strategies.get(strategy)
+    return fn(mi.data, mi.model, e_virt, seed=seed, loads=loads)
 
 
 @dataclasses.dataclass
@@ -70,12 +70,21 @@ class DistRuntime:
     mi: sh.MeshInfo
     rt: dec.Runtime                   # decoder runtime (moe island installed)
     hooks: LayoutHooks                # master -> working transform
-    placement: Optional[Placement]
-    sched_statics: Optional[ScheduleStatics]
+    engine: Optional[MicroEPEngine]   # MicroEP machinery (None for dense)
+    config: RuntimeConfig             # the full typed configuration
     capacity_factor: float
     mode: str                          # "microep" | "vanilla"
     dtype: Any
     layout: str = "scan"               # "scan" | "list" (dry-run cost pass)
+
+    # -------- engine-derived views (kept for existing consumers) ---------
+    @property
+    def placement(self) -> Optional[Placement]:
+        return self.engine.placement if self.engine is not None else None
+
+    @property
+    def sched_statics(self) -> Optional[ScheduleStatics]:
+        return self.engine.statics if self.engine is not None else None
 
     # ---------------- abstract shapes for lowering ----------------------
     def master_sds(self):
@@ -146,25 +155,13 @@ def _init_solver(cfg: ArchConfig, pods: int, e_virt: int, r: int,
 
 
 def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
-                     sched_statics: ScheduleStatics,
-                     mode: str, capacity_factor: float,
-                     impl: Optional[str], locality: bool = True,
-                     sweeps: int = 6, sequencing: str = "proportional",
-                     comm_alpha: float = 0.0):
+                     engine: MicroEPEngine, config: RuntimeConfig):
     etp = max(cfg.etp, 1)
     top_k_eff = cfg.top_k * etp
     act = "swiglu" if cfg.ffn_kind == "gelu_mlp" else cfg.ffn_kind
     group_axes = ("data", "model")
     all_axes = (("pod",) if mi.has_pod else ()) + group_axes
     total_dev = mi.group_size * mi.pods
-    scheduler = MicroEPScheduler(sched_statics, sweeps=sweeps,
-                                 locality=locality, mode=mode,
-                                 sequencing=sequencing)
-
-    @functools.lru_cache(maxsize=8)
-    def statics_for(tokens_per_device: int) -> D.DispatchStatics:
-        return D.build_statics(sched_statics, tokens_per_device,
-                               top_k_eff, capacity_factor, bm=128)
 
     def moe_apply(p_moe, x2d, state):
         n, h = x2d.shape
@@ -175,10 +172,10 @@ def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
                 [x2d, jnp.zeros((pad, h), x2d.dtype)], axis=0)
         valid = jnp.arange(npad) < n
         t_local = npad // total_dev
-        spec = MoEFFNSpec(
-            statics=statics_for(t_local), scheduler=scheduler,
-            top_k=top_k_eff, activation=act, group_axes=group_axes,
-            kernel_impl=impl)
+        spec = engine.moe_spec(
+            t_local, top_k_eff, activation=act, group_axes=group_axes,
+            capacity_factor=config.capacity_factor,
+            kernel_impl=config.impl)
 
         def inner(w_router, experts, x_loc, st_loc, valid_loc):
             experts_loc = jax.tree_util.tree_map(lambda w: w[0, 0], experts)
@@ -249,38 +246,51 @@ def _build_hooks(cfg: ArchConfig, mi: sh.MeshInfo,
 def build_runtime(
     cfg: ArchConfig,
     mesh: Mesh,
-    dtype=jnp.bfloat16,
-    placement_strategy: str = "latin",
-    mode: str = "microep",
-    capacity_factor: float = 2.0,
-    impl: Optional[str] = "ref",
-    remat: bool = True,
-    locality: bool = True,
-    seed: int = 0,
-    loads: Optional[np.ndarray] = None,
-    unroll: bool = False,
-    sweeps: int = 6,
-    sequencing: str = "proportional",
-    layout: str = "scan",
-    seq_parallel: bool = False,
+    config: Optional[RuntimeConfig] = None,
+    **legacy_kwargs,
 ) -> DistRuntime:
+    """Build the distributed runtime for one (arch config, mesh) pair.
+
+    Preferred form::
+
+        build_runtime(cfg, mesh, RuntimeConfig(
+            placement=PlacementSpec("latin"),
+            policy=SchedulePolicy(mode="microep"), dtype="float32"))
+
+    The historical keyword surface (``dtype=``, ``placement_strategy=``,
+    ``mode=``, ``capacity_factor=``, ...) keeps working as a shim and maps
+    onto :meth:`RuntimeConfig.from_kwargs`.
+    """
+    if config is None:
+        config = RuntimeConfig.from_kwargs(**legacy_kwargs)
+    elif not isinstance(config, RuntimeConfig):
+        raise ConfigError(
+            f"build_runtime(config=...) must be a RuntimeConfig, "
+            f"got {config!r}")
+    elif legacy_kwargs:
+        raise ConfigError(
+            f"pass either a RuntimeConfig or legacy keyword options, not "
+            f"both (got extra {sorted(legacy_kwargs)})")
     mi = sh.MeshInfo(mesh)
-    placement = sched_st = moe_apply = None
+    engine = moe_apply = None
     if cfg.moe:
-        placement = make_placement(cfg, mi, placement_strategy, seed, loads)
-        sched_st = ScheduleStatics.from_placement(placement)
-        moe_apply = _build_moe_apply(cfg, mi, sched_st, mode,
-                                     capacity_factor, impl,
-                                     locality=locality, sweeps=sweeps,
-                                     sequencing=sequencing)
+        e_virt = cfg.num_experts * max(cfg.etp, 1)
+        engine = MicroEPEngine.from_config(e_virt, (mi.data, mi.model),
+                                           config)
+        moe_apply = _build_moe_apply(cfg, mi, engine, config)
     rt = dec.Runtime(moe_apply=moe_apply,
-                     shard=sh.act_constraint(mi, seq_parallel=seq_parallel),
-                     impl=impl, remat=remat, unroll=unroll)
-    hooks = _build_hooks(cfg, mi, placement, dtype)
+                     shard=sh.act_constraint(
+                         mi, seq_parallel=config.seq_parallel),
+                     impl=config.impl, remat=config.remat,
+                     unroll=config.unroll)
+    hooks = _build_hooks(cfg, mi,
+                         engine.placement if engine is not None else None,
+                         config.jax_dtype)
     return DistRuntime(cfg=cfg, mesh=mesh, mi=mi, rt=rt, hooks=hooks,
-                       placement=placement, sched_statics=sched_st,
-                       capacity_factor=capacity_factor, mode=mode,
-                       dtype=dtype, layout=layout)
+                       engine=engine, config=config,
+                       capacity_factor=config.capacity_factor,
+                       mode=config.policy.mode,
+                       dtype=config.jax_dtype, layout=config.layout)
 
 
 # --------------------------------------------------------------------------

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config
 from ..data.synthetic import make_batch
+from ..engine import RuntimeConfig
 from ..models import decoder as dec
 from . import runtime as R
 from .mesh import make_local_mesh
@@ -28,7 +29,11 @@ def main(argv=None):
     ap.add_argument("--data-axis", type=int, default=0)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # shared engine flag surface (same parser as train/bench)
+    RuntimeConfig.add_cli_args(
+        ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     args = ap.parse_args(argv)
+    run_cfg = RuntimeConfig.from_cli_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -38,8 +43,7 @@ def main(argv=None):
     rt = dec.Runtime(impl="ref")
     if args.data_axis > 0:
         mesh = make_local_mesh(args.data_axis, args.model_axis)
-        dr = R.build_runtime(cfg, mesh, dtype=jnp.float32, impl="ref",
-                             remat=False)
+        dr = R.build_runtime(cfg, mesh, run_cfg)
         params = dr.hooks.to_working(params)
         rt = dr.rt
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from ..checkpoint import save_checkpoint
 from ..configs import get_config
 from ..data.synthetic import SyntheticLM
+from ..engine import RuntimeConfig
 from ..models import decoder as dec
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..optim.schedule import warmup_cosine
@@ -42,13 +43,15 @@ def main(argv=None):
                     help="0 = single device (no mesh)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--placement", default="latin")
-    ap.add_argument("--mode", default="microep",
-                    choices=["microep", "vanilla"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--csv", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    # shared engine flag surface (same parser as serve/bench): CPU-scale
+    # training defaults to float32 master math without remat
+    RuntimeConfig.add_cli_args(
+        ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     args = ap.parse_args(argv)
+    run_cfg = RuntimeConfig.from_cli_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -61,9 +64,7 @@ def main(argv=None):
     if args.production_mesh or args.data_axis > 0:
         mesh = (make_production_mesh() if args.production_mesh
                 else make_local_mesh(args.data_axis, args.model_axis))
-        dr = R.build_runtime(cfg, mesh, dtype=jnp.float32, impl="ref",
-                             mode=args.mode,
-                             placement_strategy=args.placement, remat=False)
+        dr = R.build_runtime(cfg, mesh, run_cfg)
         master = dec.init_params(key, cfg, jnp.float32)
         ts = TrainState(master=master, opt=adamw_init(master),
                         solver=dr.init_solver() if cfg.moe else None,

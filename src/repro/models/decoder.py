@@ -29,10 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.placement import vanilla_placement
-from ..core.scheduler import MicroEPScheduler, ScheduleStatics
 from ..core.solver_jax import SolverState
-from ..moe import dispatch as D
+from ..engine import MicroEPEngine
 from ..moe.experts import ExpertParams, init_canonical_experts
 from ..moe.layer import MoEFFNSpec, MoEMetrics, moe_ffn
 from ..moe.router import top_k_gating
@@ -249,17 +247,16 @@ def expand_router_etp(r, etp: int):
 
 
 @functools.lru_cache(maxsize=32)
+def _local_moe_engine(num_virtual: int) -> MicroEPEngine:
+    """Degenerate single-device MicroEP group (G=1): all slots local."""
+    return MicroEPEngine.build(num_virtual, (1, 1), placement="vanilla")
+
+
 def _local_moe_spec(num_virtual: int, top_k_eff: int, tokens: int,
                     activation: str, impl: Optional[str]) -> MoEFFNSpec:
-    """Degenerate single-device MicroEP group (G=1): all slots local."""
-    placement = vanilla_placement(1, 1, num_virtual)
-    sched = ScheduleStatics.from_placement(placement)
-    statics = D.build_statics(sched, tokens_per_device=tokens,
-                              top_k=top_k_eff, capacity_factor=2.0, bm=8)
-    scheduler = MicroEPScheduler(sched, mode="microep")
-    return MoEFFNSpec(statics=statics, scheduler=scheduler, top_k=top_k_eff,
-                      activation=activation, group_axes=(),
-                      kernel_impl=impl or "ref")
+    return _local_moe_engine(num_virtual).moe_spec(
+        tokens, top_k_eff, activation=activation, group_axes=(),
+        capacity_factor=2.0, bm=8, kernel_impl=impl or "ref")
 
 
 def local_moe_apply(p_moe, x2d, cfg: ArchConfig, state, impl=None,

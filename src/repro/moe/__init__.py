@@ -1,4 +1,16 @@
-"""Distributed MoE stack: router, dispatch (EP/MicroEP), experts, sync."""
+"""Distributed MoE stack: router, dispatch (EP/MicroEP), experts, sync.
+
+The dispatch/layer machinery here is driven through the engine facade:
+``repro.engine.MicroEPEngine.moe_spec(...)`` builds the ``MoEFFNSpec`` that
+``moe_ffn`` consumes (see ENGINE.md) — call sites never assemble dispatch
+statics or schedulers by hand.  Baseline systems (§7.1) self-register into
+``repro.engine.baseline_systems`` (``SYSTEMS`` is a live alias); add new
+ones with ``repro.engine.register_baseline_system``.
+
+NOTE: ``.baselines`` must stay the *last* import below — it pulls in
+``repro.engine``, which imports ``.layer``/``.dispatch`` back from this
+partially-initialized package.
+"""
 from .router import top_k_gating, zipf_gating, RouterOut
 from .experts import (
     ExpertParams,

@@ -24,7 +24,13 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..engine.registry import baseline_systems, register_baseline_system
+
 __all__ = ["baseline_max_load", "SYSTEMS"]
+
+# Backwards-compatible alias: the old ad-hoc dict is now the live plugin
+# registry (a read-only Mapping — register via register_baseline_system).
+SYSTEMS = baseline_systems
 
 
 def _greedy_pack(loads: np.ndarray, num_devices: int, slots: int) -> float:
@@ -40,18 +46,21 @@ def _greedy_pack(loads: np.ndarray, num_devices: int, slots: int) -> float:
     return float(dev.max())
 
 
+@register_baseline_system("megatron")
 def megatron(loads, num_devices, slots, hist=None):
     e = len(loads)
     dev = loads.reshape(num_devices, e // num_devices).sum(axis=1)
     return float(dev.max()), 0.0
 
 
+@register_baseline_system("deepspeed")
 def deepspeed_pad(loads, num_devices, slots, hist=None):
     e = len(loads)
     k = e // num_devices
     return float(k * loads.max()), 0.0
 
 
+@register_baseline_system("gshard")
 def gshard_drop(loads, num_devices, slots, hist=None, cf: float = 1.25):
     e = len(loads)
     capacity = cf * loads.sum() / e
@@ -61,6 +70,7 @@ def gshard_drop(loads, num_devices, slots, hist=None, cf: float = 1.25):
     return float(dev.max()), dropped
 
 
+@register_baseline_system("smartmoe")
 def smartmoe(loads, num_devices, slots, hist=None):
     """Placement chosen on historical loads, evaluated on current loads."""
     basis = hist if hist is not None else loads
@@ -78,6 +88,7 @@ def smartmoe(loads, num_devices, slots, hist=None):
     return float(cur.max()), 0.0
 
 
+@register_baseline_system("flexmoe")
 def flexmoe(loads, num_devices, slots, hist=None):
     """Adaptive replica counts on historical loads; replicas share evenly."""
     basis = np.asarray(hist if hist is not None else loads, dtype=np.float64)
@@ -97,17 +108,10 @@ def flexmoe(loads, num_devices, slots, hist=None):
     return _greedy_pack(rep_loads, num_devices, slots), 0.0
 
 
-SYSTEMS = {
-    "megatron": megatron,
-    "deepspeed": deepspeed_pad,
-    "gshard": gshard_drop,
-    "smartmoe": smartmoe,
-    "flexmoe": flexmoe,
-}
-
-
 def baseline_max_load(system: str, loads: np.ndarray, num_devices: int,
                       slots: int, hist: np.ndarray | None = None):
-    """Returns (max device load, dropped-token fraction)."""
-    return SYSTEMS[system](np.asarray(loads, np.float64), num_devices, slots,
-                           hist=hist)
+    """Returns (max device load, dropped-token fraction).  ``system`` is a
+    key of the baseline-system registry (unknown keys raise RegistryError
+    listing the registered options)."""
+    fn = baseline_systems.get(system)
+    return fn(np.asarray(loads, np.float64), num_devices, slots, hist=hist)

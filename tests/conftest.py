@@ -1,19 +1,29 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
 multi-device behaviour is exercised via subprocess tests (test_distributed)
-so the device count stays per-process."""
+so the device count stays per-process.
+
+``hypothesis`` is optional (the ``test`` extra): property-based tests skip
+cleanly when it is absent — see hypothesis_compat.py.
+"""
+import os
+
 import jax
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# single-CPU-core container: a leaner default profile keeps the full suite
-# affordable; crank with HYPOTHESIS_PROFILE=thorough for deeper sweeps
-settings.register_profile(
-    "fast", max_examples=15, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.register_profile("thorough", max_examples=100, deadline=None)
-import os
-settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "fast"))
+from hypothesis_compat import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, settings
+
+    # single-CPU-core container: a leaner default profile keeps the full
+    # suite affordable; crank with HYPOTHESIS_PROFILE=thorough for deeper
+    # sweeps
+    settings.register_profile(
+        "fast", max_examples=15, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("thorough", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "fast"))
 
 
 @pytest.fixture

@@ -108,8 +108,7 @@ for mode in ("microep", "vanilla"):
     # own gate on a crafted input is hard - instead measure schedule balance
     # through the metrics of a real call (router at init is ~uniform), then
     # through the scheduler directly for the skewed load:
-    from repro.core.scheduler import MicroEPScheduler
-    sched = MicroEPScheduler(dr.sched_statics, mode=mode)
+    sched = dr.engine.scheduler
     loads = np.asarray(jax.random.categorical(
         jax.random.fold_in(key, 2),
         jnp.log(jnp.arange(1, cfg.num_experts + 1.) ** -1.0)[None].repeat(n, 0)))
@@ -121,9 +120,10 @@ for mode in ("microep", "vanilla"):
 print(bal)
 assert bal["microep"] <= bal["vanilla"] + 1e-6
 # 8 devices x 8 experts (k=2 slots) at Zipf s=1.0: MicroEP stays well
-# below vanilla's ~2.2x; the LP optimum itself is ~1.3x at this tiny
-# geometry (integer effects), so assert the band rather than perfection
-assert bal["microep"] < 1.5
+# below vanilla's ~2.28x.  The HiGHS LP optimum for this exact load draw
+# is 1.539x (engine.schedule_host) — the in-graph solver + rounding land
+# on 1.547x — so assert a band just above the true optimum.
+assert bal["microep"] < 1.6
 print("OK")
 """)
 

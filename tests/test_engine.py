@@ -1,0 +1,380 @@
+"""The unified engine API: registries, typed configs, the MicroEPEngine
+facade, and the architectural guard that nothing outside ``repro.engine`` /
+``repro.core`` hand-wires the scheduling machinery.
+
+This file is the ONE place allowed to construct ``ScheduleStatics`` /
+``MicroEPScheduler`` directly outside core/engine — the legacy hand-wired
+path lives here solely as the reference for the bit-identical equivalence
+tests (and the grep guard below excludes this file for that reason).
+"""
+import argparse
+import json
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.placement import latin_placement
+from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
+from repro.engine import (ConfigError, MicroEPEngine, PlacementSpec,
+                          Registry, RegistryError, RuntimeConfig,
+                          SchedulePolicy, baseline_systems,
+                          placement_strategies, register_placement_strategy)
+from repro.moe import dispatch as D
+from repro.moe.baselines import baseline_max_load
+from repro.moe.layer import MoEFFNSpec
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------- registries
+
+
+def test_registry_register_lookup_and_unknown_key():
+    reg = Registry("test thing")
+
+    @reg.register("alpha")
+    def alpha():
+        return "a"
+
+    reg.register("beta", lambda: "b")
+    assert reg.get("alpha") is alpha
+    assert reg["beta"]() == "b"
+    assert reg.names() == ("alpha", "beta")
+    assert "alpha" in reg and len(reg) == 2
+    with pytest.raises(RegistryError) as ei:
+        reg.get("gamma")
+    # the error lists every registered option
+    assert "alpha" in str(ei.value) and "beta" in str(ei.value)
+    # dict-style consumers keep dict semantics on unknown keys
+    assert "gamma" not in reg
+    assert reg.get("gamma", None) is None
+    assert reg.get("beta", None)() == "b"
+    with pytest.raises(RegistryError):
+        reg["gamma"]
+
+
+def test_registry_duplicate_and_override():
+    reg = Registry("test thing")
+    reg.register("x", lambda: 1)
+    with pytest.raises(RegistryError, match="already registered"):
+        reg.register("x", lambda: 2)
+    reg.register("x", lambda: 2, override=True)
+    assert reg.get("x")() == 2
+    with pytest.raises(RegistryError):
+        reg.register("", lambda: 3)
+
+
+def test_builtin_placement_strategies_registered():
+    assert {"vanilla", "random", "latin", "asymmetric"} <= set(
+        placement_strategies.names())
+    p = placement_strategies.get("latin")(2, 4, 8)
+    assert p.num_devices == 8
+    # asymmetric without loads: actionable error
+    with pytest.raises(RegistryError, match="loads"):
+        placement_strategies.get("asymmetric")(2, 4, 8)
+
+
+def test_custom_placement_strategy_plugs_into_engine():
+    @register_placement_strategy("test-reversed-latin")
+    def reversed_latin(rows, cols, num_experts, *, seed=0, loads=None):
+        p = latin_placement(rows, cols, num_experts)
+        return type(p)(p.table[::-1].copy(), num_experts)
+
+    try:
+        eng = MicroEPEngine.build(8, (2, 4),
+                                  placement="test-reversed-latin")
+        ref = latin_placement(2, 4, 8)
+        np.testing.assert_array_equal(eng.placement.table,
+                                      ref.table[::-1])
+        out = eng.schedule(jnp.ones((8, 8), jnp.int32))
+        assert np.isfinite(float(out.max_load))
+    finally:
+        placement_strategies.unregister("test-reversed-latin")
+
+
+def test_baseline_system_registry():
+    assert {"megatron", "deepspeed", "gshard", "smartmoe", "flexmoe"} <= set(
+        baseline_systems.names())
+    m, dropped = baseline_max_load("megatron", np.ones(8), 4, 2)
+    assert m == 2.0 and dropped == 0.0
+    with pytest.raises(RegistryError, match="megatron"):
+        baseline_max_load("nope", np.ones(8), 4, 2)
+    # legacy alias is the live registry
+    from repro.moe.baselines import SYSTEMS
+    assert SYSTEMS is baseline_systems
+
+
+# -------------------------------------------------------------- typed config
+
+
+def test_schedule_policy_validation_lists_options():
+    with pytest.raises(ConfigError, match="microep"):
+        SchedulePolicy(mode="magic")
+    with pytest.raises(ConfigError, match="proportional"):
+        SchedulePolicy(sequencing="alphabetical")
+    with pytest.raises(ConfigError, match="sweeps"):
+        SchedulePolicy(sweeps=0)
+
+
+def test_placement_spec_validation_and_loads_normalization():
+    with pytest.raises(ConfigError):
+        PlacementSpec(strategy="")
+    with pytest.raises(ConfigError):
+        PlacementSpec(seed="zero")
+    spec = PlacementSpec(strategy="asymmetric",
+                         loads=np.arange(4, dtype=np.float32))
+    assert spec.loads == (0.0, 1.0, 2.0, 3.0)
+    assert hash(spec)  # stays hashable with array-ish loads
+
+
+def test_runtime_config_validation():
+    with pytest.raises(ConfigError, match="layout"):
+        RuntimeConfig(layout="stacked")
+    with pytest.raises(ConfigError, match="dtype"):
+        RuntimeConfig(dtype="float64")
+    with pytest.raises(ConfigError, match="capacity_factor"):
+        RuntimeConfig(capacity_factor=0.0)
+    with pytest.raises(ConfigError, match="impl"):
+        RuntimeConfig(impl="cuda")
+    # jnp dtypes normalize to the canonical string name
+    assert RuntimeConfig(dtype=jnp.bfloat16).dtype == "bfloat16"
+    assert RuntimeConfig(dtype=jnp.float32).jax_dtype == jnp.float32
+    # a bare strategy string is promoted to a PlacementSpec
+    assert RuntimeConfig(placement="random").placement == \
+        PlacementSpec(strategy="random")
+
+
+@pytest.mark.parametrize("cfg", [
+    RuntimeConfig(),
+    RuntimeConfig(placement=PlacementSpec("random", seed=3),
+                  policy=SchedulePolicy(mode="vanilla", sweeps=2,
+                                        locality=False,
+                                        sequencing="greedy"),
+                  dtype="float32", capacity_factor=1.25, impl="interpret",
+                  remat=False, unroll=True, layout="list",
+                  seq_parallel=True),
+    RuntimeConfig(placement=PlacementSpec("asymmetric",
+                                          loads=(3.0, 1.0, 2.0, 2.0))),
+])
+def test_runtime_config_dict_round_trip(cfg):
+    d = cfg.to_dict()
+    json.dumps(d)  # must be JSON-serializable as-is
+    assert RuntimeConfig.from_dict(d) == cfg
+
+
+def test_config_from_dict_rejects_unknown_fields():
+    with pytest.raises(ConfigError, match="typo"):
+        RuntimeConfig.from_dict({"typo": 1})
+    with pytest.raises(ConfigError, match="mode"):
+        SchedulePolicy.from_dict({"mode": "microep", "modes": "x"})
+
+
+def test_runtime_config_legacy_kwargs_shim():
+    cfg = RuntimeConfig.from_kwargs(
+        dtype=jnp.float32, placement_strategy="random", seed=5,
+        mode="vanilla", sweeps=9, locality=False, sequencing="greedy",
+        capacity_factor=4.0, impl="ref", remat=False, unroll=True,
+        layout="list", seq_parallel=True)
+    assert cfg.placement == PlacementSpec("random", seed=5)
+    assert cfg.policy == SchedulePolicy(mode="vanilla", sweeps=9,
+                                        locality=False, sequencing="greedy")
+    assert cfg.dtype == "float32" and cfg.capacity_factor == 4.0
+    with pytest.raises(ConfigError, match="placement_strategy"):
+        RuntimeConfig.from_kwargs(placement_stragety="latin")
+
+
+@pytest.mark.parametrize("cfg", [
+    RuntimeConfig(),
+    RuntimeConfig(placement=PlacementSpec("vanilla", seed=7),
+                  policy=SchedulePolicy(mode="vanilla", sweeps=3,
+                                        locality=False,
+                                        sequencing="greedy"),
+                  dtype="float16", capacity_factor=1.5, impl="pallas",
+                  remat=False, unroll=True, layout="list",
+                  seq_parallel=True),
+])
+def test_runtime_config_cli_round_trip(cfg):
+    ap = argparse.ArgumentParser()
+    RuntimeConfig.add_cli_args(ap)
+    got = RuntimeConfig.from_cli_args(ap.parse_args(cfg.to_cli_args()))
+    assert got == cfg
+    # no flags at all reproduces the entry point's chosen defaults
+    ap2 = argparse.ArgumentParser()
+    RuntimeConfig.add_cli_args(ap2, defaults=cfg)
+    assert RuntimeConfig.from_cli_args(ap2.parse_args([])) == cfg
+
+
+# ------------------------------------------------------------------- facade
+
+
+def test_engine_build_forms_agree():
+    a = MicroEPEngine.build(8, (2, 4), placement="latin")
+    b = MicroEPEngine.build(8, (2, 4), placement=PlacementSpec("latin"))
+    c = MicroEPEngine.build(8, (2, 4),
+                            placement=latin_placement(2, 4, 8))
+    np.testing.assert_array_equal(a.placement.table, b.placement.table)
+    np.testing.assert_array_equal(a.placement.table, c.placement.table)
+    v = MicroEPEngine.build(8, (2, 4), placement="vanilla",
+                            policy="vanilla")
+    assert v.policy.mode == "vanilla"
+    assert a.grid == (2, 4) and a.num_devices == 8 and a.num_experts == 8
+
+
+def test_engine_build_rejects_bad_inputs():
+    with pytest.raises(RegistryError, match="latin"):
+        MicroEPEngine.build(8, (2, 4), placement="no-such-strategy")
+    with pytest.raises(ConfigError, match="8"):
+        MicroEPEngine.build(8, (2, 4),
+                            placement=latin_placement(4, 2, 8))
+    with pytest.raises(ConfigError):
+        MicroEPEngine.build(8, (2, 4), policy=42)
+
+
+def test_engine_dispatch_statics_cached():
+    eng = MicroEPEngine.build(8, (2, 4))
+    s1 = eng.dispatch_statics(64, 2)
+    s2 = eng.dispatch_statics(64, 2)
+    s3 = eng.dispatch_statics(128, 2)
+    assert s1 is s2 and s1 is not s3
+    spec = eng.moe_spec(64, 2, activation="swiglu")
+    assert isinstance(spec, MoEFFNSpec)
+    assert spec.statics is s1 and spec.scheduler is eng.scheduler
+
+
+# ------------------------- equivalence with the legacy hand-wired pipeline
+
+
+@pytest.mark.parametrize("mode,strategy", [
+    ("microep", "latin"), ("vanilla", "vanilla"), ("microep", "random"),
+])
+def test_engine_schedule_matches_legacy_bit_for_bit(mode, strategy):
+    """MicroEPEngine must be pure plumbing: byte-identical Schedule results
+    to the pre-engine hand-wired construction path."""
+    rows, cols, e = 2, 4, 8
+    policy = SchedulePolicy(mode=mode, sweeps=12)
+    eng = MicroEPEngine.build(e, (rows, cols),
+                              placement=PlacementSpec(strategy, seed=3),
+                              policy=policy)
+
+    # the legacy path, assembled by hand exactly as call sites used to
+    legacy_placement = placement_strategies.get(strategy)(rows, cols, e,
+                                                          seed=3)
+    legacy_statics = ScheduleStatics.from_placement(legacy_placement)
+    legacy_sched = MicroEPScheduler(legacy_statics, sweeps=12,
+                                    locality=True, mode=mode,
+                                    sequencing="proportional")
+
+    np.testing.assert_array_equal(eng.statics.dev, legacy_statics.dev)
+    np.testing.assert_array_equal(eng.statics.slot, legacy_statics.slot)
+
+    rng = np.random.default_rng(0)
+    state_e = eng.init_state()
+    state_l = legacy_sched.init_state()
+    for _ in range(3):   # warm-start threading must match too
+        input_eg = jnp.asarray(
+            rng.integers(0, 50, size=(e, rows * cols)), jnp.int32)
+        out_e = eng.schedule(input_eg, state_e)
+        out_l = legacy_sched(input_eg, state_l)
+        np.testing.assert_array_equal(np.asarray(out_e.flow),
+                                      np.asarray(out_l.flow))
+        np.testing.assert_array_equal(np.asarray(out_e.x_int),
+                                      np.asarray(out_l.x_int))
+        assert float(out_e.max_load) == float(out_l.max_load)
+        assert float(out_e.balance) == float(out_l.balance)
+        np.testing.assert_array_equal(np.asarray(out_e.solver_state.x),
+                                      np.asarray(out_l.solver_state.x))
+        state_e, state_l = out_e.solver_state, out_l.solver_state
+
+
+def test_engine_dispatch_statics_match_legacy():
+    eng = MicroEPEngine.build(8, (2, 4), placement="latin")
+    legacy = D.build_statics(
+        ScheduleStatics.from_placement(latin_placement(2, 4, 8)),
+        tokens_per_device=64, top_k=2, capacity_factor=2.0, bm=8)
+    got = eng.dispatch_statics(64, 2, capacity_factor=2.0, bm=8)
+    np.testing.assert_array_equal(got.exp_of_dev_slot, legacy.exp_of_dev_slot)
+    np.testing.assert_array_equal(got.rep_of_dev_slot, legacy.rep_of_dev_slot)
+    assert (got.cap, got.bm, got.num_slots, got.c_in) == \
+        (legacy.cap, legacy.bm, legacy.num_slots, legacy.c_in)
+
+
+def test_engine_host_oracle_matches_legacy():
+    eng = MicroEPEngine.build(8, (2, 4), placement="latin")
+    rng = np.random.default_rng(1)
+    input_eg = rng.integers(0, 50, size=(8, 8)).astype(np.int64)
+    legacy_sched = MicroEPScheduler(
+        ScheduleStatics.from_placement(latin_placement(2, 4, 8)))
+    np.testing.assert_allclose(eng.schedule_host(input_eg),
+                               legacy_sched.schedule_host(input_eg))
+
+
+# ------------------------------------------------- architectural grep guard
+
+
+GUARDED = (re.compile(r"ScheduleStatics\s*\.\s*from_placement\s*\("),
+           re.compile(r"MicroEPScheduler\s*\("))
+ALLOWED = {  # the only places that may hand-wire the machinery
+    REPO / "src" / "repro" / "core",
+    REPO / "src" / "repro" / "engine",
+    REPO / "tests" / "test_engine.py",   # this file: legacy reference path
+}
+
+
+def _is_allowed(path: pathlib.Path) -> bool:
+    return any(path == a or a in path.parents for a in ALLOWED)
+
+
+def test_no_direct_scheduler_construction_outside_engine():
+    """Acceptance guard: every module goes through MicroEPEngine."""
+    offenders = []
+    for top in ("src", "tests", "examples", "benchmarks"):
+        for path in (REPO / top).rglob("*.py"):
+            if _is_allowed(path):
+                continue
+            text = path.read_text()
+            for pat in GUARDED:
+                for m in pat.finditer(text):
+                    line = text[: m.start()].count("\n") + 1
+                    offenders.append(f"{path.relative_to(REPO)}:{line} "
+                                     f"{m.group(0)!r}")
+    assert not offenders, (
+        "construct MicroEP machinery via repro.engine.MicroEPEngine, "
+        "not by hand:\n" + "\n".join(offenders))
+
+
+# ------------------------------------------------------- build_runtime shim
+
+
+def test_build_runtime_config_and_legacy_kwargs_agree():
+    from repro.configs import get_config
+    from repro.launch import runtime as R
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = get_config("olmoe-1b-7b").smoke()
+    mesh = make_local_mesh(1, 1)
+    dr_new = R.build_runtime(cfg, mesh, RuntimeConfig(
+        dtype="float32", impl="ref", remat=False,
+        placement=PlacementSpec("latin"),
+        policy=SchedulePolicy(mode="microep")))
+    dr_old = R.build_runtime(cfg, mesh, dtype=jnp.float32, impl="ref",
+                             remat=False, placement_strategy="latin",
+                             mode="microep")
+    assert dr_new.config == dr_old.config
+    np.testing.assert_array_equal(dr_new.placement.table,
+                                  dr_old.placement.table)
+    # engine-backed schedules agree bit-for-bit across the two builds
+    e = dr_new.engine.num_experts
+    g = dr_new.engine.num_devices
+    input_eg = jnp.asarray(
+        np.random.default_rng(2).integers(0, 20, (e, g)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(dr_new.engine.schedule(input_eg).flow),
+        np.asarray(dr_old.engine.schedule(input_eg).flow))
+    with pytest.raises(ConfigError, match="not both"):
+        R.build_runtime(cfg, mesh, RuntimeConfig(), mode="vanilla")
+    with pytest.raises(ConfigError, match="unknown build_runtime option"):
+        R.build_runtime(cfg, mesh, placement_stragety="latin")

@@ -5,13 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.lp import replica_devices, solve_lpp1, solve_lpp4
 from repro.core.placement import (latin_placement, max_induced_density,
                                   random_placement, vanilla_placement)
 from repro.core.rounding import round_replica_loads
-from repro.core.scheduler import ScheduleStatics
 from repro.core.solver_jax import device_loads, solve_replica_loads, water_fill
 
 

@@ -1,7 +1,7 @@
 """Expert placement strategies & graph theory (paper §6, Appendix B)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.graphs import (cayley_bipartite, cayley_complete_plus,
                                cayley_cycle, cayley_graph_auto, cayley_torus,

@@ -3,7 +3,7 @@ sequencing variants, comm accounting."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.lp import replica_devices
 from repro.core.placement import latin_placement, random_placement

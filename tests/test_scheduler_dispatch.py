@@ -6,20 +6,18 @@ import numpy as np
 import pytest
 
 from repro.core.lp import solve_lpp1
-from repro.core.placement import latin_placement, vanilla_placement
-from repro.core.scheduler import MicroEPScheduler, ScheduleStatics
 from repro.data.synthetic import zipf_expert_loads
+from repro.engine import MicroEPEngine, SchedulePolicy
 from repro.moe import dispatch as D
 from repro.moe.experts import init_canonical_experts
-from repro.moe.layer import MoEFFNSpec, moe_ffn
+from repro.moe.layer import moe_ffn
 from repro.moe.router import top_k_gating, zipf_gating
 
 
 def _sched(rows, cols, e, mode="microep", strategy="latin"):
-    p = (latin_placement if strategy == "latin" else vanilla_placement)(
-        rows, cols, e)
-    st = ScheduleStatics.from_placement(p)
-    return p, st, MicroEPScheduler(st, mode=mode, sweeps=12)
+    eng = MicroEPEngine.build(e, (rows, cols), placement=strategy,
+                              policy=SchedulePolicy(mode=mode, sweeps=12))
+    return eng.placement, eng.statics, eng.scheduler
 
 
 @pytest.mark.parametrize("s", [0.2, 0.6, 1.0, 1.4])
@@ -92,13 +90,9 @@ def test_warm_start_threading():
 # ----------------------------------------------- single-device dispatch path
 
 def _local_moe(key, e, top_k, t, h, f, impl="ref"):
-    p = vanilla_placement(1, 1, e)
-    st = ScheduleStatics.from_placement(p)
-    statics = D.build_statics(st, tokens_per_device=t, top_k=top_k,
-                              capacity_factor=2.0, bm=8)
-    sched = MicroEPScheduler(st, mode="microep")
-    spec = MoEFFNSpec(statics=statics, scheduler=sched, top_k=top_k,
-                      activation="swiglu", group_axes=(), kernel_impl=impl)
+    eng = MicroEPEngine.build(e, (1, 1), placement="vanilla")
+    spec = eng.moe_spec(t, top_k, activation="swiglu", group_axes=(),
+                        capacity_factor=2.0, bm=8, kernel_impl=impl)
     ks = jax.random.split(key, 3)
     x = jax.random.normal(ks[0], (t, h), jnp.float32) * 0.5
     w_router = jax.random.normal(ks[1], (h, e)) * 0.1
