@@ -1,0 +1,78 @@
+"""Serving benchmark: continuous batching under open-loop traffic.
+
+CPU-scale analog of a serving fleet soak: drives :class:`ServingSession`
+(SERVING.md) over Poisson traffic for a dense and an MoE smoke config and
+reports throughput (generated + processed tokens/s), latency percentiles
+(p50/p99, TTFT) and the mean per-step balance ratio.  Results go out both
+as ``BENCH,...`` lines (benchmarks/common.emit) and as one JSON document
+(``--out FILE`` or stdout) whose per-config payload is exactly
+``ServeReport.to_dict()`` minus the per-request list.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving
+  PYTHONPATH=src python -m benchmarks.bench_serving --requests 16 \
+      --out serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.engine import ServeConfig
+from repro.serve import ServingSession, poisson_trace
+
+from .common import emit
+
+CONFIGS = [
+    # (bench name, arch, rate requests/step)
+    ("serve_dense", "qwen1.5-0.5b", 0.25),
+    ("serve_moe", "paper-gpt-32x1.3b", 0.25),
+]
+
+
+def run_one(name: str, arch: str, rate: float, requests: int,
+            seed: int = 0) -> dict:
+    cfg = get_config(arch).smoke()
+    serve_cfg = ServeConfig(max_batch=4, max_seq=32,
+                            replacement=cfg.moe, repl_check_every=8)
+    sess = ServingSession(cfg, serve_cfg, seed=seed)
+    trace = poisson_trace(requests, rate, cfg.vocab,
+                          prompt_len=10, gen_len=12, seed=seed + 1)
+    report = sess.run(trace)
+    d = report.to_dict()
+    d.pop("per_request")
+    d["arch"] = cfg.name
+    emit(name, arch=cfg.name,
+         gen_tokens_per_s=d["gen_tokens_per_s"],
+         tokens_per_s=d["tokens_per_s"],
+         p50_ms=d["latency_ms"]["p50"], p99_ms=d["latency_ms"]["p99"],
+         ttft_p50_ms=d["ttft_ms"]["p50"],
+         mean_balance=d["mean_balance"],
+         migrations=d["migrations"])
+    return d
+
+
+def run(requests: int = 12, out: str = None, seed: int = 0):
+    results = {name: run_one(name, arch, rate, requests, seed)
+               for name, arch, rate in CONFIGS}
+    payload = json.dumps(results, indent=1)
+    if out:
+        with open(out, "w") as f:
+            f.write(payload)
+    else:
+        print(payload)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    run(requests=args.requests, out=args.out, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

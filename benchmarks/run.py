@@ -15,7 +15,7 @@ import traceback
 
 from . import (bench_ablation, bench_balance, bench_breakdown,
                bench_commaware, bench_e2e_model, bench_migration,
-               bench_pipeline, bench_sched_overhead)
+               bench_pipeline, bench_sched_overhead, bench_serving)
 
 ALL = {
     "fig6_e2e": bench_e2e_model.run,
@@ -26,6 +26,7 @@ ALL = {
     "fig11_ablation": bench_ablation.run,
     "fig15_commaware": bench_commaware.run,
     "fig16_pipeline": bench_pipeline.run,
+    "serving": bench_serving.run,
 }
 
 

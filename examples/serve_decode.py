@@ -1,6 +1,8 @@
-"""Serve a small model with batched requests: prefill + batched greedy
-decode against KV/recurrent caches, across three cache families
-(full-attention KV, sliding-window ring buffer, RWKV constant state).
+"""Fixed-batch decode across three cache families (full-attention KV,
+sliding-window ring buffer, RWKV constant state): prefill + lock-step
+greedy decode.  The production serving path — continuous batching over an
+open-loop request stream — is serve_traffic.py / ``repro.serve``
+(SERVING.md).
 
   PYTHONPATH=src python examples/serve_decode.py --arch gemma3-27b
   PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-7b

@@ -118,11 +118,29 @@ def register(cfg: ArchConfig) -> ArchConfig:
     return cfg
 
 
+def _canonical(name: str) -> str:
+    """Separator-insensitive lookup key: 'qwen1_5-0.5b' == 'qwen1.5-0.5b'."""
+    return "".join(ch for ch in name.lower() if ch.isalnum())
+
+
 def get_config(name: str) -> ArchConfig:
+    """Look up an architecture config by name.
+
+    Exact registry names are preferred; as a convenience the lookup is
+    separator-insensitive ('.', '-', '_' interchangeable), so the CLI
+    accepts e.g. ``--arch qwen1_5-0.5b`` for ``qwen1.5-0.5b``."""
     if name not in _REGISTRY:
         from . import _load_all  # lazy import of all config modules
         _load_all()
-    return _REGISTRY[name]
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    by_canon = {_canonical(k): v for k, v in _REGISTRY.items()}
+    key = _canonical(name)
+    if key in by_canon:
+        return by_canon[key]
+    raise KeyError(
+        f"unknown architecture {name!r}; registered: "
+        f"{', '.join(sorted(_REGISTRY))}")
 
 
 def list_configs():

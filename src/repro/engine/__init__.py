@@ -30,7 +30,8 @@ from .registry import (
     get_placement_strategy,
     get_baseline_system,
 )
-from .config import ConfigError, PlacementSpec, RuntimeConfig, SchedulePolicy
+from .config import (ConfigError, PlacementSpec, RuntimeConfig,
+                     SchedulePolicy, ServeConfig)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -39,5 +40,5 @@ __all__ = [
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
     "ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
-    "MicroEPEngine",
+    "ServeConfig", "MicroEPEngine",
 ]

@@ -25,7 +25,8 @@ from typing import Any, Mapping, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig"]
+__all__ = ["ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
+           "ServeConfig"]
 
 
 class ConfigError(ValueError):
@@ -301,6 +302,87 @@ class RuntimeConfig:
         if self.impl is not None:
             flags += ["--impl", self.impl]
         return flags
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving configuration (SERVING.md).
+
+    max_batch        — decode slots (the live batch width B).
+    max_seq          — per-slot cache length; every admitted request must
+                       satisfy prompt_len + max_new <= max_seq (the
+                       per-request ``max_new`` rides on the Request).
+    kv_budget        — total KV-cache token budget the batch manager admits
+                       against; None = max_batch * max_seq (slot-limited).
+    eos_token        — optional stop token id (None = length-only stop).
+    replacement      — enable the adaptive replacement hook (paper §6.4):
+                       predicted-balance-triggered placement migration.
+    repl_check_every — decode steps between replacement evaluations.
+    repl_threshold   — predicted max/ideal device load that triggers one.
+    """
+
+    max_batch: int = 4
+    max_seq: int = 64
+    kv_budget: Optional[int] = None
+    eos_token: Optional[int] = None
+    replacement: bool = False
+    repl_check_every: int = 16
+    repl_threshold: float = 1.15
+
+    def __post_init__(self):
+        for name in ("max_batch", "max_seq", "repl_check_every"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ConfigError(
+                    f"ServeConfig.{name} must be a positive int, got {v!r}")
+        if self.kv_budget is not None and \
+                self.kv_budget < self.max_seq:
+            raise ConfigError(
+                f"ServeConfig.kv_budget={self.kv_budget} cannot be smaller "
+                f"than max_seq={self.max_seq} (no request would ever fit)")
+        if not self.repl_threshold >= 1.0:
+            raise ConfigError(
+                f"ServeConfig.repl_threshold must be >= 1.0 (ratio of "
+                f"predicted max to ideal load), got {self.repl_threshold!r}")
+
+    @property
+    def budget_tokens(self) -> int:
+        """The effective KV token budget."""
+        return (self.kv_budget if self.kv_budget is not None
+                else self.max_batch * self.max_seq)
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ServeConfig":
+        return cls(**_known_fields(cls, d))
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "ServeConfig" = None) -> None:
+        d = defaults if defaults is not None else ServeConfig()
+        b = argparse.BooleanOptionalAction
+        g = parser.add_argument_group("serving")
+        g.add_argument("--max-batch", type=int, default=d.max_batch)
+        g.add_argument("--max-seq", type=int, default=d.max_seq)
+        g.add_argument("--kv-budget", type=int, default=d.kv_budget)
+        g.add_argument("--eos-token", type=int, default=d.eos_token)
+        g.add_argument("--replacement", action=b, default=d.replacement)
+        g.add_argument("--repl-check-every", type=int,
+                       default=d.repl_check_every)
+        g.add_argument("--repl-threshold", type=float,
+                       default=d.repl_threshold)
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "ServeConfig":
+        return cls(max_batch=args.max_batch, max_seq=args.max_seq,
+                   kv_budget=args.kv_budget,
+                   eos_token=args.eos_token, replacement=args.replacement,
+                   repl_check_every=args.repl_check_every,
+                   repl_threshold=args.repl_threshold)
 
 
 def _known_fields(cls, d: Mapping[str, Any]) -> dict:

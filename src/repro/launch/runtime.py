@@ -163,14 +163,18 @@ def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
     all_axes = (("pod",) if mi.has_pod else ()) + group_axes
     total_dev = mi.group_size * mi.pods
 
-    def moe_apply(p_moe, x2d, state):
+    def moe_apply(p_moe, x2d, state, valid=None):
         n, h = x2d.shape
         pad = (-n) % total_dev
         npad = n + pad
         if pad:
             x2d = jnp.concatenate(
                 [x2d, jnp.zeros((pad, h), x2d.dtype)], axis=0)
-        valid = jnp.arange(npad) < n
+        row_ok = jnp.arange(npad) < n
+        if valid is not None:     # inactive serving slots (SERVING.md)
+            row_ok = row_ok & jnp.concatenate(
+                [valid, jnp.zeros((pad,), bool)])
+        valid = row_ok
         t_local = npad // total_dev
         spec = engine.moe_spec(
             t_local, top_k_eff, activation=act, group_axes=group_axes,
@@ -247,6 +251,8 @@ def build_runtime(
     cfg: ArchConfig,
     mesh: Mesh,
     config: Optional[RuntimeConfig] = None,
+    *,
+    placement_table: Optional[Placement] = None,
     **legacy_kwargs,
 ) -> DistRuntime:
     """Build the distributed runtime for one (arch config, mesh) pair.
@@ -256,6 +262,12 @@ def build_runtime(
         build_runtime(cfg, mesh, RuntimeConfig(
             placement=PlacementSpec("latin"),
             policy=SchedulePolicy(mode="microep"), dtype="float32"))
+
+    ``placement_table`` installs a pre-built :class:`Placement` instead of
+    the strategy named by ``config.placement`` — the adaptive replacement
+    path (paper §6.4): the serving loop rebuilds the runtime around the
+    regenerated table and re-materializes working params from the canonical
+    master (the redistribute collective, moe/sync.py).
 
     The historical keyword surface (``dtype=``, ``placement_strategy=``,
     ``mode=``, ``capacity_factor=``, ...) keeps working as a shim and maps
@@ -275,8 +287,11 @@ def build_runtime(
     engine = moe_apply = None
     if cfg.moe:
         e_virt = cfg.num_experts * max(cfg.etp, 1)
-        engine = MicroEPEngine.from_config(e_virt, (mi.data, mi.model),
-                                           config)
+        engine = MicroEPEngine.build(
+            e_virt, (mi.data, mi.model),
+            placement=(placement_table if placement_table is not None
+                       else config.placement),
+            policy=config.policy)
         moe_apply = _build_moe_apply(cfg, mi, engine, config)
     rt = dec.Runtime(moe_apply=moe_apply,
                      shard=sh.act_constraint(

@@ -1,21 +1,34 @@
-"""Serving driver: batched greedy decoding against a KV/recurrent cache.
+"""Serving driver: continuous batching over an open-loop request stream.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+Thin CLI over :mod:`repro.serve` (SERVING.md): synthetic Poisson or replay
+traffic feeds the slot/KV-budget batch manager; one compiled per-slot
+decode step interleaves prefill and decode, re-running the MicroEP
+scheduler every step on the live batch's expert loads; per-request latency,
+throughput and balance stats are printed (add ``--json`` for the full
+report).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5-0.5b --smoke \
+      --traffic poisson
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-gpt-32x1.3b \
+      --smoke --traffic poisson --requests 16 --rate 0.5 --replacement
+  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
+      --traffic replay --trace trace.json
+
+Engine flags (``--placement``, ``--mode``, ``--sweeps``, ``--dtype``,
+``--capacity-factor``, ...) and serving flags (``--max-batch``,
+``--max-seq``, ``--kv-budget``, ``--replacement``, ...) share the typed
+config surface of ``repro.engine`` (ENGINE.md).  ``--data-axis N`` (with
+``XLA_FLAGS=--xla_force_host_platform_device_count=...``) serves on a
+local mesh through the distributed runtime.
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
+import json
 
 from ..configs import get_config
-from ..data.synthetic import make_batch
-from ..engine import RuntimeConfig
-from ..models import decoder as dec
-from . import runtime as R
+from ..engine import RuntimeConfig, ServeConfig
+from ..serve import ServingSession, load_trace, poisson_trace, replay_trace
 from .mesh import make_local_mesh
 
 
@@ -23,57 +36,69 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--data-axis", type=int, default=0)
+    ap.add_argument("--traffic", default="poisson",
+                    choices=["poisson", "replay"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.25,
+                    help="poisson arrival rate (requests per decode step)")
+    ap.add_argument("--prompt-len", type=int, default=12,
+                    help="max prompt length (sampled uniform in [len/2, len])")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max generation length (sampled like --prompt-len)")
+    ap.add_argument("--trace", default=None,
+                    help="JSON trace file for --traffic replay")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="0 = single device (no mesh)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    # shared engine flag surface (same parser as train/bench)
+    ap.add_argument("--json", action="store_true",
+                    help="print the full ServeReport as JSON")
+    # shared engine + serving flag surfaces (same parser family as train)
     RuntimeConfig.add_cli_args(
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
+    ServeConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
+    serve_cfg = ServeConfig.from_cli_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    key = jax.random.PRNGKey(args.seed)
-    params = dec.init_params(key, cfg, jnp.float32)
-    rt = dec.Runtime(impl="ref")
-    if args.data_axis > 0:
-        mesh = make_local_mesh(args.data_axis, args.model_axis)
-        dr = R.build_runtime(cfg, mesh, run_cfg)
-        params = dr.hooks.to_working(params)
-        rt = dr.rt
+    # convenience: grow the default cache to fit the requested lengths, but
+    # never override explicit --max-seq / --kv-budget (oversize requests
+    # are then rejected and reported instead)
+    if (serve_cfg.max_seq == ServeConfig().max_seq
+            and serve_cfg.kv_budget is None
+            and serve_cfg.max_seq < args.prompt_len + args.gen):
+        serve_cfg = ServeConfig.from_dict(
+            {**serve_cfg.to_dict(), "max_seq": args.prompt_len + args.gen})
+        print(f"note: default --max-seq grown to {serve_cfg.max_seq} to fit "
+              f"--prompt-len {args.prompt_len} + --gen {args.gen}")
 
-    max_seq = args.prompt_len + args.gen
-    prompt = make_batch(key, cfg.vocab, args.batch,
-                        args.prompt_len)["tokens"]
-    state = dec.init_decode_state(cfg, args.batch, max_seq, jnp.float32, rt)
+    if args.traffic == "replay" and args.trace:
+        requests = load_trace(args.trace, cfg.vocab, seed=args.seed + 1)
+    elif args.traffic == "replay":
+        every = max(int(round(1.0 / args.rate)), 1)
+        requests = replay_trace(
+            [(i * every, args.prompt_len, args.gen)
+             for i in range(args.requests)], cfg.vocab, seed=args.seed + 1)
+    else:
+        requests = poisson_trace(
+            args.requests, args.rate, cfg.vocab,
+            prompt_len=args.prompt_len, gen_len=args.gen,
+            seed=args.seed + 1)
 
-    @jax.jit
-    def step(params, state, tok):
-        logits, state = dec.decode_step(params, cfg, state,
-                                        {"tokens": tok}, rt)
-        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), state
-
-    # prefill token-by-token (cache-correct; a fused prefill is the
-    # prefill_32k dry-run path)
-    t0 = time.perf_counter()
-    tok = prompt[:, :1]
-    for i in range(args.prompt_len):
-        nxt, state = step(params, state, prompt[:, i:i + 1])
-    out = [nxt]
-    for _ in range(args.gen - 1):
-        nxt, state = step(params, state, out[-1][:, None])
-        out.append(nxt)
-    dt = time.perf_counter() - t0
-    gen = jnp.stack(out, axis=1)
-    print("generated:", gen[:, :16])
-    steps = args.prompt_len + args.gen - 1
-    print(f"{steps} decode steps, {dt/steps*1e3:.1f} ms/step "
-          f"(batch {args.batch})")
+    mesh = (make_local_mesh(args.data_axis, args.model_axis)
+            if args.data_axis > 0 else None)
+    sess = ServingSession(cfg, serve_cfg, run_cfg=run_cfg, mesh=mesh,
+                          seed=args.seed)
+    report = sess.run(requests)
+    print(f"arch={cfg.name} slots={serve_cfg.max_batch} "
+          f"max_seq={serve_cfg.max_seq} "
+          f"kv_budget={serve_cfg.budget_tokens} traffic={args.traffic}")
+    print(report.summary())
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=1))
     return 0
 
 

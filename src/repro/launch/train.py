@@ -6,8 +6,12 @@ a real TPU slice, on the production mesh.  The CPU-scale path is what the
 end-to-end examples use: reduced config, synthetic learnable data, real
 MicroEP scheduling per micro-batch.
 
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train --arch paper-gpt-32x1.3b \
       --smoke --steps 100 --batch 16 --seq 64 --data-axis 2 --model-axis 4
+
+Engine flags (--placement, --mode, --sweeps, --dtype, --capacity-factor,
+--remat/--no-remat, ...) are the shared RuntimeConfig surface (ENGINE.md).
 """
 from __future__ import annotations
 

@@ -45,7 +45,8 @@ from .layers.rwkv6 import (RWKVState, init_rwkv6, init_rwkv6_channel,
 
 __all__ = ["Runtime", "Metrics", "init_params", "forward", "lm_loss",
            "loss_fn", "init_decode_state", "decode_step", "expand_router_etp",
-           "local_moe_apply", "param_dtypes"]
+           "local_moe_apply", "param_dtypes", "reset_decode_slots",
+           "n_moe_layers"]
 
 
 # --------------------------------------------------------------------------
@@ -57,8 +58,10 @@ __all__ = ["Runtime", "Metrics", "init_params", "forward", "lm_loss",
 class Runtime:
     """Everything the decoder needs to know about its execution environment.
 
-    moe_apply: (p_moe, x2d, solver_state) -> (out2d, MoEMetrics, new_state).
-      None = build a single-device MicroEP group locally (CPU smoke path).
+    moe_apply: (p_moe, x2d, solver_state, valid=None) -> (out2d, MoEMetrics,
+      new_state); ``valid`` is an optional bool[T] row mask (inactive
+      serving slots).  None = build a single-device MicroEP group locally
+      (CPU smoke path).
     shard: activation-constraint hook ``shard(x, name)``; identity if None.
     impl: kernel implementation ('ref' | 'interpret' | 'pallas').
     seq_axis: mesh axis carrying the sequence shards of global-attention
@@ -271,18 +274,42 @@ def local_moe_apply(p_moe, x2d, cfg: ArchConfig, state, impl=None,
                    state=state, router_out=r)
 
 
-def _moe_block(p_moe, x, cfg: ArchConfig, rt: Runtime, state):
+def _moe_block(p_moe, x, cfg: ArchConfig, rt: Runtime, state, valid=None):
+    """``valid``: optional bool[B] row mask (continuous batching feeds pad
+    tokens on inactive slots; masking keeps them out of routing, capacity
+    and the load metrics)."""
     b, t, h = x.shape
     x2d = x.reshape(b * t, h)
+    valid2d = None if valid is None else jnp.repeat(valid, t)
     if rt.moe_apply is not None:
-        out2d, metrics, new_state = rt.moe_apply(p_moe, x2d, state)
+        out2d, metrics, new_state = rt.moe_apply(p_moe, x2d, state,
+                                                 valid=valid2d)
     else:
         out2d, metrics, new_state = local_moe_apply(
-            p_moe, x2d, cfg, state, impl=rt.impl)
+            p_moe, x2d, cfg, state, impl=rt.impl, valid=valid2d)
     return out2d.reshape(b, t, h), metrics, new_state
 
 
-_ZERO_MOE = MoEMetrics(*(jnp.zeros(()) for _ in range(5)))
+_ZERO_MOE = MoEMetrics(*(jnp.zeros(()) for _ in range(6)))
+
+
+def _zero_moe(cfg: ArchConfig) -> MoEMetrics:
+    """Shape-correct zero metrics accumulator: ``expert_load`` is [E_virt]
+    for MoE configs so scan carries stay shape-stable under accumulation
+    (dense-layer zeros broadcast into it)."""
+    z = jnp.zeros(())
+    if not cfg.moe:
+        return _ZERO_MOE
+    e = jnp.zeros((cfg.num_experts * max(cfg.etp, 1),))
+    return MoEMetrics(z, z, z, z, z, e)
+
+
+def n_moe_layers(cfg: ArchConfig) -> int:
+    """Number of MoE layers (normalizes summed per-layer metrics)."""
+    if not cfg.moe:
+        return 0
+    return sum(1 for i in range(cfg.num_layers)
+               if cfg.pattern[i % len(cfg.pattern)].startswith("attn"))
 
 
 # --------------------------------------------------------------------------
@@ -329,7 +356,8 @@ def _block_fwd(p, cfg: ArchConfig, rt: Runtime, kind: str,
 def _accum(acc, m: MoEMetrics):
     return MoEMetrics(acc.aux_loss + m.aux_loss, acc.z_loss + m.z_loss,
                       acc.max_load + m.max_load, acc.balance + m.balance,
-                      acc.overflow + m.overflow.astype(jnp.float32))
+                      acc.overflow + m.overflow.astype(jnp.float32),
+                      acc.expert_load + m.expert_load)
 
 
 def _default_positions(cfg: ArchConfig, b: int, t: int):
@@ -365,7 +393,7 @@ def forward(params, cfg: ArchConfig, batch: dict, rt: Runtime = _NULL_RT,
 
     reps, rem = _pattern_counts(cfg)
     pat = cfg.pattern
-    acc = _ZERO_MOE
+    acc = _zero_moe(cfg)
     new_states: dict = {}
 
     block = _block_fwd
@@ -566,11 +594,16 @@ def _init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
                       dtype=jnp.float32, rt: Runtime = _NULL_RT,
-                      layout: str = "scan") -> dict:
-    """Per-layer decode caches, stacked to mirror the scan layout."""
+                      layout: str = "scan", per_slot: bool = False) -> dict:
+    """Per-layer decode caches, stacked to mirror the scan layout.
+
+    ``per_slot=True`` makes the position counter an int32[batch] vector so
+    every batch slot decodes at its own sequence position — the continuous-
+    batching mode (SERVING.md); the fixed-batch default keeps the scalar."""
     reps, rem = _pattern_counts(cfg)
     pat = cfg.pattern
-    state: dict = {"pos": jnp.zeros((), jnp.int32)}
+    state: dict = {"pos": jnp.zeros((batch,) if per_slot else (),
+                                    jnp.int32)}
     if layout == "list":
         state["list"] = tuple(
             _init_block_cache(cfg, pat[i % len(pat)], batch, max_seq,
@@ -591,8 +624,10 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def _block_decode(p, cfg: ArchConfig, rt: Runtime, kind: str, x, cache,
-                  pos):
-    """x: [B, 1, dm].  Returns (x, new_cache)."""
+                  pos, solver_st=None, active=None):
+    """x: [B, 1, dm].  Returns (x, new_cache, moe_metrics, new_solver)."""
+    metrics = _ZERO_MOE
+    new_solver = solver_st
     if kind.startswith("attn"):
         h = _norm(cfg, p["ln1"], x)
         cache = cache._replace(length=pos)
@@ -602,11 +637,12 @@ def _block_decode(p, cfg: ArchConfig, rt: Runtime, kind: str, x, cache,
         x = x + h
         h = _norm(cfg, p["ln2"], x)
         if cfg.moe:
-            h, _, _ = _moe_block(p["moe"], h, cfg, rt, None)
+            h, metrics, new_solver = _moe_block(p["moe"], h, cfg, rt,
+                                                solver_st, valid=active)
         else:
             h = ffn(p["ffn"], h, cfg.ffn_kind)
         x = x + h
-        return x, cache
+        return x, cache, metrics, new_solver
     if kind == "rwkv":
         h = _norm(cfg, p["ln1"], x)
         h, new_wkv, shift_t = rwkv6_time_mix(p["time"], h, cfg.num_heads,
@@ -615,7 +651,8 @@ def _block_decode(p, cfg: ArchConfig, rt: Runtime, kind: str, x, cache,
         h = _norm(cfg, p["ln2"], x)
         h, shift_c = rwkv6_channel_mix(p["chan"], h, state_prev=cache.shift_c)
         x = x + h
-        return x, RWKVState(wkv=new_wkv, shift_t=shift_t, shift_c=shift_c)
+        return (x, RWKVState(wkv=new_wkv, shift_t=shift_t, shift_c=shift_c),
+                metrics, new_solver)
     if kind == "rglru":
         h = _norm(cfg, p["ln1"], x)
         h, new_state = rglru_block(p["rec"], h, state=cache, conv_k=cfg.conv_k)
@@ -623,68 +660,143 @@ def _block_decode(p, cfg: ArchConfig, rt: Runtime, kind: str, x, cache,
         h = _norm(cfg, p["ln2"], x)
         h = ffn(p["ffn"], h, cfg.ffn_kind)
         x = x + h
-        return x, new_state
+        return x, new_state, metrics, new_solver
     raise ValueError(kind)
 
 
 def decode_step(params, cfg: ArchConfig, state: dict, batch: dict,
-                rt: Runtime = _NULL_RT):
+                rt: Runtime = _NULL_RT, with_metrics: bool = False):
     """One-token decode: batch {"tokens": int32[B, 1]} or {"embeds":
-    [B, 1, dm]} -> (logits [B, 1, V], new_state)."""
+    [B, 1, dm]} -> (logits [B, 1, V], new_state).
+
+    ``state["pos"]`` may be a scalar (fixed batch) or int32[B] per-slot
+    positions (continuous batching).  An optional batch {"active": bool[B]}
+    mask keeps inactive serving slots (pad tokens) out of MoE routing,
+    capacity and load metrics.  When ``state`` carries a "solver" entry
+    (from :func:`init_solver_states` / ``DistRuntime.init_solver``) the MoE
+    scheduler re-solves every decode step on the live batch's expert loads
+    with the warm start threaded through steps, exactly as in training
+    (SERVING.md).  ``with_metrics=True`` additionally returns the
+    per-layer-summed :class:`MoEMetrics` (balance ratio, expert loads) as a
+    third output.
+    """
     if "embeds" in batch and batch["embeds"] is not None:
         x = batch["embeds"]
     else:
         x = params["embed"][batch["tokens"]]
     b = x.shape[0]
     pos = state["pos"]
+    solver = state.get("solver")
+    active = batch.get("active")
     x = rt.constrain(x, "act")
 
     reps, rem = _pattern_counts(cfg)
     pat = cfg.pattern
+    acc = _zero_moe(cfg)
     new_state: dict = {"pos": pos + 1}
+    new_solver: dict = {}
 
     if "layers_list" in params:   # flat per-layer layout (cost pass)
-        new_list = []
+        st_list = None if solver is None else solver.get("list")
+        new_list, new_sl = [], []
         for i in range(cfg.num_layers):
-            x, c = _block_decode(params["layers_list"][i], cfg, rt,
-                                 pat[i % len(pat)], x, state["list"][i],
-                                 pos)
+            st = None if st_list is None else st_list[i]
+            x, c, m, s = _block_decode(params["layers_list"][i], cfg, rt,
+                                       pat[i % len(pat)], x,
+                                       state["list"][i], pos, st, active)
+            acc = _accum(acc, m)
             new_list.append(c)
+            new_sl.append(s)
         new_state["list"] = tuple(new_list)
+        if solver is not None:
+            new_solver["list"] = tuple(new_sl)
         reps = rem = 0
 
     if reps > 0:
-        def body(x, xs):
-            p_group, c_group = xs
-            new_c = []
-            for i, kind in enumerate(pat):
-                x, c = _block_decode(p_group[i], cfg, rt, kind, x,
-                                     c_group[i], pos)
-                new_c.append(c)
-            return x, tuple(new_c)
+        st_scan = None if solver is None else solver.get("scan")
 
-        xs = (params["layers_scan"], state["scan"])
+        def body(carry, xs):
+            x, acc = carry
+            p_group, c_group, st_group = xs
+            new_c, new_st = [], []
+            for i, kind in enumerate(pat):
+                st = None if st_group is None else st_group[i]
+                x, c, m, s = _block_decode(p_group[i], cfg, rt, kind, x,
+                                           c_group[i], pos, st, active)
+                acc = _accum(acc, m)
+                new_c.append(c)
+                new_st.append(s)
+            return (x, acc), (tuple(new_c), tuple(new_st))
+
+        xs = (params["layers_scan"], state["scan"], st_scan)
         if rt.unroll:
             outs = []
             for r in range(reps):
                 xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
-                x, c_r = body(x, xs_r)
-                outs.append(c_r)
-            c_out = jax.tree_util.tree_map(
+                (x, acc), ys_r = body((x, acc), xs_r)
+                outs.append(ys_r)
+            c_out, st_out = jax.tree_util.tree_map(
                 lambda *leaves: jnp.stack(leaves), *outs)
         else:
-            x, c_out = jax.lax.scan(body, x, xs)
+            (x, acc), (c_out, st_out) = jax.lax.scan(body, (x, acc), xs)
         new_state["scan"] = c_out
+        if solver is not None:
+            new_solver["scan"] = st_out
 
     if rem > 0:
-        new_rem = []
+        st_rem = None if solver is None else solver.get("rem")
+        new_rem, new_sr = [], []
         for i in range(rem):
-            x, c = _block_decode(params["layers_rem"][i], cfg, rt, pat[i],
-                                 x, state["rem"][i], pos)
+            st = None if st_rem is None else st_rem[i]
+            x, c, m, s = _block_decode(params["layers_rem"][i], cfg, rt,
+                                       pat[i], x, state["rem"][i], pos, st,
+                                       active)
+            acc = _accum(acc, m)
             new_rem.append(c)
+            new_sr.append(s)
         new_state["rem"] = tuple(new_rem)
+        if solver is not None:
+            new_solver["rem"] = tuple(new_sr)
+
+    if "solver" in state:
+        new_state["solver"] = new_solver if solver is not None else None
 
     x = _norm(cfg, params["final_norm"], x)
     head = params.get("head")
     logits = x @ (head if head is not None else params["embed"].T)
+    if with_metrics:
+        return logits, new_state, acc
     return logits, new_state
+
+
+def reset_decode_slots(state: dict, mask: jax.Array) -> dict:
+    """Clear the per-sequence decode caches of masked batch slots.
+
+    The continuous-batching admit/evict hook (SERVING.md): ``mask`` is
+    bool[B]; slot i's KV / recurrent caches and position counter are zeroed
+    where ``mask[i]`` so a new request can be admitted into (or an evicted
+    one removed from) the slot.  The solver warm start ("solver") is a
+    property of the expert-load stream, not of any one sequence, and is
+    kept.  Requires per-slot positions (``init_decode_state(...,
+    per_slot=True)``)."""
+    b = mask.shape[0]
+
+    def clear(axis, leaf):
+        if getattr(leaf, "ndim", 0) <= axis or leaf.shape[axis] != b:
+            return leaf               # scalar lengths, odd-shaped leaves
+        shape = [1] * leaf.ndim
+        shape[axis] = b
+        m = mask.reshape(shape)
+        return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+    out = dict(state)
+    if getattr(state["pos"], "ndim", 0) != 1:
+        raise ValueError("reset_decode_slots needs per-slot positions; "
+                         "build the state with init_decode_state(..., "
+                         "per_slot=True)")
+    out["pos"] = jnp.where(mask, 0, state["pos"])
+    for key, axis in (("scan", 1), ("rem", 0), ("list", 0)):
+        if key in state:
+            out[key] = jax.tree_util.tree_map(
+                functools.partial(clear, axis), state[key])
+    return out

@@ -223,43 +223,72 @@ def decode_attention(
 ) -> tuple[jax.Array, KVCache]:
     """One-token decode: x [B, 1, dm] attends to the cache + itself.
 
-    With ``seq_axis`` set (long-context, global layers) the cache's sequence
-    dim is sharded across that mesh axis: each shard computes partial
-    (max, denom, numer) flash statistics, combined with pmax/psum — the
-    distributed flash-decode described in DESIGN.md §6.
+    ``cache.length`` may be a scalar (all sequences at the same position —
+    the fixed-batch path) or an int32[B] vector of per-sequence positions
+    (continuous batching, SERVING.md): each batch slot then writes and
+    masks at its own position.  With ``seq_axis`` set (long-context, global
+    layers) the cache's sequence dim is sharded across that mesh axis: each
+    shard computes partial (max, denom, numer) flash statistics, combined
+    with pmax/psum — the distributed flash-decode described in DESIGN.md §6.
+    Per-slot positions are not supported together with ``seq_axis``.
     """
     b, one, _ = x.shape
     pos = cache.length
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
-    if cfg.mrope_sections:
-        positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
+    per_slot = getattr(pos, "ndim", 0) == 1
+    if per_slot:
+        if seq_axis is not None:
+            raise ValueError("per-slot cache positions are incompatible "
+                             "with a sequence-sharded cache (seq_axis)")
+        positions = pos[:, None].astype(jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(pos[:, None, None],
+                                         (b, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)
 
     s_local = cache.k.shape[2]
-    if cfg.window > 0:
-        write_at = jnp.mod(pos, s_local)                  # ring buffer
-        in_range = jnp.ones((), bool)
-    elif seq_axis is not None:
-        shard = jax.lax.axis_index(seq_axis)
-        lo = shard * s_local
-        write_at = jnp.clip(pos - lo, 0, s_local - 1)
-        in_range = (pos >= lo) & (pos < lo + s_local)
+    idx = jnp.arange(s_local)
+    if per_slot:
+        # masked scatter: each slot writes at its own position
+        if cfg.window > 0:
+            write_at = jnp.mod(pos, s_local)              # ring buffer
+            in_range = jnp.ones((b,), bool)
+        else:
+            write_at = jnp.minimum(pos, s_local - 1)
+            in_range = pos < s_local
+        wmask = (idx[None, :] == write_at[:, None]) & in_range[:, None]
+        wm = wmask[:, None, :, None]                      # [B, 1, S, 1]
+        k_c = jnp.where(wm, k_new.astype(cache.k.dtype), cache.k)
+        v_c = jnp.where(wm, v_new.astype(cache.v.dtype), cache.v)
     else:
-        write_at = jnp.minimum(pos, s_local - 1)
-        in_range = pos < s_local
-
-    k_upd = jax.lax.dynamic_update_slice(
-        cache.k, k_new.astype(cache.k.dtype), (0, 0, write_at, 0))
-    v_upd = jax.lax.dynamic_update_slice(
-        cache.v, v_new.astype(cache.v.dtype), (0, 0, write_at, 0))
-    k_c = jnp.where(in_range, k_upd, cache.k)
-    v_c = jnp.where(in_range, v_upd, cache.v)
+        if cfg.window > 0:
+            write_at = jnp.mod(pos, s_local)              # ring buffer
+            in_range = jnp.ones((), bool)
+        elif seq_axis is not None:
+            shard = jax.lax.axis_index(seq_axis)
+            lo = shard * s_local
+            write_at = jnp.clip(pos - lo, 0, s_local - 1)
+            in_range = (pos >= lo) & (pos < lo + s_local)
+        else:
+            write_at = jnp.minimum(pos, s_local - 1)
+            in_range = pos < s_local
+        k_upd = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, 0, write_at, 0))
+        v_upd = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, 0, write_at, 0))
+        k_c = jnp.where(in_range, k_upd, cache.k)
+        v_c = jnp.where(in_range, v_upd, cache.v)
 
     # validity of cache slots
-    idx = jnp.arange(s_local)
-    if cfg.window > 0:
-        valid = (idx[None, :] <
-                 jnp.minimum(pos + 1, s_local))           # ring: all written
+    if per_slot:
+        if cfg.window > 0:
+            valid = idx[None, :] < jnp.minimum(pos + 1, s_local)[:, None]
+        else:
+            valid = idx[None, :] <= pos[:, None]
+    elif cfg.window > 0:
         # ring buffer holds the last `s_local` tokens; all slots < length+1
         valid = idx[None, :] < jnp.minimum(pos + 1, s_local)
     elif seq_axis is not None:

@@ -33,6 +33,9 @@ class MoEMetrics(NamedTuple):
     max_load: jax.Array      # scheduled max device load (tokens)
     balance: jax.Array       # max / mean device load
     overflow: jax.Array      # rows dropped to residual by capacity clipping
+    expert_load: jax.Array   # f32[E] group-wide routed tokens per expert
+                             # (feeds the serving replacement manager;
+                             # scalar 0 on dense layers)
 
 
 class MoEFFNSpec(NamedTuple):
@@ -106,5 +109,6 @@ def moe_ffn(
         max_load=sched.max_load,
         balance=sched.balance,
         overflow=plan.overflow,
+        expert_load=input_eg.sum(axis=1).astype(jnp.float32),
     )
     return out, metrics, sched.solver_state

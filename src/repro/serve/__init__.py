@@ -1,0 +1,35 @@
+"""Continuous-batching serving subsystem (SERVING.md).
+
+Turns the repo's decode path into a request server: open-loop traffic
+(traffic.py) feeds a slot/KV-budget batch manager (batching.py) driven by
+one compiled per-slot decode step (loop.py), with the MicroEP scheduler
+re-solving on the live batch's expert loads every step and an optional
+adaptive-replacement migration hook (replacement.py, paper §6.4).
+
+Quickstart::
+
+    from repro.configs import get_config
+    from repro.engine import ServeConfig
+    from repro.serve import ServingSession, poisson_trace
+
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    sess = ServingSession(cfg, ServeConfig(max_batch=4, max_seq=32))
+    report = sess.run(poisson_trace(8, rate=0.25, vocab=cfg.vocab))
+    print(report.summary())
+
+CLI: ``python -m repro.launch.serve --arch qwen1_5-0.5b --smoke
+--traffic poisson``.
+"""
+from .batching import ActiveSeq, BatchManager
+from .loop import ServeReport, ServingSession
+from .replacement import ServeReplacement
+from .request import Request, RequestRecord
+from .traffic import load_trace, poisson_trace, replay_trace
+
+__all__ = [
+    "ActiveSeq", "BatchManager",
+    "ServeReport", "ServingSession",
+    "ServeReplacement",
+    "Request", "RequestRecord",
+    "load_trace", "poisson_trace", "replay_trace",
+]

@@ -1,0 +1,287 @@
+"""The continuous-batching serving loop (SERVING.md).
+
+One :class:`ServingSession` owns the model params, the per-slot decode
+state, one compiled ``decode_step``, a :class:`BatchManager` and (optional)
+the adaptive replacement hook, and drives an open-loop request trace:
+
+  per decode step:
+    1. admit arrived requests into free slots against the KV budget
+       (slot caches are reset via ``decoder.reset_decode_slots``);
+    2. feed one token per active slot (prompt token while prefilling, else
+       the slot's last sampled token — prefill/decode interleaving);
+    3. run the compiled step.  Inside it the MicroEP scheduler re-solves
+       on the live batch's expert loads, warm-started from the previous
+       step (the per-micro-batch LP of paper §5 applied to serving);
+    4. harvest sampled tokens, retire finished sequences, free their
+       slots/budget;
+    5. feed measured expert loads to the replacement hook; on trigger,
+       migrate: rebuild the runtime around the regenerated placement and
+       re-materialize working params from the canonical master (paper
+       §6.4 — re-jit by design, the suspension cost is measured).
+
+The step clock (one tick per compiled step) is the virtual time base for
+arrivals, so a (trace seed, model seed) pair reproduces token-identical
+runs; wall-clock timestamps are recorded alongside for latency stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..engine import RuntimeConfig, ServeConfig
+from ..models import decoder as dec
+from .batching import BatchManager
+from .replacement import ServeReplacement
+from .request import Request, RequestRecord, percentile
+
+__all__ = ["ServingSession", "ServeReport"]
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate + per-request serving statistics (JSON schema: SERVING.md)."""
+
+    records: List[RequestRecord]
+    steps: int
+    wall_s: float
+    gen_tokens: int
+    processed_tokens: int
+    mean_balance: Optional[float]      # None for dense (no MoE layers)
+    overflow: float
+    migrations: int
+    migrated_bytes: int
+    rejected: int
+
+    def _ms(self, attr: str, q: float) -> Optional[float]:
+        vals = [getattr(r, attr) * 1e3 for r in self.records]
+        return percentile(vals, q)
+
+    def to_dict(self) -> dict:
+        rd = lambda v, n=3: None if v is None else round(v, n)
+        w = max(self.wall_s, 1e-9)
+        lat_mean = (float(np.mean([r.latency_s * 1e3 for r in self.records]))
+                    if self.records else None)
+        return {
+            "requests": len(self.records),
+            "rejected": self.rejected,
+            "steps": self.steps,
+            "wall_s": round(self.wall_s, 4),
+            "latency_ms": {"p50": rd(self._ms("latency_s", 50)),
+                           "p99": rd(self._ms("latency_s", 99)),
+                           "mean": rd(lat_mean)},
+            "ttft_ms": {"p50": rd(self._ms("ttft_s", 50)),
+                        "p99": rd(self._ms("ttft_s", 99))},
+            "gen_tokens": self.gen_tokens,
+            "processed_tokens": self.processed_tokens,
+            "gen_tokens_per_s": round(self.gen_tokens / w, 2),
+            "tokens_per_s": round(self.processed_tokens / w, 2),
+            "mean_balance": rd(self.mean_balance, 4),
+            "overflow": self.overflow,
+            "migrations": self.migrations,
+            "migrated_bytes": self.migrated_bytes,
+            "per_request": [r.to_dict() for r in self.records],
+        }
+
+    def summary(self) -> str:
+        d = self.to_dict()
+        bal = ("1.000 (dense: no MoE layers)" if self.mean_balance is None
+               else f"{self.mean_balance:.3f}")
+        fmt = lambda v: "n/a" if v is None else f"{v:.1f}"
+        return (
+            f"served {d['requests']} requests "
+            f"({d['rejected']} rejected) in {d['steps']} steps, "
+            f"{d['wall_s']:.2f}s wall\n"
+            f"latency ms: p50={fmt(d['latency_ms']['p50'])} "
+            f"p99={fmt(d['latency_ms']['p99'])}   "
+            f"ttft ms: p50={fmt(d['ttft_ms']['p50'])} "
+            f"p99={fmt(d['ttft_ms']['p99'])}\n"
+            f"throughput: {d['gen_tokens_per_s']:.1f} generated tokens/s "
+            f"({d['tokens_per_s']:.1f} processed tokens/s)\n"
+            f"mean balance ratio: {bal}   migrations: {self.migrations} "
+            f"({self.migrated_bytes} B)")
+
+
+class ServingSession:
+    """Continuous-batching server for one (arch config, optional mesh).
+
+    Without a mesh this is the CPU smoke path: the MoE dispatch runs the
+    full MicroEP machinery on the degenerate single-device group and the
+    replacement hook (if enabled) runs in shadow mode.  With a mesh the
+    decode step runs under the distributed runtime (``DistRuntime``) and
+    replacement migrations rebuild it around the regenerated placement.
+    """
+
+    def __init__(self, cfg: ArchConfig, serve_cfg: ServeConfig,
+                 run_cfg: Optional[RuntimeConfig] = None,
+                 mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.run_cfg = run_cfg if run_cfg is not None else RuntimeConfig(
+            dtype="float32", impl="ref", remat=False)
+        self.mesh = mesh
+        self.n_moe = dec.n_moe_layers(cfg)
+        key = jax.random.PRNGKey(seed)
+
+        if mesh is not None:
+            from ..launch import runtime as R     # avoid cycle at import
+            self._R = R
+            self.dr = R.build_runtime(cfg, mesh, self.run_cfg)
+            self.master = dec.init_params(key, cfg, jnp.float32)
+            self.params = self.dr.hooks.to_working(self.master)
+            self.rt = self.dr.rt
+            self.dtype = self.dr.dtype
+        else:
+            self._R = None
+            self.dr = None
+            self.master = None
+            self.params = dec.init_params(key, cfg, jnp.float32)
+            self.rt = dec.Runtime(impl=self.run_cfg.impl)
+            self.dtype = jnp.float32
+
+        self.replacement: Optional[ServeReplacement] = None
+        if serve_cfg.replacement and cfg.moe:
+            placement = (self.dr.engine.placement if self.dr is not None
+                         else None)
+            if placement is None:
+                # shadow mode: degenerate one-device placement
+                from ..core.placement import vanilla_placement
+                placement = vanilla_placement(
+                    1, 1, cfg.num_experts * max(cfg.etp, 1))
+            bpe = 3 * cfg.d_model * max(cfg.moe_d_ff, 1) \
+                * jnp.dtype(self.dtype).itemsize
+            self.replacement = ServeReplacement(placement, serve_cfg, bpe,
+                                                seed=seed)
+
+        self._step = self._make_step()
+        self._reset = jax.jit(dec.reset_decode_slots)
+
+    # ---------------------------------------------------------- compiled
+    def _make_step(self):
+        cfg, rt = self.cfg, self.rt
+
+        def step(params, state, toks, active):
+            logits, new_state, m = dec.decode_step(
+                params, cfg, state, {"tokens": toks, "active": active},
+                rt, with_metrics=True)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, new_state, (m.balance, m.expert_load, m.overflow)
+
+        return jax.jit(step)
+
+    def _warmup(self, state: dict) -> None:
+        """Compile the step + reset programs before the clock starts, so
+        latency stats measure serving, not XLA.  (A replacement migration's
+        mid-run re-jit stays in the stats by design — that suspension is
+        the measured migration cost.)"""
+        b = self.serve_cfg.max_batch
+        toks = jnp.zeros((b, 1), jnp.int32)
+        act = jnp.ones((b,), bool)
+        out = self._step(self.params, state, toks, act)
+        jax.block_until_ready(out[0])          # discard: state is immutable
+        jax.block_until_ready(
+            self._reset(state, jnp.zeros((b,), bool))["pos"])
+
+    def _init_state(self) -> dict:
+        sc = self.serve_cfg
+        state = dec.init_decode_state(self.cfg, sc.max_batch, sc.max_seq,
+                                      self.dtype, self.rt, per_slot=True)
+        if self.cfg.moe:
+            state["solver"] = (self.dr.init_solver() if self.dr is not None
+                               else dec.init_solver_states(self.cfg, 1))
+        return state
+
+    def _migrate(self, table, state: dict) -> dict:
+        """Swap in a regenerated placement (paper §6.4): rebuild the
+        runtime, redistribute canonical master params into the new working
+        layout, re-jit the step.  Shadow mode (no mesh) is a no-op."""
+        if self.dr is None:
+            return state
+        self.dr = self._R.build_runtime(self.cfg, self.mesh, self.run_cfg,
+                                        placement_table=table)
+        self.params = self.dr.hooks.to_working(self.master)
+        self.rt = self.dr.rt
+        self._step = self._make_step()
+        # replica geometry follows the new table; restart the warm start
+        state = dict(state)
+        state["solver"] = self.dr.init_solver()
+        return state
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request],
+            max_steps: Optional[int] = None,
+            warmup: bool = True) -> ServeReport:
+        bm = BatchManager(self.serve_cfg)
+        for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
+            bm.submit(r)
+        state = self._init_state()
+        if warmup:
+            self._warmup(state)
+        records: List[RequestRecord] = []
+        arrival_wall: dict = {}
+        step = 0
+        bal_sum = 0.0
+        bal_steps = 0
+        overflow = 0.0
+        processed = 0
+        t0 = time.perf_counter()
+
+        while bm.has_work() and (max_steps is None or step < max_steps):
+            if bm.n_active == 0:
+                nxt_arr = bm.next_arrival_step()
+                if nxt_arr is not None and nxt_arr > step:
+                    step = nxt_arr           # idle fast-forward (step clock)
+            now = time.perf_counter() - t0
+            for req in bm.queue:             # stamp wall arrival lazily
+                if req.arrival_step <= step and req.req_id not in arrival_wall:
+                    arrival_wall[req.req_id] = now
+            mask = bm.admit_ready(step)
+            if mask.any():
+                state = self._reset(state, jnp.asarray(mask))
+            toks, active = bm.next_tokens()
+            nxt, state, (bal, eload, ovf) = self._step(
+                self.params, state, jnp.asarray(toks), jnp.asarray(active))
+            nxt = np.asarray(nxt)            # block on the step
+            now = time.perf_counter() - t0
+            processed += int(active.sum())
+            for s in bm.observe(nxt, step, now):
+                records.append(RequestRecord(
+                    req_id=s.request.req_id,
+                    prompt_len=s.request.prompt_len,
+                    arrival_step=s.request.arrival_step,
+                    admit_step=s.admit_step,
+                    first_token_step=s.first_token_step,
+                    finish_step=step,
+                    arrival_wall=arrival_wall.get(s.request.req_id, now),
+                    first_token_wall=s.first_token_wall,
+                    finish_wall=now,
+                    tokens=list(s.tokens)))
+            if self.n_moe:
+                bal_sum += float(bal) / self.n_moe
+                bal_steps += 1
+                overflow += float(ovf)
+                if self.replacement is not None:
+                    new_table = self.replacement.observe(np.asarray(eload))
+                    if new_table is not None:
+                        state = self._migrate(new_table, state)
+            step += 1
+
+        wall = time.perf_counter() - t0
+        return ServeReport(
+            records=sorted(records, key=lambda r: r.req_id),
+            steps=step,
+            wall_s=wall,
+            gen_tokens=sum(r.n_generated for r in records),
+            processed_tokens=processed,
+            mean_balance=(bal_sum / bal_steps if bal_steps else None),
+            overflow=overflow,
+            migrations=(self.replacement.migrations
+                        if self.replacement else 0),
+            migrated_bytes=(self.replacement.migrated_bytes
+                            if self.replacement else 0),
+            rejected=len(bm.rejected))

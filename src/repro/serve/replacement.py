@@ -1,0 +1,68 @@
+"""Serving-side adaptive replacement hook (paper §6.4, SERVING.md).
+
+Bridges the host-side :class:`repro.core.replacement.ReplacementManager`
+(EMA load prediction + Eq. 3 placement evaluation + asymmetric regeneration)
+into the serving loop:
+
+  * every decode step the loop feeds the live batch's per-expert loads
+    (``MoEMetrics.expert_load``, summed over MoE layers) to ``observe``;
+  * when the manager regenerates the placement, the loop migrates — on a
+    mesh, rebuild the runtime around the new table and re-materialize the
+    working expert params from the canonical master (the canonical->working
+    redistribute of moe/sync.py; under GSPMD the same gather lowers to the
+    identical collectives).  Migration traffic is accounted exactly from
+    the new table's sync plan.
+
+Without a mesh (single-device CPU smoke path) the hook runs in *shadow*
+mode: prediction, trigger and regeneration run and are counted, but the
+degenerate one-device group has nothing to migrate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.placement import Placement
+from ..core.replacement import ReplacementConfig, ReplacementManager
+from ..engine import ServeConfig
+from ..moe.sync import build_sync_plan, sync_traffic_bytes
+
+__all__ = ["ServeReplacement"]
+
+
+class ServeReplacement:
+    """Predicted-balance-triggered placement migration for the serve loop."""
+
+    def __init__(self, placement: Placement, serve_cfg: ServeConfig,
+                 bytes_per_expert: int, seed: int = 0):
+        self.manager = ReplacementManager(
+            placement,
+            ReplacementConfig(check_every=serve_cfg.repl_check_every,
+                              threshold=serve_cfg.repl_threshold,
+                              seed=seed))
+        self.bytes_per_expert = int(bytes_per_expert)
+        self.migrated_bytes = 0
+
+    @property
+    def placement(self) -> Placement:
+        return self.manager.placement
+
+    @property
+    def migrations(self) -> int:
+        return self.manager.replacements
+
+    def observe(self, expert_load: np.ndarray) -> Optional[Placement]:
+        """Feed one decode step's per-expert loads.  Returns the regenerated
+        placement when the predicted balance degraded past the threshold
+        (the caller must migrate), else None."""
+        load = np.asarray(expert_load, np.float64).ravel()
+        if load.sum() <= 0:
+            return None                     # idle step: nothing routed
+        if not self.manager.observe(load):
+            return None
+        new = self.manager.placement
+        # exact per-device ppermute traffic of one canonical->working pass
+        self.migrated_bytes += sync_traffic_bytes(
+            build_sync_plan(new), self.bytes_per_expert)
+        return new

@@ -1,0 +1,109 @@
+"""Open-loop synthetic traffic for the serving loop (SERVING.md).
+
+Arrivals live on the *step clock* (decode-step-indexed virtual time), which
+keeps every trace a pure function of its seed: a Poisson process with rate
+``r`` requests/step is exponential inter-arrivals in step units, and a
+replay trace pins arrivals explicitly.  Open-loop means arrivals do not
+wait for the server — a saturated server grows the queue, exactly the
+regime where decode-time expert skew fluctuates request-to-request.
+
+Prompt token ids are drawn from the same affine-recurrence family as
+``data.synthetic.make_batch`` streams (structured, not uniform), so routed
+expert loads have realistic per-request correlation.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .request import Request
+
+__all__ = ["poisson_trace", "replay_trace", "load_trace"]
+
+LenSpec = Union[int, Tuple[int, int]]
+
+
+def _len_range(spec: LenSpec) -> Tuple[int, int]:
+    """int n -> uniform [max(1, n//2), n]; (lo, hi) -> itself."""
+    if isinstance(spec, tuple):
+        lo, hi = spec
+    else:
+        lo, hi = max(1, int(spec) // 2), int(spec)
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad length range {spec!r}")
+    return lo, hi
+
+
+def _prompt(rng: np.random.Generator, vocab: int, length: int) -> np.ndarray:
+    """Structured prompt: noisy affine recurrence mod vocab (same family as
+    data.synthetic.make_batch, one stream)."""
+    a = 2 * int(rng.integers(1, max(vocab // 2, 2))) + 1
+    b = int(rng.integers(0, vocab))
+    tok = np.empty(length, np.int32)
+    tok[0] = int(rng.integers(0, vocab))
+    for t in range(1, length):
+        tok[t] = (a * tok[t - 1] + b) % vocab
+    noise = rng.random(length) < 0.1
+    tok[noise] = rng.integers(0, vocab, noise.sum())
+    return tok
+
+
+def poisson_trace(
+    n_requests: int,
+    rate: float,
+    vocab: int,
+    prompt_len: LenSpec = 12,
+    gen_len: LenSpec = 16,
+    seed: int = 0,
+) -> List[Request]:
+    """Poisson arrivals at ``rate`` requests per decode step.
+
+    Deterministic for a fixed seed: inter-arrival gaps are exponential in
+    step units, accumulated and floored onto the step clock."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    p_lo, p_hi = _len_range(prompt_len)
+    g_lo, g_hi = _len_range(gen_len)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        p = int(rng.integers(p_lo, p_hi + 1))
+        g = int(rng.integers(g_lo, g_hi + 1))
+        out.append(Request(req_id=i, arrival_step=int(t),
+                           prompt=_prompt(rng, vocab, p), max_new=g))
+    return out
+
+
+def replay_trace(
+    arrivals: Sequence[Tuple[int, int, int]],
+    vocab: int,
+    seed: int = 0,
+) -> List[Request]:
+    """Pinned trace: (arrival_step, prompt_len, max_new) triples."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (step, p, g) in enumerate(arrivals):
+        out.append(Request(req_id=i, arrival_step=int(step),
+                           prompt=_prompt(rng, vocab, int(p)),
+                           max_new=int(g)))
+    return out
+
+
+def load_trace(path: str, vocab: int, seed: int = 0) -> List[Request]:
+    """Replay a JSON trace file: a list of objects with ``arrival_step``,
+    ``prompt_len``, ``max_new`` (prompt tokens are synthesized from the
+    seed; a ``prompt`` field of token ids overrides)."""
+    with open(path) as f:
+        spec = json.load(f)
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, r in enumerate(spec):
+        prompt = (np.asarray(r["prompt"], np.int32) if "prompt" in r
+                  else _prompt(rng, vocab, int(r["prompt_len"])))
+        out.append(Request(req_id=i, arrival_step=int(r["arrival_step"]),
+                           prompt=prompt, max_new=int(r["max_new"])))
+    return out

@@ -1,0 +1,202 @@
+"""Serving subsystem tests (SERVING.md): batch-manager invariants, the
+per-slot decode-cache machinery, and CPU smoke tests of the full
+continuous-batching loop (dense + MoE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import ConfigError, ServeConfig
+from repro.models import decoder as dec
+from repro.serve import (BatchManager, Request, ServingSession,
+                         poisson_trace, replay_trace)
+
+# ---------------------------------------------------------------- manager
+
+
+def _req(i, arrival, p, g, vocab=64):
+    rng = np.random.default_rng(i)
+    return Request(req_id=i, arrival_step=arrival,
+                   prompt=rng.integers(0, vocab, p), max_new=g)
+
+
+def test_batch_manager_kv_budget_and_slots():
+    # budget fits exactly two of the three 10-token requests at once
+    cfg = ServeConfig(max_batch=4, max_seq=16, kv_budget=20)
+    bm = BatchManager(cfg)
+    for i in range(3):
+        assert bm.submit(_req(i, arrival=0, p=6, g=4))
+    mask = bm.admit_ready(step=0)
+    assert mask.sum() == 2 and bm.n_active == 2          # 3rd blocked on KV
+    assert bm.reserved_tokens == 20 <= cfg.budget_tokens
+    # run steps until the first request finishes; budget never exceeded
+    step = 0
+    while bm.n_active == 2:
+        toks, active = bm.next_tokens()
+        assert active.sum() == bm.n_active
+        assert bm.cached_tokens <= bm.reserved_tokens
+        finished = bm.observe(np.full(cfg.max_batch, 7), step, 0.0)
+        step += 1
+    assert len(finished) == 2                            # same-length twins
+    assert bm.reserved_tokens == 0
+    # freed slots admit the queued request on the next step
+    mask = bm.admit_ready(step)
+    assert mask.sum() == 1 and bm.n_active == 1
+    assert bm.reserved_tokens == 10
+
+
+def test_batch_manager_fifo_and_slot_reuse():
+    cfg = ServeConfig(max_batch=1, max_seq=8)
+    bm = BatchManager(cfg)
+    bm.submit(_req(0, arrival=0, p=2, g=2))
+    bm.submit(_req(1, arrival=0, p=2, g=2))
+    assert bm.admit_ready(0).tolist() == [True]
+    assert bm.slots[0].request.req_id == 0               # FIFO
+    for step in range(10):
+        if bm.n_active == 0:
+            bm.admit_ready(step)
+        bm.next_tokens()
+        bm.observe(np.array([5]), step, 0.0)
+        if not bm.has_work():
+            break
+    assert not bm.has_work()                              # both served
+
+
+def test_batch_manager_rejects_oversize():
+    cfg = ServeConfig(max_batch=2, max_seq=8)
+    bm = BatchManager(cfg)
+    assert not bm.submit(_req(0, arrival=0, p=6, g=6))    # 12 > max_seq
+    assert bm.rejected and not bm.queue
+
+
+def test_serve_config_validation_and_roundtrip():
+    with pytest.raises(ConfigError):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ConfigError):
+        ServeConfig(repl_threshold=0.5)
+    with pytest.raises(ConfigError):
+        ServeConfig(max_seq=64, kv_budget=10)
+    sc = ServeConfig(max_batch=3, max_seq=48, replacement=True)
+    assert ServeConfig.from_dict(sc.to_dict()) == sc
+    assert sc.budget_tokens == 3 * 48
+
+
+def test_get_config_separator_insensitive():
+    assert get_config("qwen1_5-0.5b").name == "qwen1.5-0.5b"
+    assert get_config("paper_gpt_32x1_3b").name == "paper-gpt-32x1.3b"
+    with pytest.raises(KeyError):
+        get_config("no-such-arch")
+
+
+# ------------------------------------------------------- per-slot decode
+
+
+def test_per_slot_positions_match_scalar_decode(key):
+    """All slots aligned: the per-slot path must equal the scalar path."""
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    params = dec.init_params(key, cfg, jnp.float32)
+    b, steps = 2, 5
+    toks = jax.random.randint(key, (b, steps), 0, cfg.vocab)
+    s_sca = dec.init_decode_state(cfg, b, 8)
+    s_slt = dec.init_decode_state(cfg, b, 8, per_slot=True)
+    for t in range(steps):
+        l1, s_sca = dec.decode_step(params, cfg, s_sca,
+                                    {"tokens": toks[:, t:t + 1]})
+        l2, s_slt = dec.decode_step(params, cfg, s_slt,
+                                    {"tokens": toks[:, t:t + 1]})
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-5)
+    assert s_slt["pos"].shape == (b,)
+
+
+def test_reset_decode_slots_clears_only_masked(key):
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    params = dec.init_params(key, cfg, jnp.float32)
+    b = 3
+    state = dec.init_decode_state(cfg, b, 8, per_slot=True)
+    for t in range(3):
+        tok = jax.random.randint(jax.random.fold_in(key, t), (b, 1),
+                                 0, cfg.vocab)
+        _, state = dec.decode_step(params, cfg, state, {"tokens": tok})
+    mask = jnp.asarray([True, False, False])
+    new = dec.reset_decode_slots(state, mask)
+    assert new["pos"].tolist() == [0, 3, 3]
+    kv = new["scan"][0]          # first pattern group's stacked KVCache
+    assert float(jnp.abs(kv.k[:, 0]).max()) == 0.0        # slot 0 cleared
+    np.testing.assert_array_equal(np.asarray(kv.k[:, 1]),
+                                  np.asarray(state["scan"][0].k[:, 1]))
+
+    with pytest.raises(ValueError):
+        dec.reset_decode_slots(dec.init_decode_state(cfg, b, 8), mask)
+
+
+def test_decode_step_metrics_and_solver_threading(key):
+    """MoE decode with a solver carry: metrics report live expert loads
+    (sum = active tokens x top_k per MoE layer) and the warm start
+    round-trips through new_state."""
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    params = dec.init_params(key, cfg, jnp.float32)
+    b = 4
+    state = dec.init_decode_state(cfg, b, 8, per_slot=True)
+    state["solver"] = dec.init_solver_states(cfg, 1)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    logits, new_state, m = dec.decode_step(params, cfg, state,
+                                           {"tokens": tok},
+                                           with_metrics=True)
+    n_moe = dec.n_moe_layers(cfg)
+    assert n_moe > 0
+    assert m.expert_load.shape == (cfg.num_experts,)
+    assert float(m.expert_load.sum()) == n_moe * b * cfg.top_k
+    assert float(m.balance) / n_moe >= 1.0
+    assert jax.tree_util.tree_structure(new_state["solver"]) == \
+        jax.tree_util.tree_structure(state["solver"])
+    # inactive slots are masked out of routing and load metrics
+    active = jnp.asarray([True, True, False, False])
+    _, _, m2 = dec.decode_step(params, cfg, state,
+                               {"tokens": tok, "active": active},
+                               with_metrics=True)
+    assert float(m2.expert_load.sum()) == n_moe * 2 * cfg.top_k
+
+
+# ------------------------------------------------------------- full loop
+
+
+def test_serving_loop_smoke_dense():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    sess = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16))
+    trace = replay_trace([(0, 5, 3), (1, 5, 3), (6, 5, 3)],
+                         vocab=cfg.vocab, seed=3)
+    rep = sess.run(trace)
+    assert len(rep.records) == 3 and rep.rejected == 0
+    assert all(r.n_generated == 3 for r in rep.records)
+    assert rep.mean_balance is None                      # dense
+    d = rep.to_dict()
+    assert d["latency_ms"]["p50"] is not None
+    assert d["ttft_ms"]["p99"] is not None
+    assert d["gen_tokens"] == 9
+    # deterministic for fixed seeds: identical token streams
+    rep2 = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16)).run(
+        replay_trace([(0, 5, 3), (1, 5, 3), (6, 5, 3)],
+                     vocab=cfg.vocab, seed=3))
+    assert [r.tokens for r in rep.records] == \
+        [r.tokens for r in rep2.records]
+    assert [r.finish_step for r in rep.records] == \
+        [r.finish_step for r in rep2.records]
+
+
+def test_serving_loop_smoke_moe_poisson():
+    """Full serving loop on an MoE config: per-step rescheduling with the
+    solver warm start, balance metrics, shadow replacement hook."""
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    sc = ServeConfig(max_batch=2, max_seq=16, replacement=True,
+                     repl_check_every=4, repl_threshold=1.05)
+    sess = ServingSession(cfg, sc)
+    trace = poisson_trace(4, rate=0.5, vocab=cfg.vocab,
+                          prompt_len=6, gen_len=4, seed=5)
+    rep = sess.run(trace)
+    assert len(rep.records) == 4
+    assert rep.mean_balance is not None and rep.mean_balance >= 1.0
+    assert rep.overflow == 0.0
+    assert rep.migrations >= 0                           # shadow mode runs
+    assert rep.processed_tokens >= rep.gen_tokens > 0

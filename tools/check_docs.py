@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs-consistency checker: every doc citation in the source tree must
+resolve.
+
+Scans src/, benchmarks/, examples/, tests/ for citations of the form
+``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``, ``ROADMAP.md``, ``PAPER.md``
+— optionally with a section number (``DESIGN.md §6``) — and fails if the
+cited file does not exist at the repo root or, for ``DESIGN.md §N``, if no
+Markdown heading containing ``§N`` exists.  Run by CI
+(.github/workflows/ci.yml) and by tests/test_docs.py.
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|ROADMAP|PAPER)\.md"
+                  r"(?:\s*§\s*(\d+))?")
+HEADING_SECTION = re.compile(r"^#+\s.*§\s*(\d+)\b")
+
+
+def doc_sections(path: pathlib.Path) -> set:
+    """Section numbers announced by Markdown headings (e.g. '## §6 — ...')."""
+    nums = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = HEADING_SECTION.match(line)
+        if m:
+            nums.add(int(m.group(1)))
+    return nums
+
+
+def check(root: pathlib.Path = ROOT) -> list:
+    sections = {name: (doc_sections(root / f"{name}.md")
+                       if (root / f"{name}.md").exists() else None)
+                for name in ("DESIGN", "ENGINE", "SERVING",
+                             "ROADMAP", "PAPER")}
+    errors = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.exists():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            rel = py.relative_to(root)
+            text = py.read_text(encoding="utf-8")
+            for ln, line in enumerate(text.splitlines(), 1):
+                for m in CITE.finditer(line):
+                    name, sec = m.group(1), m.group(2)
+                    if sections[name] is None:
+                        errors.append(f"{rel}:{ln}: cites {name}.md, "
+                                      f"which does not exist")
+                    elif sec is not None and int(sec) not in sections[name]:
+                        errors.append(
+                            f"{rel}:{ln}: cites {name}.md §{sec}, but "
+                            f"{name}.md has no heading for §{sec} "
+                            f"(found: {sorted(sections[name])})")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        print(f"docs-consistency: {len(errors)} unresolved citation(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docs-consistency: all doc citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
