@@ -42,13 +42,19 @@ def run_one(name: str, arch: str, rate: float, requests: int,
     d = report.to_dict()
     d.pop("per_request")
     d["arch"] = cfg.name
+    # why the last migration fired (decision record: observed vs predicted
+    # loads, score, threshold — TELEMETRY.md)
+    last_mig = d["migration_events"][-1] if d["migration_events"] else None
     emit(name, arch=cfg.name,
          gen_tokens_per_s=d["gen_tokens_per_s"],
          tokens_per_s=d["tokens_per_s"],
          p50_ms=d["latency_ms"]["p50"], p99_ms=d["latency_ms"]["p99"],
          ttft_p50_ms=d["ttft_ms"]["p50"],
          mean_balance=d["mean_balance"],
-         migrations=d["migrations"])
+         migrations=d["migrations"],
+         last_migration_score=(last_mig["score"] if last_mig else None),
+         last_migration_threshold=(last_mig["threshold"]
+                                   if last_mig else None))
     return d
 
 

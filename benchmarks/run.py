@@ -14,8 +14,9 @@ import time
 import traceback
 
 from . import (bench_ablation, bench_balance, bench_breakdown,
-               bench_commaware, bench_e2e_model, bench_migration,
-               bench_pipeline, bench_sched_overhead, bench_serving)
+               bench_commaware, bench_e2e_model, bench_forecast,
+               bench_migration, bench_pipeline, bench_sched_overhead,
+               bench_serving)
 
 ALL = {
     "fig6_e2e": bench_e2e_model.run,
@@ -27,6 +28,7 @@ ALL = {
     "fig15_commaware": bench_commaware.run,
     "fig16_pipeline": bench_pipeline.run,
     "serving": bench_serving.run,
+    "forecast": bench_forecast.run,
 }
 
 

@@ -50,6 +50,7 @@ class ReplacementManager:
         self.step = 0
         self.replacements = 0
         self.migrated_bytes = 0
+        self.last_decision: Optional[dict] = None
         self._rng = np.random.default_rng(cfg.seed)
 
     def ideal(self, loads: np.ndarray) -> float:
@@ -70,6 +71,16 @@ class ReplacementManager:
             self.placement, predicted, num_samples=256, rng=self._rng
         )
         ideal = max(self.ideal(predicted), 1e-9)
+        # decision inputs, surfaced so serving stats can say *why* a
+        # migration fired (TELEMETRY.md; consumed by serve.ServeReplacement)
+        self.last_decision = {
+            "step": self.step,
+            "observed": [round(float(v), 4) for v in loads],
+            "predicted": [round(float(v), 4) for v in predicted],
+            "score": round(m / ideal, 4),
+            "threshold": self.cfg.threshold,
+            "fired": m / ideal > self.cfg.threshold,
+        }
         if m / ideal <= self.cfg.threshold:
             return False
         p = self.placement

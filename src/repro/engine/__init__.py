@@ -31,7 +31,7 @@ from .registry import (
     get_baseline_system,
 )
 from .config import (ConfigError, PlacementSpec, RuntimeConfig,
-                     SchedulePolicy, ServeConfig)
+                     SchedulePolicy, ServeConfig, TelemetryConfig)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -40,5 +40,5 @@ __all__ = [
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
     "ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
-    "ServeConfig", "MicroEPEngine",
+    "ServeConfig", "TelemetryConfig", "MicroEPEngine",
 ]

@@ -26,7 +26,7 @@ from typing import Any, Mapping, Optional, Tuple
 import numpy as np
 
 __all__ = ["ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
-           "ServeConfig"]
+           "ServeConfig", "TelemetryConfig"]
 
 
 class ConfigError(ValueError):
@@ -383,6 +383,135 @@ class ServeConfig:
                    eos_token=args.eos_token, replacement=args.replacement,
                    repl_check_every=args.repl_check_every,
                    repl_threshold=args.repl_threshold)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Expert-load telemetry configuration (TELEMETRY.md).
+
+    record               — capture per-step expert loads into a
+                           ``telemetry.LoadTraceRecorder``.
+    trace_path           — where to save the recorded trace (npz, or
+                           ``.jsonl``); None = keep in memory only.
+    predictor            — load-predictor registry key (built-ins: last,
+                           ema, window, frozen; extend with
+                           ``telemetry.register_predictor``).
+    horizon              — forecast distance in steps.
+    window               — sliding-window length for the 'window' predictor.
+    ema_decay            — decay for the 'ema' predictor.
+    freeze_window /      — stabilization window + relative-change threshold
+    freeze_threshold       for the 'frozen' predictor (arXiv:2404.16914).
+    forecast_replacement — drive serving replacement from the forecast
+                           planner instead of the instantaneous-load
+                           trigger (the config switch of TELEMETRY.md).
+    prewarm              — in training, seed the next step's in-graph
+                           solver warm start from the LP oracle on the
+                           forecast loads.
+    """
+
+    record: bool = False
+    trace_path: Optional[str] = None
+    predictor: str = "window"
+    horizon: int = 1
+    window: int = 8
+    ema_decay: float = 0.9
+    freeze_window: int = 8
+    freeze_threshold: float = 0.05
+    forecast_replacement: bool = False
+    prewarm: bool = False
+
+    def __post_init__(self):
+        if not isinstance(self.predictor, str) or not self.predictor:
+            raise ConfigError(
+                f"TelemetryConfig.predictor must be a non-empty registry "
+                f"key, got {self.predictor!r}")
+        for name, lo in (("horizon", 1), ("window", 1),
+                         ("freeze_window", 2)):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < lo:
+                raise ConfigError(
+                    f"TelemetryConfig.{name} must be an int >= {lo}, "
+                    f"got {v!r}")
+        if not 0.0 < self.ema_decay < 1.0:
+            raise ConfigError(
+                f"TelemetryConfig.ema_decay must be in (0, 1), "
+                f"got {self.ema_decay!r}")
+        if not self.freeze_threshold > 0:
+            raise ConfigError(
+                f"TelemetryConfig.freeze_threshold must be > 0, "
+                f"got {self.freeze_threshold!r}")
+
+    @property
+    def enabled(self) -> bool:
+        """Anything to do at all (recording, planning, or pre-warming)."""
+        return self.record or self.forecast_replacement or self.prewarm \
+            or self.trace_path is not None
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TelemetryConfig":
+        return cls(**_known_fields(cls, d))
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "TelemetryConfig" = None) -> None:
+        d = defaults if defaults is not None else TelemetryConfig()
+        b = argparse.BooleanOptionalAction
+        g = parser.add_argument_group("telemetry")
+        g.add_argument("--telemetry-record", action=b, default=d.record,
+                       help="capture per-step expert loads (TELEMETRY.md)")
+        g.add_argument("--trace-out", default=d.trace_path,
+                       help="save the recorded trace here (.npz or .jsonl)")
+        g.add_argument("--predictor", default=d.predictor,
+                       help="load predictor (registry key; built-ins: "
+                            "last, ema, window, frozen)")
+        g.add_argument("--predict-horizon", type=int, default=d.horizon)
+        g.add_argument("--predictor-window", type=int, default=d.window)
+        g.add_argument("--predictor-ema-decay", type=float,
+                       default=d.ema_decay)
+        g.add_argument("--freeze-window", type=int, default=d.freeze_window)
+        g.add_argument("--freeze-threshold", type=float,
+                       default=d.freeze_threshold)
+        g.add_argument("--forecast-replacement", action=b,
+                       default=d.forecast_replacement,
+                       help="drive replacement from the forecast planner "
+                            "instead of the instantaneous-load trigger")
+        g.add_argument("--prewarm", action=b, default=d.prewarm,
+                       help="LP-prewarm the solver from forecast loads")
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "TelemetryConfig":
+        return cls(record=args.telemetry_record, trace_path=args.trace_out,
+                   predictor=args.predictor, horizon=args.predict_horizon,
+                   window=args.predictor_window,
+                   ema_decay=args.predictor_ema_decay,
+                   freeze_window=args.freeze_window,
+                   freeze_threshold=args.freeze_threshold,
+                   forecast_replacement=args.forecast_replacement,
+                   prewarm=args.prewarm)
+
+    def to_cli_args(self) -> list:
+        """Flag list such that ``from_cli_args(parser.parse_args(...))``
+        reproduces this config."""
+        flags = [
+            "--telemetry-record" if self.record else "--no-telemetry-record",
+            "--predictor", self.predictor,
+            "--predict-horizon", str(self.horizon),
+            "--predictor-window", str(self.window),
+            "--predictor-ema-decay", str(self.ema_decay),
+            "--freeze-window", str(self.freeze_window),
+            "--freeze-threshold", str(self.freeze_threshold),
+            "--forecast-replacement" if self.forecast_replacement
+            else "--no-forecast-replacement",
+            "--prewarm" if self.prewarm else "--no-prewarm",
+        ]
+        if self.trace_path is not None:
+            flags += ["--trace-out", self.trace_path]
+        return flags
 
 
 def _known_fields(cls, d: Mapping[str, Any]) -> dict:

@@ -315,11 +315,13 @@ def build_runtime(
 
 def make_train_fn(dr: DistRuntime, n_micro: int = 8,
                   opt_cfg: AdamWConfig = AdamWConfig(),
-                  grad_rs: bool = False):
+                  grad_rs: bool = False, with_expert_load: bool = False):
     """jit-able train_step(TrainState, batch) on the mesh.
 
     ``grad_rs``: constrain master grads to the ZeRO-1 master layout so the
-    DP reduction lowers as reduce-scatter (§Perf lever)."""
+    DP reduction lowers as reduce-scatter (§Perf lever).
+    ``with_expert_load``: add the layer-summed per-expert load vector to
+    the metrics dict (telemetry capture, TELEMETRY.md)."""
     constraint = None
     if grad_rs:
         mi, cfg = dr.mi, dr.cfg
@@ -332,7 +334,8 @@ def make_train_fn(dr: DistRuntime, n_micro: int = 8,
 
     step = make_train_step(dr.cfg, dr.rt, opt_cfg, dr.hooks,
                            n_micro=n_micro,
-                           master_grad_constraint=constraint)
+                           master_grad_constraint=constraint,
+                           with_expert_load=with_expert_load)
     return step
 
 

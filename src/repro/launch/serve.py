@@ -15,9 +15,11 @@ report).
       --traffic replay --trace trace.json
 
 Engine flags (``--placement``, ``--mode``, ``--sweeps``, ``--dtype``,
-``--capacity-factor``, ...) and serving flags (``--max-batch``,
-``--max-seq``, ``--kv-budget``, ``--replacement``, ...) share the typed
-config surface of ``repro.engine`` (ENGINE.md).  ``--data-axis N`` (with
+``--capacity-factor``, ...), serving flags (``--max-batch``, ``--max-seq``,
+``--kv-budget``, ``--replacement``, ...) and telemetry flags
+(``--telemetry-record``, ``--trace-out``, ``--forecast-replacement``,
+``--predictor``, ... — TELEMETRY.md) share the typed config surface of
+``repro.engine`` (ENGINE.md).  ``--data-axis N`` (with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=...``) serves on a
 local mesh through the distributed runtime.
 """
@@ -27,8 +29,9 @@ import argparse
 import json
 
 from ..configs import get_config
-from ..engine import RuntimeConfig, ServeConfig
-from ..serve import ServingSession, load_trace, poisson_trace, replay_trace
+from ..engine import RuntimeConfig, ServeConfig, TelemetryConfig
+from ..serve import (ServingSession, load_trace, poisson_trace, replay_trace,
+                     trace_requests)
 from .mesh import make_local_mesh
 
 
@@ -37,7 +40,9 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--traffic", default="poisson",
-                    choices=["poisson", "replay"])
+                    choices=["poisson", "replay", "trace"],
+                    help="'trace' shapes non-stationary arrivals from a "
+                         "recorded expert-load trace (TELEMETRY.md)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.25,
                     help="poisson arrival rate (requests per decode step)")
@@ -46,7 +51,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16,
                     help="max generation length (sampled like --prompt-len)")
     ap.add_argument("--trace", default=None,
-                    help="JSON trace file for --traffic replay")
+                    help="JSON request trace for --traffic replay, or a "
+                         "recorded load trace (npz/jsonl) for "
+                         "--traffic trace")
     ap.add_argument("--data-axis", type=int, default=0,
                     help="0 = single device (no mesh)")
     ap.add_argument("--model-axis", type=int, default=1)
@@ -57,9 +64,14 @@ def main(argv=None):
     RuntimeConfig.add_cli_args(
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     ServeConfig.add_cli_args(ap)
+    TelemetryConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     serve_cfg = ServeConfig.from_cli_args(args)
+    telemetry = TelemetryConfig.from_cli_args(args)
+    if telemetry.forecast_replacement and not serve_cfg.replacement:
+        ap.error("--forecast-replacement selects the trigger policy of the "
+                 "replacement hook; enable the hook with --replacement")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -75,7 +87,13 @@ def main(argv=None):
         print(f"note: default --max-seq grown to {serve_cfg.max_seq} to fit "
               f"--prompt-len {args.prompt_len} + --gen {args.gen}")
 
-    if args.traffic == "replay" and args.trace:
+    if args.traffic == "trace":
+        if not args.trace:
+            ap.error("--traffic trace needs --trace LOADTRACE.npz")
+        requests = trace_requests(args.trace, cfg.vocab, rate=args.rate,
+                                  prompt_len=args.prompt_len,
+                                  gen_len=args.gen, seed=args.seed + 1)
+    elif args.traffic == "replay" and args.trace:
         requests = load_trace(args.trace, cfg.vocab, seed=args.seed + 1)
     elif args.traffic == "replay":
         every = max(int(round(1.0 / args.rate)), 1)
@@ -91,12 +109,16 @@ def main(argv=None):
     mesh = (make_local_mesh(args.data_axis, args.model_axis)
             if args.data_axis > 0 else None)
     sess = ServingSession(cfg, serve_cfg, run_cfg=run_cfg, mesh=mesh,
-                          seed=args.seed)
+                          seed=args.seed,
+                          telemetry=telemetry if telemetry.enabled else None)
     report = sess.run(requests)
     print(f"arch={cfg.name} slots={serve_cfg.max_batch} "
           f"max_seq={serve_cfg.max_seq} "
           f"kv_budget={serve_cfg.budget_tokens} traffic={args.traffic}")
     print(report.summary())
+    if sess.recorder is not None and telemetry.trace_path:
+        print(f"recorded {len(sess.recorder)}-step load trace -> "
+              f"{telemetry.trace_path}")
     if args.json:
         print(json.dumps(report.to_dict(), indent=1))
     return 0

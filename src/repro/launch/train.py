@@ -19,14 +19,17 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..checkpoint import save_checkpoint
 from ..configs import get_config
 from ..data.synthetic import SyntheticLM
-from ..engine import RuntimeConfig
+from ..engine import RuntimeConfig, TelemetryConfig
 from ..models import decoder as dec
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..optim.schedule import warmup_cosine
+from ..telemetry import (LoadTraceRecorder, ReplacementPlanner,
+                         predictor_from_config, prewarm_solver_states)
 from ..train.loop import TrainState, make_train_step
 from ..train.metrics import MetricLogger
 from . import runtime as R
@@ -54,12 +57,18 @@ def main(argv=None):
     # training defaults to float32 master math without remat
     RuntimeConfig.add_cli_args(
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
+    TelemetryConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
+    telemetry = TelemetryConfig.from_cli_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    # telemetry needs the per-step expert-load vector out of the compiled
+    # step (TELEMETRY.md); dense configs have nothing to record
+    want_load = cfg.moe and (telemetry.record or telemetry.prewarm
+                             or telemetry.trace_path is not None)
 
     opt_cfg = AdamWConfig(lr=args.lr)
     lr_fn = lambda s: warmup_cosine(s, args.lr, warmup=20, total=args.steps)
@@ -74,22 +83,56 @@ def main(argv=None):
                         solver=dr.init_solver() if cfg.moe else None,
                         step=jnp.zeros((), jnp.int32))
         step = jax.jit(R.make_train_fn(dr, n_micro=args.n_micro,
-                                       opt_cfg=opt_cfg))
+                                       opt_cfg=opt_cfg,
+                                       with_expert_load=want_load))
+        placement = dr.engine.placement if cfg.moe else None
     else:
         master = dec.init_params(key, cfg, jnp.float32)
         ts = TrainState(master=master, opt=adamw_init(master),
                         solver=dec.init_solver_states(cfg, 1),
                         step=jnp.zeros((), jnp.int32))
         step = jax.jit(make_train_step(cfg, opt_cfg=opt_cfg,
-                                       n_micro=args.n_micro, lr_fn=lr_fn))
+                                       n_micro=args.n_micro, lr_fn=lr_fn,
+                                       with_expert_load=want_load))
+        placement = None
+        if cfg.moe:
+            from ..core.placement import vanilla_placement
+            placement = vanilla_placement(
+                1, 1, cfg.num_experts * max(cfg.etp, 1))
+
+    recorder = None
+    if want_load:
+        recorder = LoadTraceRecorder(
+            source="train", meta={"arch": cfg.name, "seed": int(args.seed)})
+    # forecast-driven solver pre-warm (TELEMETRY.md): the LPP-1 oracle on
+    # the *predicted* next-step loads seeds the in-graph warm start
+    planner = None
+    if want_load and telemetry.prewarm:
+        planner = ReplacementPlanner(
+            placement, predictor=predictor_from_config(telemetry),
+            check_every=10 ** 9,        # plan never; forecast every step
+            horizon=telemetry.horizon, seed=args.seed)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
                        noise=0.05, n_maps=4, seed=args.seed + 1)
     logger = MetricLogger(csv_path=args.csv, print_every=10)
     for i, batch in zip(range(args.steps), data):
         ts, m = step(ts, batch)
+        if want_load:
+            eload = np.asarray(m.pop("expert_load"), np.float64)
+            if recorder is not None:
+                recorder.record(i, eload)
+            if planner is not None:
+                planner.observe(eload)
+                if planner.history_size >= planner.min_history:
+                    ts = ts._replace(solver=prewarm_solver_states(
+                        ts.solver, planner.warm_start_x()))
         logger.log(i, m)
     logger.close()
+    if recorder is not None and telemetry.trace_path:
+        recorder.save(telemetry.trace_path)
+        print(f"recorded {len(recorder)}-step load trace -> "
+              f"{telemetry.trace_path}")
 
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.steps, ts.master,

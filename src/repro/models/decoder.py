@@ -547,8 +547,13 @@ def lm_loss_chunked(x: jax.Array, w_out: jax.Array, labels: jax.Array,
 
 def loss_fn(params, cfg: ArchConfig, batch: dict, rt: Runtime = _NULL_RT,
             solver_states=None, aux_coeff: float = 1e-4,
-            z_coeff: float = 1e-4, loss_chunk_t: int = 512):
-    """Scalar training loss (CE + MoE aux) -> (loss, (Metrics, new_states))."""
+            z_coeff: float = 1e-4, loss_chunk_t: int = 512,
+            with_expert_load: bool = False):
+    """Scalar training loss (CE + MoE aux) -> (loss, (Metrics, new_states)).
+
+    ``with_expert_load=True`` appends the layer-summed per-expert routed
+    token counts (f32[E_virt], ``MoEMetrics.expert_load``) to the aux tuple
+    — the training-side feed for the telemetry recorder (TELEMETRY.md)."""
     hidden, moe, new_states = forward(params, cfg, batch, rt, solver_states,
                                       return_hidden=True)
     head = params.get("head")
@@ -563,6 +568,8 @@ def loss_fn(params, cfg: ArchConfig, batch: dict, rt: Runtime = _NULL_RT,
                       z_loss=moe.z_loss,
                       balance=moe.balance / n_moe,
                       overflow=moe.overflow)
+    if with_expert_load:
+        return loss, (metrics, new_states, moe.expert_load)
     return loss, (metrics, new_states)
 
 

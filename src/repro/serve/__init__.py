@@ -1,10 +1,12 @@
 """Continuous-batching serving subsystem (SERVING.md).
 
 Turns the repo's decode path into a request server: open-loop traffic
-(traffic.py) feeds a slot/KV-budget batch manager (batching.py) driven by
-one compiled per-slot decode step (loop.py), with the MicroEP scheduler
-re-solving on the live batch's expert loads every step and an optional
-adaptive-replacement migration hook (replacement.py, paper §6.4).
+(traffic.py — Poisson, pinned replay, or non-stationary arrivals shaped
+by a recorded expert-load trace) feeds a slot/KV-budget batch manager
+(batching.py) driven by one compiled per-slot decode step (loop.py), with
+the MicroEP scheduler re-solving on the live batch's expert loads every
+step and an optional adaptive-replacement migration hook (replacement.py,
+paper §6.4 — reactive, or forecast-driven via TELEMETRY.md).
 
 Quickstart::
 
@@ -24,7 +26,8 @@ from .batching import ActiveSeq, BatchManager
 from .loop import ServeReport, ServingSession
 from .replacement import ServeReplacement
 from .request import Request, RequestRecord
-from .traffic import load_trace, poisson_trace, replay_trace
+from .traffic import (LoadReplay, load_trace, poisson_trace, replay_trace,
+                      trace_requests, trace_source)
 
 __all__ = [
     "ActiveSeq", "BatchManager",
@@ -32,4 +35,5 @@ __all__ = [
     "ServeReplacement",
     "Request", "RequestRecord",
     "load_trace", "poisson_trace", "replay_trace",
+    "LoadReplay", "trace_source", "trace_requests",
 ]

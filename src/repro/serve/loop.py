@@ -34,8 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..engine import RuntimeConfig, ServeConfig
+from ..engine import RuntimeConfig, ServeConfig, TelemetryConfig
 from ..models import decoder as dec
+from ..telemetry import LoadTraceRecorder
 from .batching import BatchManager
 from .replacement import ServeReplacement
 from .request import Request, RequestRecord, percentile
@@ -57,6 +58,9 @@ class ServeReport:
     migrations: int
     migrated_bytes: int
     rejected: int
+    # decision records of fired migrations: step, observed/predicted loads,
+    # score, threshold (SERVING.md / TELEMETRY.md — *why* each one fired)
+    migration_events: List[dict] = dataclasses.field(default_factory=list)
 
     def _ms(self, attr: str, q: float) -> Optional[float]:
         vals = [getattr(r, attr) * 1e3 for r in self.records]
@@ -85,6 +89,7 @@ class ServeReport:
             "overflow": self.overflow,
             "migrations": self.migrations,
             "migrated_bytes": self.migrated_bytes,
+            "migration_events": self.migration_events,
             "per_request": [r.to_dict() for r in self.records],
         }
 
@@ -93,6 +98,11 @@ class ServeReport:
         bal = ("1.000 (dense: no MoE layers)" if self.mean_balance is None
                else f"{self.mean_balance:.3f}")
         fmt = lambda v: "n/a" if v is None else f"{v:.1f}"
+        why = ""
+        if self.migration_events:
+            e = self.migration_events[-1]
+            why = (f"\nlast migration: step {e['step']} score "
+                   f"{e['score']:.3f} > threshold {e['threshold']:.3f}")
         return (
             f"served {d['requests']} requests "
             f"({d['rejected']} rejected) in {d['steps']} steps, "
@@ -104,7 +114,7 @@ class ServeReport:
             f"throughput: {d['gen_tokens_per_s']:.1f} generated tokens/s "
             f"({d['tokens_per_s']:.1f} processed tokens/s)\n"
             f"mean balance ratio: {bal}   migrations: {self.migrations} "
-            f"({self.migrated_bytes} B)")
+            f"({self.migrated_bytes} B)" + why)
 
 
 class ServingSession:
@@ -119,9 +129,11 @@ class ServingSession:
 
     def __init__(self, cfg: ArchConfig, serve_cfg: ServeConfig,
                  run_cfg: Optional[RuntimeConfig] = None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0,
+                 telemetry: Optional[TelemetryConfig] = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
+        self.telemetry = telemetry
         self.run_cfg = run_cfg if run_cfg is not None else RuntimeConfig(
             dtype="float32", impl="ref", remat=False)
         self.mesh = mesh
@@ -156,7 +168,15 @@ class ServingSession:
             bpe = 3 * cfg.d_model * max(cfg.moe_d_ff, 1) \
                 * jnp.dtype(self.dtype).itemsize
             self.replacement = ServeReplacement(placement, serve_cfg, bpe,
-                                                seed=seed)
+                                                seed=seed,
+                                                telemetry=telemetry)
+
+        # expert-load trace capture on the step clock (TELEMETRY.md)
+        self.recorder: Optional[LoadTraceRecorder] = None
+        if telemetry is not None and cfg.moe and \
+                (telemetry.record or telemetry.trace_path is not None):
+            self.recorder = LoadTraceRecorder(
+                source="serve", meta={"arch": cfg.name, "seed": int(seed)})
 
         self._step = self._make_step()
         self._reset = jax.jit(dec.reset_decode_slots)
@@ -219,6 +239,15 @@ class ServingSession:
         bm = BatchManager(self.serve_cfg)
         for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
             bm.submit(r)
+        if self.recorder is not None and len(self.recorder):
+            # one run = one trace: a second run() starts a fresh recording
+            self.recorder = LoadTraceRecorder(source="serve",
+                                              meta=dict(self.recorder.meta))
+        # replacement state (placement, history) persists across runs, but
+        # the report counts only this run's migrations/events
+        mig0 = self.replacement.migrations if self.replacement else 0
+        bytes0 = self.replacement.migrated_bytes if self.replacement else 0
+        ev0 = len(self.replacement.events) if self.replacement else 0
         state = self._init_state()
         if warmup:
             self._warmup(state)
@@ -265,13 +294,19 @@ class ServingSession:
                 bal_sum += float(bal) / self.n_moe
                 bal_steps += 1
                 overflow += float(ovf)
+                if self.recorder is not None:
+                    self.recorder.record(step, np.asarray(eload, np.float64))
                 if self.replacement is not None:
-                    new_table = self.replacement.observe(np.asarray(eload))
+                    new_table = self.replacement.observe(np.asarray(eload),
+                                                         step=step)
                     if new_table is not None:
                         state = self._migrate(new_table, state)
             step += 1
 
         wall = time.perf_counter() - t0
+        if self.recorder is not None and self.telemetry is not None \
+                and self.telemetry.trace_path:
+            self.recorder.save(self.telemetry.trace_path)
         return ServeReport(
             records=sorted(records, key=lambda r: r.req_id),
             steps=step,
@@ -280,8 +315,11 @@ class ServingSession:
             processed_tokens=processed,
             mean_balance=(bal_sum / bal_steps if bal_steps else None),
             overflow=overflow,
-            migrations=(self.replacement.migrations
+            migrations=(self.replacement.migrations - mig0
                         if self.replacement else 0),
-            migrated_bytes=(self.replacement.migrated_bytes
+            migrated_bytes=(self.replacement.migrated_bytes - bytes0
                             if self.replacement else 0),
-            rejected=len(bm.rejected))
+            rejected=len(bm.rejected),
+            migration_events=([e for e in self.replacement.events[ev0:]
+                               if e.get("fired")]
+                              if self.replacement else []))

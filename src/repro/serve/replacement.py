@@ -1,8 +1,6 @@
 """Serving-side adaptive replacement hook (paper §6.4, SERVING.md).
 
-Bridges the host-side :class:`repro.core.replacement.ReplacementManager`
-(EMA load prediction + Eq. 3 placement evaluation + asymmetric regeneration)
-into the serving loop:
+Bridges a placement manager into the serving loop:
 
   * every decode step the loop feeds the live batch's per-expert loads
     (``MoEMetrics.expert_load``, summed over MoE layers) to ``observe``;
@@ -13,19 +11,34 @@ into the serving loop:
     identical collectives).  Migration traffic is accounted exactly from
     the new table's sync plan.
 
+Two trigger policies, selected by ``TelemetryConfig.forecast_replacement``
+(TELEMETRY.md):
+
+  * **reactive** (default) — :class:`repro.core.replacement.ReplacementManager`:
+    EMA of the instantaneous loads + Eq. 3 density check.
+  * **forecast** — :class:`repro.telemetry.planner.ReplacementPlanner`: fit
+    a registered predictor on the recorded load history, score the current
+    placement against the *forecast* via the exact LPP-1 oracle, and
+    migrate only when a candidate regenerated for the forecast beats it.
+
+Either way every check leaves a decision record (observed vs. predicted
+loads, score, threshold, fired) in ``events``; fired ones surface in
+``ServeReport.to_dict()["migration_events"]`` so ``launch/serve.py --json``
+and ``bench_serving.py`` can report why each migration happened.
+
 Without a mesh (single-device CPU smoke path) the hook runs in *shadow*
 mode: prediction, trigger and regeneration run and are counted, but the
 degenerate one-device group has nothing to migrate.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
 from ..core.placement import Placement
 from ..core.replacement import ReplacementConfig, ReplacementManager
-from ..engine import ServeConfig
+from ..engine import ServeConfig, TelemetryConfig
 from ..moe.sync import build_sync_plan, sync_traffic_bytes
 
 __all__ = ["ServeReplacement"]
@@ -35,14 +48,28 @@ class ServeReplacement:
     """Predicted-balance-triggered placement migration for the serve loop."""
 
     def __init__(self, placement: Placement, serve_cfg: ServeConfig,
-                 bytes_per_expert: int, seed: int = 0):
-        self.manager = ReplacementManager(
-            placement,
-            ReplacementConfig(check_every=serve_cfg.repl_check_every,
-                              threshold=serve_cfg.repl_threshold,
-                              seed=seed))
+                 bytes_per_expert: int, seed: int = 0,
+                 telemetry: Optional[TelemetryConfig] = None):
+        self.forecast = bool(telemetry is not None
+                             and telemetry.forecast_replacement)
+        if self.forecast:
+            from ..telemetry import (ReplacementPlanner,
+                                     predictor_from_config)
+            self.manager = ReplacementPlanner(
+                placement,
+                predictor=predictor_from_config(telemetry),
+                check_every=serve_cfg.repl_check_every,
+                threshold=serve_cfg.repl_threshold,
+                horizon=telemetry.horizon, seed=seed)
+        else:
+            self.manager = ReplacementManager(
+                placement,
+                ReplacementConfig(check_every=serve_cfg.repl_check_every,
+                                  threshold=serve_cfg.repl_threshold,
+                                  seed=seed))
         self.bytes_per_expert = int(bytes_per_expert)
         self.migrated_bytes = 0
+        self.events: List[dict] = []
 
     @property
     def placement(self) -> Placement:
@@ -52,16 +79,36 @@ class ServeReplacement:
     def migrations(self) -> int:
         return self.manager.replacements
 
-    def observe(self, expert_load: np.ndarray) -> Optional[Placement]:
+    @property
+    def migration_events(self) -> List[dict]:
+        """Decision records of fired migrations (SERVING.md JSON schema)."""
+        return [e for e in self.events if e.get("fired")]
+
+    def observe(self, expert_load: np.ndarray,
+                step: Optional[int] = None) -> Optional[Placement]:
         """Feed one decode step's per-expert loads.  Returns the regenerated
-        placement when the predicted balance degraded past the threshold
-        (the caller must migrate), else None."""
+        placement when the trigger fired (the caller must migrate), else
+        None.  ``step`` (the serving loop's step clock) re-stamps the
+        decision record; without it the manager's internal observe counter
+        is reported, which lags the clock across idle steps."""
         load = np.asarray(expert_load, np.float64).ravel()
         if load.sum() <= 0:
             return None                     # idle step: nothing routed
-        if not self.manager.observe(load):
+        if self.forecast:
+            new = self.manager.observe(load)
+            decision = self.manager.last_decision
+            fired = new is not None
+        else:
+            fired = self.manager.observe(load)
+            decision = self.manager.last_decision
+            new = self.manager.placement if fired else None
+        if decision is not None and (not self.events
+                                     or self.events[-1] is not decision):
+            if step is not None:
+                decision["step"] = int(step)
+            self.events.append(decision)
+        if not fired:
             return None
-        new = self.manager.placement
         # exact per-device ppermute traffic of one canonical->working pass
         self.migrated_bytes += sync_traffic_bytes(
             build_sync_plan(new), self.bytes_per_expert)

@@ -1,0 +1,177 @@
+"""Forecast-driven replacement planning (TELEMETRY.md, paper §6.4 upgraded).
+
+The reactive :class:`repro.core.replacement.ReplacementManager` regenerates
+the placement when the *current* (EMA'd) loads look bad.  The planner plans
+instead: fit a registered predictor on the recorded load history, score the
+current placement against the *forecast* with the exact LPP-1 oracle
+(``repro.core.lp.solve_lpp1`` — the same HiGHS solve the scheduler's
+in-graph solver approximates), and migrate only when a candidate placement
+regenerated *for the forecast* is strictly better on the forecast.  Every
+check leaves a decision record (observed vs. predicted loads, scores,
+threshold, fired) so serving stats can say *why* a migration happened.
+
+The LP optimum also pre-warms the in-graph solver: :meth:`warm_start_x`
+returns the oracle's replica-load split for the forecast loads, the exact
+fixed point the Gauss-Seidel water-filling sweeps converge to —
+seeding the next micro-batch's warm start with tomorrow's answer.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.lp import replica_devices, solve_lpp1
+from ..core.placement import Placement, asymmetric_placement
+from .predictors import LoadPredictor, make_predictor
+
+__all__ = ["ReplacementPlanner", "lp_balance_ratio", "prewarm_solver_states"]
+
+
+def lp_balance_ratio(placement: Placement, loads: np.ndarray) -> float:
+    """Schedulable balance of ``placement`` under ``loads``: the LPP-1
+    optimal max device load divided by the ideal (total / devices).  1.0
+    means the LP can spread the forecast perfectly; the replacement
+    threshold bounds how far above 1.0 we tolerate."""
+    loads = np.asarray(loads, np.float64).ravel()
+    total = float(loads.sum())
+    if total <= 0:
+        return 1.0
+    res = solve_lpp1(loads, replica_devices(placement),
+                     placement.num_devices)
+    return float(res.max_load) / (total / placement.num_devices)
+
+
+class ReplacementPlanner:
+    """Plans placement migrations from forecast loads.
+
+    Protocol-compatible with ``ReplacementManager.observe``: feed per-step
+    layer-summed loads [E]; every ``check_every`` steps it forecasts,
+    scores, and returns the regenerated :class:`Placement` when a migration
+    should fire (else None).  ``decisions`` accumulates one dict per check.
+    """
+
+    def __init__(self, placement: Placement,
+                 predictor: str | LoadPredictor = "window",
+                 check_every: int = 16, threshold: float = 1.15,
+                 horizon: int = 1, min_history: int = 2,
+                 mc_samples: int = 32, improve_margin: float = 0.0,
+                 history_cap: int = 512, seed: int = 0, **predictor_kwargs):
+        if threshold < 1.0:
+            raise ValueError(
+                f"threshold must be >= 1.0 (ratio to ideal), got {threshold}")
+        self.placement = placement
+        self.predictor = (predictor if isinstance(predictor, LoadPredictor)
+                          else make_predictor(predictor, **predictor_kwargs))
+        self.check_every = int(check_every)
+        self.threshold = float(threshold)
+        self.horizon = int(horizon)
+        self.min_history = max(int(min_history), 1)
+        self.mc_samples = int(mc_samples)
+        self.improve_margin = float(improve_margin)
+        self.history_cap = int(history_cap)
+        self.step = 0
+        self.replacements = 0
+        self.decisions: List[dict] = []
+        self._history: List[np.ndarray] = []
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------ observe
+    @property
+    def last_decision(self) -> Optional[dict]:
+        return self.decisions[-1] if self.decisions else None
+
+    @property
+    def history_size(self) -> int:
+        return len(self._history)
+
+    def observe(self, loads: np.ndarray) -> Optional[Placement]:
+        """Feed one step's layer-summed expert loads; returns the new
+        placement when a migration fires (caller re-materializes params)."""
+        loads = np.asarray(loads, np.float64).ravel()
+        self._history.append(loads)
+        if len(self._history) > self.history_cap:
+            del self._history[:-self.history_cap]
+        self.step += 1
+        if self.step % self.check_every or \
+                len(self._history) < self.min_history:
+            return None
+        return self.plan()
+
+    def forecast(self) -> np.ndarray:
+        """Fit the predictor on the recorded history, forecast [E] loads."""
+        hist = np.stack(self._history)
+        return np.asarray(
+            self.predictor.fit(hist).predict(self.horizon), np.float64)
+
+    def plan(self) -> Optional[Placement]:
+        """One planning pass: forecast -> score -> maybe regenerate."""
+        observed = self._history[-1]
+        predicted = self.forecast()
+        score = lp_balance_ratio(self.placement, predicted)
+        decision = {
+            "step": self.step,
+            "observed": [round(float(v), 4) for v in observed],
+            "predicted": [round(float(v), 4) for v in predicted],
+            "score": round(score, 4),
+            "threshold": self.threshold,
+            "fired": False,
+        }
+        if score > self.threshold:
+            p = self.placement
+            candidate = asymmetric_placement(
+                p.rows, p.cols, p.num_experts, predicted,
+                seed=int(self._rng.integers(2 ** 31)),
+                num_samples=self.mc_samples)
+            cand_score = lp_balance_ratio(candidate, predicted)
+            decision["candidate_score"] = round(cand_score, 4)
+            if cand_score + self.improve_margin < score:
+                self.placement = candidate
+                self.replacements += 1
+                decision["fired"] = True
+        self.decisions.append(decision)
+        return self.placement if decision["fired"] else None
+
+    # --------------------------------------------------------- warm start
+    def warm_start_x(self, loads: Optional[np.ndarray] = None) -> np.ndarray:
+        """float32[E, R] LPP-1 optimal replica loads for the current
+        placement under ``loads`` (default: the forecast) — the exact
+        warm-start for the in-graph water-filling solver."""
+        if loads is None:
+            if not self._history:
+                raise RuntimeError("warm_start_x() before any observe()")
+            loads = self.forecast()
+        loads = np.asarray(loads, np.float64).ravel()
+        res = solve_lpp1(loads, replica_devices(self.placement),
+                         self.placement.num_devices)
+        return res.x.astype(np.float32)
+
+
+def prewarm_solver_states(solver_states, x: np.ndarray):
+    """Broadcast an oracle warm start into a decoder solver-state tree.
+
+    ``solver_states`` is the pytree from ``decoder.init_solver_states`` /
+    ``DistRuntime.init_solver`` (every leaf is a replica-load iterate with
+    trailing shape [E_virt, R]); ``x`` is [E_virt, R'] from
+    :meth:`ReplacementPlanner.warm_start_x`.  Pads/truncates the replica
+    axis to each leaf's R (extra replicas start empty) and broadcasts over
+    any leading scan axes.  Returns a new tree; None passes through.
+    """
+    if solver_states is None:
+        return None
+    import jax
+
+    x = np.asarray(x, np.float32)
+
+    def leaf(v):
+        e, r = v.shape[-2], v.shape[-1]
+        if x.shape[0] != e:
+            raise ValueError(
+                f"warm start has {x.shape[0]} experts, solver state has {e}")
+        w = x[:, :r]
+        if w.shape[1] < r:
+            w = np.concatenate(
+                [w, np.zeros((e, r - w.shape[1]), np.float32)], axis=1)
+        return np.broadcast_to(w, v.shape).astype(v.dtype)
+
+    return jax.tree_util.tree_map(leaf, solver_states)

@@ -88,13 +88,21 @@ def make_train_step(
     aux_coeff: float = 1e-4,
     z_coeff: float = 1e-4,
     master_grad_constraint: Optional[Callable] = None,
+    with_expert_load: bool = False,
 ):
     """Build ``train_step(state, batch) -> (state, metrics_dict)``.
 
     ``batch`` leaves are [B, ...]; B is split into ``n_micro`` micro-batches
     scanned sequentially (per-micro-batch MicroEP scheduling — paper R2).
+
+    ``with_expert_load=True`` (MoE configs only) adds an ``"expert_load"``
+    f32[E_virt] vector — routed tokens per expert, summed over layers and
+    micro-batches — to the metrics dict, feeding the telemetry recorder
+    (TELEMETRY.md).  Scalar-only consumers must pop it before logging.
     """
     hooks = hooks or LayoutHooks.cast_only()
+    if with_expert_load and not cfg.moe:
+        raise ValueError("with_expert_load=True needs an MoE config")
 
     def train_step(ts: TrainState, batch: dict):
         params, vjp_fn = jax.vjp(hooks.to_working, ts.master)
@@ -102,19 +110,27 @@ def make_train_step(
         zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
 
         def micro_fn(carry, mb):
-            solver, gsum, msum = carry
-            (loss, (metrics, new_solver)), grads = jax.value_and_grad(
+            solver, gsum, msum, esum = carry
+            (loss, aux), grads = jax.value_and_grad(
                 dec.loss_fn, has_aux=True)(
                     params, cfg, mb, rt, solver,
-                    aux_coeff=aux_coeff, z_coeff=z_coeff)
+                    aux_coeff=aux_coeff, z_coeff=z_coeff,
+                    with_expert_load=with_expert_load)
+            if with_expert_load:
+                metrics, new_solver, eload = aux
+                esum = esum + eload
+            else:
+                metrics, new_solver = aux
             gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
             msum = jax.tree_util.tree_map(
                 lambda a, b: a + b.astype(jnp.float32), msum, metrics)
-            return (new_solver, gsum, msum), None
+            return (new_solver, gsum, msum, esum), None
 
         zero_m = dec.Metrics(*(jnp.zeros(()) for _ in range(6)))
-        (solver, gsum, msum), _ = jax.lax.scan(
-            micro_fn, (ts.solver, zero_g, zero_m), micro)
+        zero_e = jnp.zeros((cfg.num_experts * max(cfg.etp, 1),)
+                           if with_expert_load else ())
+        (solver, gsum, msum, esum), _ = jax.lax.scan(
+            micro_fn, (ts.solver, zero_g, zero_m, zero_e), micro)
 
         gavg = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
         (master_grads,) = vjp_fn(gavg)
@@ -133,6 +149,8 @@ def make_train_step(
                "balance": mavg.balance, "overflow": msum.overflow,
                "grad_norm": gnorm,
                "lr": jnp.asarray(lr if lr is not None else opt_cfg.lr)}
+        if with_expert_load:
+            out["expert_load"] = esum
         return TrainState(master=new_master, opt=new_opt, solver=solver,
                           step=ts.step + 1), out
 

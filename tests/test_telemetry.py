@@ -1,0 +1,441 @@
+"""Telemetry subsystem tests (TELEMETRY.md): trace format round-trips and
+error paths, predictor fit/predict on stationary + drifting loads, frozen
+predictor freeze/unfreeze, forecast planner decisions, solver pre-warm,
+recorder integration through one train step and one serve step, the
+MetricLogger late-key fix, and the bit-exact trace replay source."""
+import argparse
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import ConfigError, RegistryError, ServeConfig, \
+    TelemetryConfig
+from repro.telemetry import (SCHEMA_VERSION, LoadTrace, LoadTraceRecorder,
+                             ReplacementPlanner, TraceFormatError,
+                             evaluate_predictor, lp_balance_ratio,
+                             make_predictor, predictor_from_config,
+                             predictors, prewarm_solver_states,
+                             register_predictor, relative_l1,
+                             top_overloaded_hit_rate)
+from repro.train.metrics import MetricLogger
+
+
+def _trace(t=12, l=2, e=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return LoadTrace(steps=np.arange(t), loads=rng.random((t, l, e)) * 10,
+                     meta={"source": "test", "arch": "unit"})
+
+
+# ------------------------------------------------------------ trace format
+
+
+@pytest.mark.parametrize("ext", ["npz", "jsonl"])
+def test_trace_roundtrip_bit_exact(tmp_path, ext):
+    tr = _trace()
+    path = tr.save(str(tmp_path / f"t.{ext}"))
+    tr2 = LoadTrace.load(path)
+    np.testing.assert_array_equal(tr2.steps, tr.steps)
+    assert (tr2.loads == tr.loads).all()          # bit-exact, not allclose
+    assert tr2.meta == tr.meta
+    assert tr2.num_layers == 2 and tr2.num_experts == 8
+
+
+def test_trace_schema_version_rejected(tmp_path):
+    path = str(tmp_path / "t.npz")
+    tr = _trace()
+    np.savez(path, schema=np.int64(SCHEMA_VERSION + 1), steps=tr.steps,
+             loads=tr.loads, meta=json.dumps({}))
+    with pytest.raises(TraceFormatError, match="schema version"):
+        LoadTrace.load(path)
+    header = {"kind": "repro.load_trace", "schema": SCHEMA_VERSION + 1,
+              "layers": 1, "experts": 2, "meta": {}}
+    jpath = str(tmp_path / "t.jsonl")
+    with open(jpath, "w") as f:
+        f.write(json.dumps(header) + "\n")
+    with pytest.raises(TraceFormatError, match="schema version"):
+        LoadTrace.load(jpath)
+
+
+def test_trace_corrupt_files_fail_loudly(tmp_path):
+    bad = str(tmp_path / "bad.npz")
+    with open(bad, "wb") as f:
+        f.write(b"this is not an npz archive")
+    with pytest.raises(TraceFormatError):
+        LoadTrace.load(bad)
+    badj = str(tmp_path / "bad.jsonl")
+    with open(badj, "w") as f:
+        f.write("{\"kind\": \"something-else\"}\n")
+    with pytest.raises(TraceFormatError, match="bad header"):
+        LoadTrace.load(badj)
+    # npz that is a valid archive but not a trace
+    notatrace = str(tmp_path / "x.npz")
+    np.savez(notatrace, foo=np.arange(3))
+    with pytest.raises(TraceFormatError, match="missing keys"):
+        LoadTrace.load(notatrace)
+
+
+def test_trace_validation():
+    with pytest.raises(TraceFormatError):
+        LoadTrace(steps=np.arange(3), loads=np.zeros((3, 4)))   # not 3-D
+    with pytest.raises(TraceFormatError):
+        LoadTrace(steps=np.arange(2), loads=np.zeros((3, 1, 4)))
+    with pytest.raises(TraceFormatError, match="increasing"):
+        LoadTrace(steps=np.array([0, 0]), loads=np.zeros((2, 1, 4)))
+
+
+# --------------------------------------------------------------- recorder
+
+
+def test_recorder_shapes_and_clock():
+    rec = LoadTraceRecorder(source="unit")
+    rec.record(0, np.ones(4))
+    rec.record(2, 2 * np.ones(4))                 # gaps are fine
+    with pytest.raises(ValueError, match="advance the clock"):
+        rec.record(2, np.ones(4))
+    with pytest.raises(ValueError, match="shape changed"):
+        rec.record(3, np.ones((2, 4)))
+    tr = rec.trace()
+    assert tr.loads.shape == (2, 1, 4)            # [E] stored as L=1
+    assert tr.meta["layers"] == "summed"
+    rec2 = LoadTraceRecorder()
+    rec2.record(0, np.ones((3, 4)))
+    assert rec2.trace().num_layers == 3
+    assert rec2.meta["layers"] == "per-layer"
+
+
+def test_recorder_logs_summary_through_metric_logger(tmp_path):
+    csv_path = str(tmp_path / "m.csv")
+    with LoadTraceRecorder(logger=MetricLogger(csv_path=csv_path,
+                                               print_every=100)) as rec:
+        rec.record(0, np.array([3.0, 1.0]))
+    text = open(csv_path).read()
+    assert "load_total" in text and "load_skew" in text
+    assert rec.logger._file is None               # context manager closed it
+
+
+# ---------------------------------------------------- MetricLogger fixes
+
+
+def test_metric_logger_late_fieldnames(tmp_path):
+    """A metric key first appearing mid-run used to raise ValueError in
+    csv.DictWriter; now the header widens and the file is rewritten."""
+    import csv as csv_mod
+    path = str(tmp_path / "m.csv")
+    with MetricLogger(csv_path=path, print_every=100) as log:
+        log.log(0, {"loss": 1.0})
+        log.log(1, {"loss": 0.5, "migrations": 1.0})   # late key
+        log.log(2, {"loss": 0.25})
+    rows = list(csv_mod.DictReader(open(path)))
+    assert [r["step"] for r in rows] == ["0", "1", "2"]
+    assert rows[0]["migrations"] == ""             # backfilled empty
+    assert rows[1]["migrations"] == "1.0"
+    assert rows[2]["migrations"] == ""
+    log.close()                                    # idempotent
+
+
+# -------------------------------------------------------------- predictors
+
+
+def test_predictor_registry_protocol():
+    assert {"last", "ema", "window", "frozen"} <= set(predictors.names())
+    with pytest.raises(RegistryError, match="registered options"):
+        make_predictor("no-such-predictor")
+
+    @register_predictor("unit-test-pred")
+    def _factory(**kw):
+        return make_predictor("last")
+
+    try:
+        assert "unit-test-pred" in predictors
+    finally:
+        predictors.unregister("unit-test-pred")
+
+
+def test_predictors_on_stationary_loads():
+    base = np.arange(1.0, 9.0)
+    h = np.tile(base, (20, 1))
+    for name in ("last", "ema", "window", "frozen"):
+        pred = make_predictor(name).fit(h).predict()
+        np.testing.assert_allclose(pred, base, err_msg=name)
+
+
+def test_predictors_on_drifting_loads():
+    """Averaging predictors beat persistence on noisy-stationary loads."""
+    rng = np.random.default_rng(0)
+    base = np.arange(1.0, 17.0)
+    h = base * rng.lognormal(0.0, 0.5, (64, 16))
+    tr = LoadTrace(steps=np.arange(64), loads=h[:, None, :])
+    last = evaluate_predictor("last", tr, min_history=8)
+    window = evaluate_predictor("window", tr, min_history=8, window=8)
+    assert window["rel_l1"] < last["rel_l1"]
+    assert window["n_evals"] == last["n_evals"] > 0
+
+
+def test_window_and_ema_formulas():
+    h = np.stack([np.full(3, v) for v in (1.0, 2.0, 3.0, 4.0)])
+    np.testing.assert_allclose(
+        make_predictor("window", window=2).fit(h).predict(), np.full(3, 3.5))
+    ema = make_predictor("ema", decay=0.5).fit(h).predict()
+    np.testing.assert_allclose(ema, np.full(3, 0.5 * (0.5 * (0.5 * 1 + 0.5 * 2) + 0.5 * 3) + 0.5 * 4))
+    with pytest.raises(ValueError):
+        make_predictor("ema", decay=1.5)
+    with pytest.raises(ValueError):
+        make_predictor("window", window=0)
+
+
+def test_frozen_predictor_freeze_and_unfreeze():
+    e = 6
+    stable = np.tile(np.arange(1.0, e + 1.0), (24, 1))
+    p = make_predictor("frozen", window=4, threshold=0.05)
+    p.fit(stable)
+    assert p.frozen.all() and (p.frozen_at >= 0).all()
+    frozen_value = p.predict()
+    # distribution shift: the frozen layer must thaw (short post-shift
+    # segment: not yet stable long enough to re-freeze) ...
+    shifted = np.concatenate([stable, stable[:4, ::-1] * 3.0])
+    p.fit(shifted)
+    assert not p.frozen.any()
+    assert not np.allclose(p.predict(), frozen_value)
+    # ... and re-freeze once the new regime stabilizes
+    long_shift = np.concatenate([stable, np.tile(stable[0, ::-1] * 3.0,
+                                                 (24, 1))])
+    p.fit(long_shift)
+    assert p.frozen.all()
+    np.testing.assert_allclose(p.predict(), stable[0, ::-1] * 3.0)
+
+
+def test_frozen_predictor_is_per_layer():
+    e = 4
+    stable = np.tile(np.arange(1.0, e + 1.0), (24, 1))
+    rng = np.random.default_rng(1)
+    noisy = stable * rng.lognormal(0.0, 1.5, (24, e))
+    h = np.stack([stable, noisy], axis=1)          # [T, L=2, E]
+    p = make_predictor("frozen", window=4, threshold=0.05).fit(h)
+    assert p.frozen.shape == (2,)
+    assert bool(p.frozen[0]) and not bool(p.frozen[1])
+
+
+def test_accuracy_metrics():
+    assert relative_l1([1.0, 1.0], [1.0, 1.0]) == 0.0
+    assert relative_l1([2.0, 0.0], [1.0, 1.0]) == 1.0
+    assert top_overloaded_hit_rate([9, 1, 0], [8, 2, 1], k=1) == 1.0
+    assert top_overloaded_hit_rate([0, 1, 9], [9, 1, 0], k=1) == 0.0
+
+
+# ------------------------------------------------------------------ planner
+
+
+def test_planner_picks_lp_optimal_placement_on_skewed_trace():
+    """Hand-built skew: expert 0 dominates.  The planner must fire and its
+    regenerated placement must be LP-schedulable to (near-)ideal balance,
+    matching the asymmetric oracle construction."""
+    from repro.core.placement import latin_placement
+    p0 = latin_placement(2, 4, 16)
+    skew = np.ones(16)
+    skew[0] = 60.0                                  # >> ideal per-device load
+    planner = ReplacementPlanner(p0, predictor="window", window=4,
+                                 check_every=4, threshold=1.1,
+                                 min_history=2, seed=0)
+    fired = None
+    for _ in range(8):
+        out = planner.observe(skew)
+        fired = out if out is not None else fired
+    assert fired is not None and planner.replacements >= 1
+    before = lp_balance_ratio(p0, skew)
+    after = lp_balance_ratio(planner.placement, skew)
+    assert after < before and after <= 1.1
+    # every check left a full decision record
+    d = planner.last_decision
+    assert set(d) >= {"step", "observed", "predicted", "score",
+                      "threshold", "fired"}
+    assert len(d["observed"]) == 16 and len(d["predicted"]) == 16
+
+
+def test_planner_does_not_fire_on_balanced_loads():
+    from repro.core.placement import latin_placement
+    planner = ReplacementPlanner(latin_placement(2, 4, 16),
+                                 check_every=2, threshold=1.15, seed=0)
+    for _ in range(8):
+        assert planner.observe(np.ones(16)) is None
+    assert planner.replacements == 0
+    assert all(not d["fired"] for d in planner.decisions)
+
+
+def test_warm_start_and_prewarm_solver_states():
+    import jax.numpy as jnp
+    from repro.core.placement import latin_placement
+    planner = ReplacementPlanner(latin_placement(2, 4, 16), check_every=1,
+                                 threshold=10.0, seed=0)
+    loads = np.random.default_rng(0).random(16) * 8
+    x = planner.warm_start_x(loads)
+    np.testing.assert_allclose(x.sum(axis=1), loads, rtol=1e-6)
+    # broadcast into a scan-stacked solver tree, padding the replica axis
+    tree = {"scan": (jnp.zeros((3, 16, x.shape[1] + 1)),),
+            "rem": (jnp.zeros((16, max(x.shape[1] - 1, 1))),)}
+    warm = prewarm_solver_states(tree, x)
+    assert warm["scan"][0].shape == (3, 16, x.shape[1] + 1)
+    np.testing.assert_allclose(
+        np.asarray(warm["scan"][0][0, :, :x.shape[1]]), x, rtol=1e-6)
+    assert prewarm_solver_states(None, x) is None
+
+
+def test_serve_replacement_surfaces_decision_events():
+    """Both trigger policies leave decision records; fired ones become the
+    report's migration_events (observed/predicted loads, score, threshold
+    — the 'why did this migration fire' satellite of ISSUE 3)."""
+    from repro.core.placement import latin_placement
+    from repro.serve import ServeReplacement
+
+    skew = np.ones(16)
+    skew[0] = 60.0
+    for telemetry in (None,                                 # reactive EMA
+                      TelemetryConfig(forecast_replacement=True,
+                                      predictor="window", window=4)):
+        sr = ServeReplacement(latin_placement(2, 4, 16),
+                              ServeConfig(replacement=True,
+                                          repl_check_every=4,
+                                          repl_threshold=1.1),
+                              bytes_per_expert=128, seed=0,
+                              telemetry=telemetry)
+        fired = None
+        for _ in range(8):
+            out = sr.observe(skew)
+            fired = out if out is not None else fired
+        assert fired is not None and sr.migrations >= 1
+        assert sr.migrated_bytes > 0
+        assert sr.events and sr.migration_events
+        e = sr.migration_events[0]
+        assert e["fired"] and e["score"] > e["threshold"] == 1.1
+        assert len(e["observed"]) == len(e["predicted"]) == 16
+
+
+# -------------------------------------------------- trace traffic source
+
+
+def test_trace_replay_source_is_bit_exact(tmp_path):
+    """ISSUE 3 acceptance: a recorded trace replayed through the serve
+    traffic 'trace' source reproduces per-step expert-load skew
+    bit-exactly."""
+    from repro.serve import trace_source
+    tr = _trace(t=16, l=3, e=8, seed=4)
+    path = tr.save(str(tmp_path / "t.jsonl"))
+    replay = trace_source(path)
+    assert len(replay) == 16 and replay.num_experts == 8
+    expected = tr.loads.sum(axis=1)
+    for i, (step, loads) in enumerate(replay):
+        assert step == int(tr.steps[i])
+        assert (loads == expected[i]).all()        # bit-exact
+        assert (replay.loads_at(step) == expected[i]).all()
+
+
+def test_trace_requests_shape_traffic(tmp_path):
+    from repro.serve import trace_requests
+    tr = _trace(t=32, l=1, e=8, seed=5)
+    reqs = trace_requests(tr, vocab=64, rate=1.0, seed=7)
+    assert reqs, "non-degenerate trace must produce requests"
+    steps = {int(s) for s in tr.steps}
+    assert all(r.arrival_step in steps for r in reqs)
+    reqs2 = trace_requests(tr, vocab=64, rate=1.0, seed=7)
+    assert [(r.arrival_step, r.prompt_len, r.max_new) for r in reqs] == \
+        [(r.arrival_step, r.prompt_len, r.max_new) for r in reqs2]
+
+
+# --------------------------------------------------------- TelemetryConfig
+
+
+def test_telemetry_config_roundtrips_and_validation():
+    cfg = TelemetryConfig(record=True, trace_path="x.npz",
+                          predictor="frozen", horizon=2, window=4,
+                          forecast_replacement=True, prewarm=True)
+    assert TelemetryConfig.from_dict(cfg.to_dict()) == cfg
+    ap = argparse.ArgumentParser()
+    TelemetryConfig.add_cli_args(ap)
+    assert TelemetryConfig.from_cli_args(
+        ap.parse_args(cfg.to_cli_args())) == cfg
+    assert cfg.enabled and not TelemetryConfig().enabled
+    with pytest.raises(ConfigError):
+        TelemetryConfig(predictor="")
+    with pytest.raises(ConfigError):
+        TelemetryConfig(horizon=0)
+    with pytest.raises(ConfigError):
+        TelemetryConfig(ema_decay=1.0)
+    with pytest.raises(ConfigError):
+        TelemetryConfig(freeze_threshold=0.0)
+    p = predictor_from_config(TelemetryConfig(predictor="frozen",
+                                              freeze_window=3,
+                                              freeze_threshold=0.2))
+    assert p.window == 3 and p.threshold == 0.2
+
+
+# --------------------------------------------------- integration smokes
+
+
+def test_recorder_through_one_train_step():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import decoder as dec
+    from repro.optim.adamw import adamw_init
+    from repro.train.loop import TrainState, make_train_step
+
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    key = jax.random.PRNGKey(0)
+    master = dec.init_params(key, cfg, jnp.float32)
+    ts = TrainState(master=master, opt=adamw_init(master),
+                    solver=dec.init_solver_states(cfg, 1),
+                    step=jnp.zeros((), jnp.int32))
+    step = make_train_step(cfg, n_micro=2, with_expert_load=True)
+    b, t = 4, 8
+    batch = {"tokens": jax.random.randint(key, (b, t), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (b, t), 0, cfg.vocab)}
+    rec = LoadTraceRecorder(source="train", meta={"arch": cfg.name})
+    ts, m = step(ts, batch)
+    eload = np.asarray(m.pop("expert_load"), np.float64)
+    assert eload.shape == (cfg.num_experts,)
+    n_moe = dec.n_moe_layers(cfg)
+    assert eload.sum() == pytest.approx(n_moe * b * t * cfg.top_k)
+    rec.record(0, eload)
+    assert len(rec) == 1
+    # prewarm plumbing: the oracle warm start drops into the solver tree
+    from repro.core.placement import vanilla_placement
+    planner = ReplacementPlanner(vanilla_placement(1, 1, cfg.num_experts),
+                                 check_every=10 ** 9, min_history=1, seed=0)
+    planner.observe(eload)
+    ts2 = ts._replace(solver=prewarm_solver_states(
+        ts.solver, planner.warm_start_x()))
+    ts3, _ = step(ts2, batch)                      # still jit-compatible
+    assert int(ts3.step) == int(ts.step) + 1
+
+    with pytest.raises(ValueError, match="MoE"):
+        make_train_step(get_config("qwen1.5-0.5b").smoke(),
+                        with_expert_load=True)
+
+
+def test_recorder_through_serve_loop_and_forecast_replacement(tmp_path):
+    from repro.serve import ServingSession, poisson_trace
+
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    out = str(tmp_path / "serve.npz")
+    telemetry = TelemetryConfig(record=True, trace_path=out,
+                                predictor="window", window=4,
+                                forecast_replacement=True)
+    sc = ServeConfig(max_batch=2, max_seq=16, replacement=True,
+                     repl_check_every=4, repl_threshold=1.05)
+    sess = ServingSession(cfg, sc, telemetry=telemetry)
+    rep = sess.run(poisson_trace(3, rate=0.5, vocab=cfg.vocab,
+                                 prompt_len=6, gen_len=4, seed=5))
+    assert len(sess.recorder) > 0
+    tr = LoadTrace.load(out)
+    assert tr.meta["source"] == "serve"
+    assert tr.num_experts == cfg.num_experts
+    np.testing.assert_array_equal(tr.loads, sess.recorder.trace().loads)
+    # the forecast planner ran under the hook; every fired decision is
+    # surfaced in the report JSON with its inputs
+    d = rep.to_dict()
+    assert "migration_events" in d
+    for e in d["migration_events"]:
+        assert {"step", "observed", "predicted", "score",
+                "threshold"} <= set(e)
+    assert rep.migrations == len(d["migration_events"])

@@ -3,11 +3,12 @@
 resolve.
 
 Scans src/, benchmarks/, examples/, tests/ for citations of the form
-``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``, ``ROADMAP.md``, ``PAPER.md``
-— optionally with a section number (``DESIGN.md §6``) — and fails if the
-cited file does not exist at the repo root or, for ``DESIGN.md §N``, if no
-Markdown heading containing ``§N`` exists.  Run by CI
-(.github/workflows/ci.yml) and by tests/test_docs.py.
+``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``, ``TELEMETRY.md``,
+``ROADMAP.md``, ``PAPER.md`` — optionally with a section number
+(``DESIGN.md §6``) — and fails if the cited file does not exist at the
+repo root or, for ``DESIGN.md §N``, if no Markdown heading containing
+``§N`` exists.  Run by CI (.github/workflows/ci.yml) and by
+tests/test_docs.py.
 
   python tools/check_docs.py
 """
@@ -19,7 +20,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
-CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|ROADMAP|PAPER)\.md"
+CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|TELEMETRY|ROADMAP|PAPER)\.md"
                   r"(?:\s*§\s*(\d+))?")
 HEADING_SECTION = re.compile(r"^#+\s.*§\s*(\d+)\b")
 
@@ -37,7 +38,7 @@ def doc_sections(path: pathlib.Path) -> set:
 def check(root: pathlib.Path = ROOT) -> list:
     sections = {name: (doc_sections(root / f"{name}.md")
                        if (root / f"{name}.md").exists() else None)
-                for name in ("DESIGN", "ENGINE", "SERVING",
+                for name in ("DESIGN", "ENGINE", "SERVING", "TELEMETRY",
                              "ROADMAP", "PAPER")}
     errors = []
     for d in SCAN_DIRS:
