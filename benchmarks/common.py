@@ -42,13 +42,13 @@ def zipf_input(rng, e: int, g: int, tokens_per_dev: int, s: float):
 
 
 def make_engine(rows: int, cols: int, e: int, strategy: str = "latin",
-                mode: str = "microep", loads=None,
-                seed: int = 0) -> MicroEPEngine:
+                mode: str = "microep", loads=None, seed: int = 0,
+                solver_mode: str = "scan") -> MicroEPEngine:
     """One engine per benchmark geometry — the single construction path."""
     return MicroEPEngine.build(
         e, (rows, cols),
         placement=PlacementSpec(strategy=strategy, seed=seed, loads=loads),
-        policy=SchedulePolicy(mode=mode, sweeps=8))
+        policy=SchedulePolicy(mode=mode, sweeps=8, solver_mode=solver_mode))
 
 
 def make_scheduler(rows: int, cols: int, e: int, strategy: str = "latin",

@@ -15,8 +15,8 @@ import traceback
 
 from . import (bench_ablation, bench_balance, bench_breakdown,
                bench_commaware, bench_e2e_model, bench_forecast,
-               bench_migration, bench_pipeline, bench_sched_overhead,
-               bench_serving)
+               bench_hotpath, bench_migration, bench_pipeline,
+               bench_sched_overhead, bench_serving)
 
 ALL = {
     "fig6_e2e": bench_e2e_model.run,
@@ -29,6 +29,7 @@ ALL = {
     "fig16_pipeline": bench_pipeline.run,
     "serving": bench_serving.run,
     "forecast": bench_forecast.run,
+    "hotpath": bench_hotpath.run,
 }
 
 

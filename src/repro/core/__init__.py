@@ -25,7 +25,8 @@ from .placement import (
     max_induced_density,
 )
 from .scheduler import MicroEPScheduler, Schedule, ScheduleStatics
-from .solver_jax import solve_replica_loads, water_fill, device_loads, SolverState
+from .solver_jax import (solve_replica_loads, solve_replica_loads_batched,
+                         water_fill, device_loads, SolverState)
 from .rounding import round_replica_loads
 from .routing import route_tokens, comm_stats
 from .replacement import ReplacementManager, ReplacementConfig
@@ -34,7 +35,8 @@ __all__ = [
     "Placement", "vanilla_placement", "random_placement", "latin_placement",
     "asymmetric_placement", "max_induced_density",
     "MicroEPScheduler", "Schedule", "ScheduleStatics",
-    "solve_replica_loads", "water_fill", "device_loads", "SolverState",
+    "solve_replica_loads", "solve_replica_loads_batched", "water_fill",
+    "device_loads", "SolverState",
     "round_replica_loads", "route_tokens", "comm_stats",
     "ReplacementManager", "ReplacementConfig",
 ]

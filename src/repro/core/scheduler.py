@@ -29,7 +29,8 @@ from . import lp as lp_host
 from .placement import Placement
 from .rounding import round_replica_loads
 from .routing import RoutingResult, route_tokens
-from .solver_jax import SolverState, device_loads, solve_replica_loads
+from .solver_jax import (SolverState, device_loads, solve_replica_loads,
+                         solve_replica_loads_batched)
 
 __all__ = ["ScheduleStatics", "Schedule", "MicroEPScheduler"]
 
@@ -81,6 +82,13 @@ class MicroEPScheduler:
       * microep: solve LPP 1 in-graph (water-filling GS) and route (Alg. 1).
       * vanilla: no scheduling freedom — each token goes to the replica in
         its own EP group (row); reproduces Megatron EP for baselines.
+
+    ``solver_mode`` picks the in-graph LP solver sweep order:
+      * scan    — Gauss-Seidel, one `lax.scan` step per expert per sweep
+                  (best per-sweep progress, E×sweeps sequential steps);
+      * batched — damped Jacobi, all experts water-fill per sweep in one
+                  vectorized step (`solve_replica_loads_batched`; sweeps
+                  are internally doubled to match Gauss-Seidel progress).
     """
 
     def __init__(
@@ -90,6 +98,7 @@ class MicroEPScheduler:
         locality: bool = True,
         mode: str = "microep",
         sequencing: str = "proportional",
+        solver_mode: str = "scan",
     ):
         if mode not in ("microep", "vanilla"):
             raise ValueError(
@@ -99,11 +108,16 @@ class MicroEPScheduler:
             raise ValueError(
                 f"MicroEPScheduler sequencing={sequencing!r} is not a "
                 f"registered option; choose one of: proportional, greedy")
+        if solver_mode not in ("scan", "batched"):
+            raise ValueError(
+                f"MicroEPScheduler solver_mode={solver_mode!r} is not a "
+                f"registered option; choose one of: scan, batched")
         self.statics = statics
         self.sweeps = sweeps
         self.locality = locality
         self.mode = mode
         self.sequencing = sequencing
+        self.solver_mode = solver_mode
         # keep host numpy here: converting at call time keeps this object
         # safe to cache/reuse across different jit traces
         self._dev = np.asarray(statics.dev, np.int32)
@@ -135,13 +149,25 @@ class MicroEPScheduler:
             dl = device_loads(x_int.astype(jnp.float32), dev, st.num_devices)
             state_out = state if state is not None else self.init_state()
         else:
-            sol = solve_replica_loads(
-                loads.astype(jnp.float32),
-                dev,
-                st.num_devices,
-                x_init=None if state is None else state.x,
-                sweeps=self.sweeps,
-            )
+            if self.solver_mode == "batched":
+                # a damped-Jacobi sweep makes roughly half the progress of
+                # a Gauss-Seidel sweep but costs one vectorized step, so 2x
+                # the sweeps still cuts the sequential-depth bottleneck
+                sol = solve_replica_loads_batched(
+                    loads.astype(jnp.float32),
+                    dev,
+                    st.num_devices,
+                    x_init=None if state is None else state.x,
+                    sweeps=2 * self.sweeps,
+                )
+            else:
+                sol = solve_replica_loads(
+                    loads.astype(jnp.float32),
+                    dev,
+                    st.num_devices,
+                    x_init=None if state is None else state.x,
+                    sweeps=self.sweeps,
+                )
             x_int = round_replica_loads(sol.x, loads, valid)
             routed = route_tokens(input_eg, x_int, dev,
                                   locality=self.locality,

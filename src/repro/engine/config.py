@@ -35,6 +35,7 @@ class ConfigError(ValueError):
 
 _MODES = ("microep", "vanilla")
 _SEQUENCINGS = ("proportional", "greedy")
+_SOLVER_MODES = ("scan", "batched")
 _LAYOUTS = ("scan", "list")
 _IMPLS = ("ref", "interpret", "pallas")
 _DTYPES = ("bfloat16", "float32", "float16")
@@ -102,22 +103,29 @@ class PlacementSpec:
 class SchedulePolicy:
     """Per-micro-batch scheduling policy (paper §5).
 
-    mode       — 'microep' (LP solve + rounding + Alg. 1 routing) or
-                 'vanilla' (no freedom; Megatron EP baseline).
-    sweeps     — Gauss-Seidel sweeps of the in-graph water-filling solver.
-    locality   — Alg. 1 locality-aware routing (local replica first).
-    sequencing — replica fill order inside Alg. 1: 'proportional' | 'greedy'.
+    mode        — 'microep' (LP solve + rounding + Alg. 1 routing) or
+                  'vanilla' (no freedom; Megatron EP baseline).
+    sweeps      — Gauss-Seidel sweeps of the in-graph water-filling solver.
+    locality    — Alg. 1 locality-aware routing (local replica first).
+    sequencing  — replica fill order inside Alg. 1: 'proportional' | 'greedy'.
+    solver_mode — in-graph LP sweep order: 'scan' (Gauss-Seidel, one
+                  `lax.scan` step per expert) | 'batched' (damped Jacobi,
+                  all experts per sweep in one vectorized step —
+                  bench_hotpath / bench_sched_overhead measure the gap).
     """
 
     mode: str = "microep"
     sweeps: int = 6
     locality: bool = True
     sequencing: str = "proportional"
+    solver_mode: str = "scan"
 
     def __post_init__(self):
         _check_choice("SchedulePolicy.mode", self.mode, _MODES)
         _check_choice("SchedulePolicy.sequencing", self.sequencing,
                       _SEQUENCINGS)
+        _check_choice("SchedulePolicy.solver_mode", self.solver_mode,
+                      _SOLVER_MODES)
         if not isinstance(self.sweeps, (int, np.integer)) or self.sweeps < 1:
             raise ConfigError(
                 f"SchedulePolicy.sweeps must be a positive int, "
@@ -147,6 +155,8 @@ _LEGACY_KWARGS = {
     "sweeps": ("policy", "sweeps"),
     "locality": ("policy", "locality"),
     "sequencing": ("policy", "sequencing"),
+    "solver_mode": ("policy", "solver_mode"),
+    "pipeline_stages": (None, "pipeline_stages"),
 }
 
 
@@ -163,6 +173,12 @@ class RuntimeConfig:
     layout          — parameter stacking: 'scan' (production) | 'list'
                       (dry-run cost pass).
     seq_parallel    — sequence-parallel activation sharding.
+    pipeline_stages — destination chunks the MoE dispatch/combine
+                      all-to-all is split into so chunk i's grouped-FFN
+                      compute can overlap chunk i+1's collective
+                      (DESIGN.md §2).  1 = the monolithic hot path;
+                      values that do not divide the group size fall back
+                      to the largest divisor below.
     """
 
     placement: PlacementSpec = PlacementSpec()
@@ -174,6 +190,7 @@ class RuntimeConfig:
     unroll: bool = False
     layout: str = "scan"
     seq_parallel: bool = False
+    pipeline_stages: int = 1
 
     def __post_init__(self):
         if isinstance(self.placement, str):
@@ -195,6 +212,11 @@ class RuntimeConfig:
             raise ConfigError(
                 f"RuntimeConfig.capacity_factor must be > 0, "
                 f"got {self.capacity_factor!r}")
+        if not isinstance(self.pipeline_stages, (int, np.integer)) or \
+                self.pipeline_stages < 1:
+            raise ConfigError(
+                f"RuntimeConfig.pipeline_stages must be a positive int, "
+                f"got {self.pipeline_stages!r}")
 
     # ------------------------------------------------------------- dtypes
     @property
@@ -261,6 +283,10 @@ class RuntimeConfig:
         g.add_argument("--locality", action=b, default=d.policy.locality)
         g.add_argument("--sequencing", default=d.policy.sequencing,
                        choices=_SEQUENCINGS)
+        g.add_argument("--solver-mode", default=d.policy.solver_mode,
+                       choices=_SOLVER_MODES,
+                       help="in-graph LP solver sweep order: scan "
+                            "(Gauss-Seidel) or batched (damped Jacobi)")
         g.add_argument("--dtype", default=d.dtype, choices=_DTYPES)
         g.add_argument("--capacity-factor", type=float,
                        default=d.capacity_factor)
@@ -269,6 +295,10 @@ class RuntimeConfig:
         g.add_argument("--unroll", action=b, default=d.unroll)
         g.add_argument("--layout", default=d.layout, choices=_LAYOUTS)
         g.add_argument("--seq-parallel", action=b, default=d.seq_parallel)
+        g.add_argument("--pipeline-stages", type=int,
+                       default=d.pipeline_stages,
+                       help="destination chunks of the MoE dispatch "
+                            "pipeline (1 = monolithic)")
 
     @classmethod
     def from_cli_args(cls, args: argparse.Namespace) -> "RuntimeConfig":
@@ -277,10 +307,12 @@ class RuntimeConfig:
                                     seed=args.placement_seed),
             policy=SchedulePolicy(mode=args.mode, sweeps=args.sweeps,
                                   locality=args.locality,
-                                  sequencing=args.sequencing),
+                                  sequencing=args.sequencing,
+                                  solver_mode=args.solver_mode),
             dtype=args.dtype, capacity_factor=args.capacity_factor,
             impl=args.impl, remat=args.remat, unroll=args.unroll,
-            layout=args.layout, seq_parallel=args.seq_parallel)
+            layout=args.layout, seq_parallel=args.seq_parallel,
+            pipeline_stages=args.pipeline_stages)
 
     def to_cli_args(self) -> list:
         """Flag list such that ``from_cli_args(parser.parse_args(...))``
@@ -292,12 +324,14 @@ class RuntimeConfig:
             "--sweeps", str(self.policy.sweeps),
             "--locality" if self.policy.locality else "--no-locality",
             "--sequencing", self.policy.sequencing,
+            "--solver-mode", self.policy.solver_mode,
             "--dtype", self.dtype,
             "--capacity-factor", str(self.capacity_factor),
             "--remat" if self.remat else "--no-remat",
             "--unroll" if self.unroll else "--no-unroll",
             "--layout", self.layout,
             "--seq-parallel" if self.seq_parallel else "--no-seq-parallel",
+            "--pipeline-stages", str(self.pipeline_stages),
         ]
         if self.impl is not None:
             flags += ["--impl", self.impl]

@@ -108,7 +108,8 @@ class MicroEPEngine:
         statics = ScheduleStatics.from_placement(table)
         scheduler = MicroEPScheduler(
             statics, sweeps=policy.sweeps, locality=policy.locality,
-            mode=policy.mode, sequencing=policy.sequencing)
+            mode=policy.mode, sequencing=policy.sequencing,
+            solver_mode=policy.solver_mode)
         return cls(table, policy, statics, scheduler)
 
     @classmethod
@@ -175,14 +176,25 @@ class MicroEPEngine:
         bm: int = 128,
         kernel_impl: Optional[str] = None,
         tp_axis: Optional[str] = None,
+        pipeline_stages: int = 1,
+        dispatch_mode: str = "packed",
+        chunk_comm: str = "ppermute",
     ) -> MoEFFNSpec:
-        """Static spec for ``moe_ffn`` (one MoE layer on this group)."""
+        """Static spec for ``moe_ffn`` (one MoE layer on this group).
+
+        ``pipeline_stages`` > 1 runs the destination-chunked pipelined hot
+        path (DESIGN.md §2); ``dispatch_mode`` picks the buffer movement
+        ('packed' gathers | 'scatter' legacy); ``chunk_comm`` picks the
+        per-chunk collective ('ppermute' | 'a2a')."""
         statics = self.dispatch_statics(tokens_per_device, top_k,
                                         capacity_factor, bm)
         return MoEFFNSpec(statics=statics, scheduler=self.scheduler,
                           top_k=top_k, activation=activation,
                           group_axes=group_axes, tp_axis=tp_axis,
-                          kernel_impl=kernel_impl)
+                          kernel_impl=kernel_impl,
+                          pipeline_stages=pipeline_stages,
+                          dispatch_mode=dispatch_mode,
+                          chunk_comm=chunk_comm)
 
     def __repr__(self) -> str:
         r, c = self.grid

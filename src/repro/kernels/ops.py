@@ -7,8 +7,6 @@ switch is explicit, never silent: callers pick via ``impl=``.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -16,7 +14,8 @@ from . import ref
 from .grouped_matmul import grouped_ffn_flat_pallas, grouped_ffn_pallas
 from .wkv6_chunk import wkv6_pallas
 
-__all__ = ["grouped_ffn", "grouped_ffn_flat", "wkv6", "default_impl"]
+__all__ = ["grouped_ffn", "grouped_ffn_flat", "grouped_ffn_flat_chunked",
+           "wkv6", "default_impl"]
 
 
 def default_impl() -> str:
@@ -32,6 +31,13 @@ def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _pad_ffn_weights(w_gate, w_up, w_down, bf: int):
+    """Pad the FFN weights' f dimension to a bf multiple — hoisted so
+    pipelined call sites pad once, not once per chunk."""
+    return (_pad_axis(w_gate, 2, bf), _pad_axis(w_up, 2, bf),
+            _pad_axis(w_down, 1, bf))
 
 
 def grouped_ffn(
@@ -50,11 +56,9 @@ def grouped_ffn(
     if impl == "ref":
         return ref.grouped_ffn_ref(x, counts, w_gate, w_up, w_down, activation)
     interpret = impl == "interpret"
-    c0, f0 = x.shape[1], w_gate.shape[-1]
+    c0 = x.shape[1]
     xp = _pad_axis(x, 1, bm)
-    wgp = _pad_axis(w_gate, 2, bf)
-    wup = _pad_axis(w_up, 2, bf)
-    wdp = _pad_axis(w_down, 1, bf)
+    wgp, wup, wdp = _pad_ffn_weights(w_gate, w_up, w_down, bf)
     out = grouped_ffn_pallas(
         xp, counts, wgp, wup, wdp,
         activation=activation, bm=bm, bf=bf, interpret=interpret,
@@ -80,21 +84,60 @@ def grouped_ffn_flat(
         return ref.grouped_ffn_flat_ref(
             x, group_start, group_end, w_gate, w_up, w_down, activation
         )
+    wgp, wup, wdp = _pad_ffn_weights(w_gate, w_up, w_down, bf)
+    return _flat_padded(x, group_start, group_end, wgp, wup, wdp,
+                        activation=activation, bm=bm, bf=bf,
+                        interpret=(impl == "interpret"))
+
+
+def _flat_padded(x, group_start, group_end, wgp, wup, wdp, *,
+                 activation, bm, bf, interpret):
+    """Pallas flat call on already-padded weights (chunk-range inner)."""
     n = x.shape[0]
-    s = w_gate.shape[0]
+    s = wgp.shape[0]
     # tile group ids from the (bm-aligned) starts
     tiles = jnp.arange(n // bm, dtype=jnp.int32) * bm
     tile_gid = jnp.clip(
         jnp.searchsorted(group_start, tiles, side="right") - 1, 0, s - 1
     ).astype(jnp.int32)
-    f0 = w_gate.shape[-1]
-    wgp = _pad_axis(w_gate, 2, bf)
-    wup = _pad_axis(w_up, 2, bf)
-    wdp = _pad_axis(w_down, 1, bf)
     return grouped_ffn_flat_pallas(
         x, tile_gid, group_end, wgp, wup, wdp,
-        activation=activation, bm=bm, bf=bf, interpret=(impl == "interpret"),
+        activation=activation, bm=bm, bf=bf, interpret=interpret,
     )
+
+
+def grouped_ffn_flat_chunked(
+    x_chunks,                # sequence of [N_c, H] chunk sub-buffers
+    group_starts: jax.Array,  # int32[n, S] chunk-relative, bm-aligned
+    group_ends: jax.Array,    # int32[n, S]
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    activation: str = "swiglu",
+    impl: str | None = None,
+    bm: int = 128,
+    bf: int = 512,
+):
+    """Chunk-range entry point of the flat kernel (pipelined hot path).
+
+    Runs :func:`grouped_ffn_flat` semantics independently over each chunk
+    sub-buffer with that chunk's own group ranges, padding the weights
+    once for all chunks.  Each returned chunk depends only on its input
+    chunk — the property the dispatch/compute/combine overlap relies on
+    (DESIGN.md §2).  Returns a tuple of [N_c, H] outputs."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return tuple(
+            ref.grouped_ffn_flat_ref(
+                xc, group_starts[c], group_ends[c],
+                w_gate, w_up, w_down, activation)
+            for c, xc in enumerate(x_chunks))
+    wgp, wup, wdp = _pad_ffn_weights(w_gate, w_up, w_down, bf)
+    return tuple(
+        _flat_padded(xc, group_starts[c], group_ends[c], wgp, wup, wdp,
+                     activation=activation, bm=bm, bf=bf,
+                     interpret=(impl == "interpret"))
+        for c, xc in enumerate(x_chunks))
 
 
 def wkv6(

@@ -179,7 +179,8 @@ def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
         spec = engine.moe_spec(
             t_local, top_k_eff, activation=act, group_axes=group_axes,
             capacity_factor=config.capacity_factor,
-            kernel_impl=config.impl)
+            kernel_impl=config.impl,
+            pipeline_stages=config.pipeline_stages)
 
         def inner(w_router, experts, x_loc, st_loc, valid_loc):
             experts_loc = jax.tree_util.tree_map(lambda w: w[0, 0], experts)

@@ -125,8 +125,10 @@ def main(argv=None):
             if planner is not None:
                 planner.observe(eload)
                 if planner.history_size >= planner.min_history:
+                    # in-graph batched solver: no per-step host LP
                     ts = ts._replace(solver=prewarm_solver_states(
-                        ts.solver, planner.warm_start_x()))
+                        ts.solver,
+                        planner.warm_start_x(solver="jacobi")))
         logger.log(i, m)
     logger.close()
     if recorder is not None and telemetry.trace_path:

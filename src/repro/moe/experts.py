@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from ..kernels import ops
 
 __all__ = ["ExpertParams", "init_expert_slots", "expert_ffn_flat",
-           "init_canonical_experts"]
+           "expert_ffn_flat_chunked", "init_canonical_experts"]
 
 
 class ExpertParams(NamedTuple):
@@ -61,6 +61,23 @@ def expert_ffn_flat(
 ) -> jax.Array:
     return ops.grouped_ffn_flat(
         flat, group_start, group_end,
+        params.w_gate, params.w_up, params.w_down,
+        activation=activation, impl=impl,
+    )
+
+
+def expert_ffn_flat_chunked(
+    flat_chunks,              # sequence of [N_c, H] chunk sub-buffers
+    group_starts: jax.Array,  # int32[n, S] chunk-relative
+    group_ends: jax.Array,    # int32[n, S]
+    params: ExpertParams,
+    activation: str,
+    impl: str | None = None,
+):
+    """Pipelined variant: one grouped-FFN call per dispatch chunk, weights
+    padded once (kernels.ops.grouped_ffn_flat_chunked)."""
+    return ops.grouped_ffn_flat_chunked(
+        flat_chunks, group_starts, group_ends,
         params.w_gate, params.w_up, params.w_down,
         activation=activation, impl=impl,
     )

@@ -10,6 +10,14 @@ smoke tests).  Steps (paper §4 "Runtime"):
        -> weighted top-K merge
 
 The scheduler's solver state (warm start) threads through micro-batches.
+
+With ``pipeline_stages > 1`` the dispatch/compute/combine critical path
+runs destination-chunked (DESIGN.md §2): the collectives split into stages
+of G/n destination offsets and the grouped FFN runs per chunk, so chunk
+i's compute and chunk i+1's collective are independent in the dataflow
+graph — XLA's scheduler can overlap them.  The pipelined path is
+bit-identical to the monolithic one (rows keep their replica/segment
+assignment; the FFN is row-wise).
 """
 from __future__ import annotations
 
@@ -21,7 +29,7 @@ import jax.numpy as jnp
 from ..core.scheduler import MicroEPScheduler, ScheduleStatics
 from ..core.solver_jax import SolverState
 from . import dispatch as D
-from .experts import ExpertParams, expert_ffn_flat
+from .experts import ExpertParams, expert_ffn_flat, expert_ffn_flat_chunked
 from .router import RouterOut, top_k_gating
 
 __all__ = ["MoEMetrics", "moe_ffn", "MoEFFNSpec"]
@@ -39,7 +47,20 @@ class MoEMetrics(NamedTuple):
 
 
 class MoEFFNSpec(NamedTuple):
-    """Static configuration bundle for one MoE layer."""
+    """Static configuration bundle for one MoE layer.
+
+    pipeline_stages — destination chunks of the dispatch/combine pipeline
+                      (1 = monolithic; non-divisors of the group size fall
+                      back to the largest divisor below).
+    dispatch_mode   — 'packed' (int32-scatter + row gathers, default) |
+                      'scatter' (legacy dense zero-buffer scatters).
+                      Applies to the *monolithic* path only: the pipelined
+                      path (pipeline_stages > 1) is packed-gather by
+                      construction and ignores this knob.
+    chunk_comm      — per-stage collective of the pipelined path:
+                      'ppermute' (schedulable overlap) | 'a2a' (portable
+                      full-shape reference).
+    """
 
     statics: D.DispatchStatics
     scheduler: MicroEPScheduler
@@ -48,6 +69,9 @@ class MoEFFNSpec(NamedTuple):
     group_axes: tuple
     tp_axis: Optional[str] = None   # intra-expert tensor axis (F sharded)
     kernel_impl: Optional[str] = None
+    pipeline_stages: int = 1
+    dispatch_mode: str = "packed"
+    chunk_comm: str = "ppermute"
 
 
 def _gather_counts(cnt: jax.Array, group_axes: Sequence[str]) -> jax.Array:
@@ -87,18 +111,38 @@ def moe_ffn(
         jax.lax.axis_index(spec.group_axes).astype(jnp.int32)
         if spec.group_axes else jnp.zeros((), jnp.int32)
     )
-    plan = D.make_plan(st, ex, sched.flow, my_index)
 
-    flat = D.dispatch(st, plan, rows, spec.group_axes)
-
-    out_flat = expert_ffn_flat(
-        flat, plan.group_start, plan.group_end, experts,
-        spec.activation, impl=spec.kernel_impl,
-    )
-    if spec.tp_axis is not None:
-        out_flat = jax.lax.psum(out_flat, spec.tp_axis)
-
-    out_rows = D.combine(st, plan, out_flat, spec.group_axes)
+    n_stages = D.effective_stages(spec.pipeline_stages, st.group_size) \
+        if spec.group_axes else 1
+    if n_stages > 1:
+        # destination-chunked pipelined hot path: chunk c's FFN depends
+        # only on stage c's collective, so compute overlaps communication
+        plan = D.make_chunked_plan(st, ex, sched.flow, my_index, n_stages)
+        flat_chunks = D.dispatch_pipelined(
+            st, plan, rows, spec.group_axes, my_index,
+            chunk_comm=spec.chunk_comm)
+        out_chunks = expert_ffn_flat_chunked(
+            flat_chunks, plan.group_start, plan.group_end, experts,
+            spec.activation, impl=spec.kernel_impl,
+        )
+        if spec.tp_axis is not None:
+            out_chunks = tuple(jax.lax.psum(o, spec.tp_axis)
+                               for o in out_chunks)
+        out_rows = D.combine_pipelined(
+            st, plan, out_chunks, spec.group_axes, my_index,
+            chunk_comm=spec.chunk_comm)
+    else:
+        plan = D.make_plan(st, ex, sched.flow, my_index)
+        flat = D.dispatch(st, plan, rows, spec.group_axes,
+                          mode=spec.dispatch_mode)
+        out_flat = expert_ffn_flat(
+            flat, plan.group_start, plan.group_end, experts,
+            spec.activation, impl=spec.kernel_impl,
+        )
+        if spec.tp_axis is not None:
+            out_flat = jax.lax.psum(out_flat, spec.tp_axis)
+        out_rows = D.combine(st, plan, out_flat, spec.group_axes,
+                             mode=spec.dispatch_mode)
 
     out = (out_rows.reshape(t, k, h) * r.gate_w[:, :, None].astype(x.dtype)
            ).sum(axis=1)

@@ -133,17 +133,49 @@ class ReplacementPlanner:
         return self.placement if decision["fired"] else None
 
     # --------------------------------------------------------- warm start
-    def warm_start_x(self, loads: Optional[np.ndarray] = None) -> np.ndarray:
-        """float32[E, R] LPP-1 optimal replica loads for the current
-        placement under ``loads`` (default: the forecast) — the exact
-        warm-start for the in-graph water-filling solver."""
+    def warm_start_x(self, loads: Optional[np.ndarray] = None,
+                     solver: str = "lp") -> np.ndarray:
+        """float32[E, R] (or [..., E, R]) LPP-1 replica loads for the
+        current placement under ``loads`` (default: the forecast) — the
+        warm-start for the in-graph water-filling solver.
+
+        ``solver``:
+          * "lp"     — exact HiGHS host solve (one LP per call; the
+            oracle, but a host round-trip per prewarmed step);
+          * "jacobi" — the in-graph batched damped-Jacobi solver
+            (`core.solve_replica_loads_batched`).  Approximate but orders
+            of magnitude cheaper in a per-step loop, and it accepts
+            leading batch dims: ``loads`` of shape [L, E] solves every
+            decoder MoE layer's LP in one vectorized pass.
+        """
         if loads is None:
             if not self._history:
                 raise RuntimeError("warm_start_x() before any observe()")
             loads = self.forecast()
-        loads = np.asarray(loads, np.float64).ravel()
-        res = solve_lpp1(loads, replica_devices(self.placement),
-                         self.placement.num_devices)
+        dev = replica_devices(self.placement)
+        if solver == "jacobi":
+            import jax.numpy as jnp
+            from ..core.solver_jax import solve_replica_loads_batched
+            arr = np.asarray(loads, np.float32)
+            sol = solve_replica_loads_batched(
+                jnp.asarray(arr), jnp.asarray(dev, jnp.int32),
+                self.placement.num_devices, sweeps=24)
+            return np.asarray(sol.x, np.float32)
+        if solver != "lp":
+            raise ValueError(
+                f"warm_start_x solver={solver!r} is not a registered "
+                f"option; choose one of: lp, jacobi")
+        loads = np.asarray(loads, np.float64)
+        if loads.ndim > 1:
+            # one exact LP per leading row (the jacobi path batches these
+            # in a single vectorized solve)
+            flat = loads.reshape(-1, loads.shape[-1])
+            xs = np.stack([
+                solve_lpp1(row, dev, self.placement.num_devices).x
+                for row in flat])
+            return xs.reshape(loads.shape[:-1] + xs.shape[1:]) \
+                .astype(np.float32)
+        res = solve_lpp1(loads.ravel(), dev, self.placement.num_devices)
         return res.x.astype(np.float32)
 
 
