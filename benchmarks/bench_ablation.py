@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.routing import comm_stats
 from repro.core.solver_jax import SolverState
 
-from .common import a2a_time_s, emit, make_scheduler, time_it, zipf_input
+from .common import (a2a_time_s, emit, make_main, make_scheduler, register_bench, time_it, zipf_input)
 
 ROWS, COLS, E = 2, 4, 32
 TOKENS_PER_DEV = 4096
@@ -79,5 +79,7 @@ def run(seed: int = 0):
     return rows
 
 
+main = make_main(register_bench("fig11_ablation", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

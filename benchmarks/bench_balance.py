@@ -18,7 +18,7 @@ import numpy as np
 from repro.core.solver_jax import device_loads
 from repro.moe.baselines import baseline_max_load
 
-from .common import emit, make_scheduler, zipf_input
+from .common import (emit, make_main, make_scheduler, register_bench, zipf_input)
 
 ROWS, COLS, E = 2, 4, 32
 TOKENS_PER_DEV = 2048
@@ -72,5 +72,7 @@ def run(iters: int = 5, seed: int = 0):
     return rows
 
 
+main = make_main(register_bench("fig7_balance", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

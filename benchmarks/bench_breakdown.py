@@ -14,8 +14,7 @@ import numpy as np
 from repro.core.routing import comm_stats
 from repro.moe.baselines import baseline_max_load
 
-from .common import (a2a_time_s, emit, ffn_time_s, make_scheduler,
-                     zipf_input)
+from .common import (a2a_time_s, emit, ffn_time_s, make_main, make_scheduler, register_bench, zipf_input)
 
 ROWS, COLS, E = 2, 4, 32
 H, F = 4096, 8192
@@ -65,5 +64,7 @@ def run(seed: int = 0):
     return out_rows
 
 
+main = make_main(register_bench("fig8_breakdown", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -11,7 +11,7 @@ import numpy as np
 from repro.core.lp import replica_devices, solve_lpp1, solve_lpp4
 from repro.core.placement import latin_placement
 
-from .common import ICI_BW, emit, ffn_time_s, zipf_input
+from .common import (ICI_BW, emit, ffn_time_s, make_main, register_bench, zipf_input)
 
 ROWS, COLS, E = 4, 4, 32
 H, F = 2048, 8192
@@ -73,5 +73,7 @@ def run(seed: int = 0):
     return rows
 
 
+main = make_main(register_bench("fig15_commaware", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

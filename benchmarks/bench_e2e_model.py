@@ -12,8 +12,7 @@ import numpy as np
 
 from repro.moe.baselines import baseline_max_load
 
-from .common import (a2a_time_s, emit, ffn_time_s, make_scheduler,
-                     zipf_input)
+from .common import (a2a_time_s, emit, ffn_time_s, make_main, make_scheduler, register_bench, zipf_input)
 
 # (name, layers, hidden, ffn_hidden, experts, topk, seq, mbs)
 TABLE = [
@@ -64,5 +63,7 @@ def run(seed: int = 0):
     return out
 
 
+main = make_main(register_bench("fig6_e2e", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

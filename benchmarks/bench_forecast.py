@@ -18,7 +18,7 @@ Two measurements, both emitted as ``BENCH,...`` lines and one JSON doc:
     (a) the reactive baseline: trigger + regenerate on the *last observed*
     loads (instantaneous-load trigger, ``ReplacementManager`` semantics),
     and (b) the forecast planner (``telemetry.ReplacementPlanner``) with a
-    sliding-window predictor.  Aggregated over ``--seeds`` independent
+    sliding-window predictor.  Aggregated over ``--n-seeds`` independent
     workloads, the planner must do no worse on mean balance with no more
     migrations — asserted, not just printed (the ISSUE 3 acceptance bar).
 
@@ -27,7 +27,6 @@ Two measurements, both emitted as ``BENCH,...`` lines and one JSON doc:
 """
 from __future__ import annotations
 
-import argparse
 import json
 
 import numpy as np
@@ -37,7 +36,7 @@ from repro.telemetry import (LoadTrace, ReplacementPlanner,
                              evaluate_predictor, lp_balance_ratio,
                              predictors)
 
-from .common import emit
+from .common import emit, make_main, register_bench
 
 ROWS, COLS, EXPERTS = 2, 4, 16
 CHECK_EVERY = 4
@@ -116,7 +115,9 @@ def _aggregate(per_seed: list) -> dict:
 
 
 def run(steps: int = 192, out: str = None, seed: int = 0,
-        n_seeds: int = 3) -> dict:
+        n_seeds: int = 3, smoke: bool = False) -> dict:
+    if smoke:
+        steps = min(steps, 96)      # the conventional CI short run
     # -- predictor accuracy -------------------------------------------------
     loads = drifting_loads(steps, EXPERTS, seed=seed)
     trace = LoadTrace(steps=np.arange(steps), loads=loads[:, None, :],
@@ -170,20 +171,7 @@ def run(steps: int = 192, out: str = None, seed: int = 0,
     return results
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=192)
-    ap.add_argument("--smoke", action="store_true",
-                    help="short run (96 steps) for CI")
-    ap.add_argument("--out", default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--seeds", type=int, default=3,
-                    help="independent workload seeds to aggregate over")
-    args = ap.parse_args(argv)
-    run(steps=96 if args.smoke else args.steps, out=args.out,
-        seed=args.seed, n_seeds=args.seeds)
-    return 0
-
+main = make_main(register_bench("forecast", run))
 
 if __name__ == "__main__":
     raise SystemExit(main())

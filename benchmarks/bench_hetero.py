@@ -1,0 +1,178 @@
+"""Heterogeneity benchmark: weighted scheduling on skewed-capability meshes
+(DESIGN.md §11).
+
+Three measurements, each emitted as ``BENCH,...`` lines (and optionally one
+JSON doc via ``--out``):
+
+  * **weighted vs uniform scheduling** — the same Zipf token stream
+    scheduled by the uniform engine and by an engine with a 2:1
+    skewed-compute ``DeviceProfile`` (half the devices twice as fast).
+    Reported metric is the *weighted makespan* max_g load_g / w_g — the
+    straggler time on hardware where device g runs w_g× as fast.  The
+    weighted scheduler must achieve strictly lower mean weighted makespan
+    (asserted — the ISSUE 5 acceptance gate).
+  * **weighted solver vs weighted oracle** — both in-graph solvers
+    (Gauss-Seidel scan and damped Jacobi) against the weighted HiGHS
+    optimum (`core.lp.solve_lpp1(weights=...)`) on every instance; must
+    match within the usual 2% + 1 token band.
+  * **budget-respecting placement** — budgeted asymmetric placements under
+    skewed per-device slot budgets: never exceed any budget, keep every
+    expert replicated, and the load fits the token budgets iff the
+    weighted-LP feasibility reduction (`core.lp.budget_feasible`) says so.
+
+  PYTHONPATH=src python -m benchmarks.bench_hetero [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lp import budget_feasible, replica_devices, solve_lpp1
+from repro.core.placement import asymmetric_placement, max_induced_density
+from repro.core.solver_jax import (device_loads, solve_replica_loads,
+                                   solve_replica_loads_batched)
+from repro.engine import MicroEPEngine, PlacementSpec, SchedulePolicy
+
+from .common import emit, make_main, register_bench, zipf_input
+
+GEOMETRIES = [(2, 4, 32), (4, 4, 64)]
+GEOMETRIES_SMOKE = [(2, 2, 8)]
+
+
+def _skewed_profiles(g: int) -> str:
+    """2:1 compute skew: the first half of the group is twice as fast."""
+    return ",".join(["2"] * (g // 2) + ["1"] * (g - g // 2))
+
+
+def bench_weighted_vs_uniform(rows_out, smoke: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    steps = 4 if smoke else 12
+    tokens = 256 if smoke else 1024
+    for rows, cols, e in (GEOMETRIES_SMOKE if smoke else GEOMETRIES):
+        g = rows * cols
+        policy = SchedulePolicy(mode="microep", sweeps=8)
+        eng_u = MicroEPEngine.build(e, (rows, cols), placement="latin",
+                                    policy=policy)
+        eng_w = MicroEPEngine.build(e, (rows, cols), placement="latin",
+                                    policy=policy,
+                                    device_profiles=_skewed_profiles(g))
+        w = np.asarray(eng_w.weights, np.float64)      # mean-normalized
+        dev = jnp.asarray(eng_w.statics.dev, jnp.int32)
+        mks_u, mks_w, oracle_ratios = [], [], []
+        st_u = st_w = None
+        for _ in range(steps):
+            input_eg = jnp.asarray(
+                zipf_input(rng, e, g, tokens, 1.2), jnp.int32)
+            loads = np.asarray(input_eg).sum(axis=1).astype(np.float64)
+            s_u = eng_u.schedule(input_eg, st_u)
+            s_w = eng_w.schedule(input_eg, st_w)
+            st_u, st_w = s_u.solver_state, s_w.solver_state
+            dl_u = np.asarray(device_loads(
+                s_u.x_int.astype(jnp.float32), dev, g))
+            dl_w = np.asarray(device_loads(
+                s_w.x_int.astype(jnp.float32), dev, g))
+            mks_u.append((dl_u / w).max())
+            mks_w.append((dl_w / w).max())
+            opt = solve_lpp1(loads, eng_w.statics.dev, g,
+                             weights=w).objective
+            oracle_ratios.append(mks_w[-1] / max(opt, 1e-9))
+        mean_u, mean_w = float(np.mean(mks_u)), float(np.mean(mks_w))
+        row = {"bench": "weighted_vs_uniform", "devices": g, "experts": e,
+               "steps": steps, "tokens_per_dev": tokens,
+               "uniform_weighted_makespan": round(mean_u, 2),
+               "weighted_weighted_makespan": round(mean_w, 2),
+               "makespan_reduction": round(mean_u / mean_w, 3),
+               "weighted_vs_lp_opt": round(float(np.max(oracle_ratios)), 4)}
+        emit("hetero_scheduling", **row)
+        rows_out.append(row)
+        # acceptance: weighted scheduling strictly beats uniform on the
+        # weighted makespan, and tracks the warm-started weighted optimum
+        assert mean_w < mean_u, (mean_w, mean_u)
+        assert float(np.max(oracle_ratios)) <= 1.05 + 1.0 / mean_w, row
+
+
+def bench_weighted_solvers(rows_out, smoke: bool, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    for rows, cols, e in (GEOMETRIES_SMOKE if smoke else GEOMETRIES):
+        g = rows * cols
+        eng = MicroEPEngine.build(e, (rows, cols), placement="latin",
+                                  device_profiles=_skewed_profiles(g))
+        w = np.asarray(eng.weights, np.float64)
+        wj = jnp.asarray(w, jnp.float32)
+        dev = eng.statics.dev
+        devj = jnp.asarray(dev, jnp.int32)
+        loads = zipf_input(rng, e, g, 512, 1.0).sum(axis=1).astype(
+            np.float64)
+        loads_j = jnp.asarray(loads, jnp.float32)
+        opt = solve_lpp1(loads, dev, g, weights=w).objective
+        gs = solve_replica_loads(loads_j, devj, g, sweeps=30, weights=wj)
+        jb = solve_replica_loads_batched(loads_j, devj, g, sweeps=80,
+                                         weights=wj)
+        for name, sol in (("scan", gs), ("batched", jb)):
+            dl = np.asarray(device_loads(sol.x, devj, g))
+            mk = float((dl / w).max())
+            row = {"bench": "weighted_solver", "solver": name,
+                   "devices": g, "experts": e,
+                   "weighted_makespan": round(mk, 2),
+                   "lp_opt": round(float(opt), 2),
+                   "ratio": round(mk / max(opt, 1e-9), 4)}
+            emit("hetero_solver", **row)
+            rows_out.append(row)
+            assert mk <= opt * 1.02 + 1.0, row
+
+
+def bench_budgeted_placement(rows_out, smoke: bool, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    rows, cols, e = (2, 2, 8) if smoke else (2, 4, 32)
+    g = rows * cols
+    k = e // cols
+    # skewed HBM: half the devices hold k+d slots, the rest k-d — same
+    # total as the uniform layout, redistributed toward the big-memory
+    # nodes (d = k//4, at least 1)
+    d = max(k // 4, 1)
+    budgets = np.asarray([k + d] * (g // 2) + [k - d] * (g - g // 2))
+    loads = rng.zipf(1.3, size=e).astype(np.float64)
+    p = asymmetric_placement(rows, cols, e, loads, seed=seed,
+                             num_samples=8 if smoke else 32,
+                             slot_budgets=budgets)
+    used = p.slots_per_device()
+    assert (used <= budgets).all(), (used, budgets)
+    assert (p.replica_count() >= 1).all()
+    dev = replica_devices(p)
+    density = max_induced_density(p, loads)
+    # token-budget feasibility via the weighted-LP reduction: generous
+    # budgets fit, starved budgets don't
+    ok, util = budget_feasible(loads, dev, g,
+                               np.full(g, loads.sum(), np.float64))
+    tight, util_t = budget_feasible(
+        loads, dev, g, np.full(g, loads.sum() / (2 * g), np.float64))
+    assert ok and not tight, (util, util_t)
+    row = {"bench": "budgeted_placement", "devices": g, "experts": e,
+           "budgets": budgets.tolist(), "slots_used": used.tolist(),
+           "density": round(density, 3),
+           "feasible_util": round(util, 4),
+           "starved_util": round(util_t, 4)}
+    emit("hetero_budget", **{k_: v for k_, v in row.items()
+                             if k_ not in ("budgets", "slots_used")})
+    rows_out.append(row)
+
+
+def run(smoke: bool = False, out: str = None, seed: int = 0) -> dict:
+    rows: list = []
+    bench_weighted_vs_uniform(rows, smoke, seed)
+    bench_weighted_solvers(rows, smoke, seed + 1)
+    bench_budgeted_placement(rows, smoke, seed + 2)
+    result = {"bench": "hetero", "smoke": smoke, "rows": rows}
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        print(f"wrote {out}")
+    return result
+
+
+main = make_main(register_bench("hetero", run))
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,6 @@ Usage::
 """
 from __future__ import annotations
 
-import argparse
 import json
 import os
 import subprocess
@@ -40,7 +39,8 @@ from repro.engine import MicroEPEngine
 from repro.moe import dispatch as D
 from repro.moe.router import top_k_gating
 
-from .common import emit, make_engine, time_it, zipf_input
+from .common import (emit, make_engine, make_main, register_bench,
+                     time_it, zipf_input)
 
 SOLVER_CONFIGS = [(8, 32), (16, 64), (32, 128), (64, 256)]
 SOLVER_CONFIGS_SMOKE = [(8, 32), (16, 64)]
@@ -259,17 +259,7 @@ def run(smoke: bool = False, out: str = "BENCH_hotpath.json",
     return result
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes / few iters (CI)")
-    ap.add_argument("--out", default="BENCH_hotpath.json",
-                    help="JSON output path ('' disables)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    run(smoke=args.smoke, out=args.out, seed=args.seed)
-    return 0
-
+main = make_main(register_bench("hotpath", run))
 
 if __name__ == "__main__":
     raise SystemExit(main())

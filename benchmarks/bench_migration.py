@@ -9,7 +9,7 @@ from repro.configs import get_config
 from repro.core.placement import latin_placement, asymmetric_placement
 from repro.moe.sync import build_sync_plan, sync_traffic_bytes
 
-from .common import ICI_BW, emit
+from .common import (ICI_BW, emit, make_main, register_bench)
 
 MODELS = ["paper-gpt-32x1.3b", "paper-mixtral-16x2b", "dbrx-132b",
           "olmoe-1b-7b"]
@@ -45,5 +45,7 @@ def run(seed: int = 0):
     return rows_out
 
 
+main = make_main(register_bench("fig10_migration", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (ICI_BW, a2a_time_s, emit, make_scheduler, time_it,
-                     zipf_input)
+from .common import (ICI_BW, a2a_time_s, emit, make_main, make_scheduler, register_bench, time_it, zipf_input)
 
 ROWS, COLS, E = 2, 4, 128
 TOKENS = 4096
@@ -57,5 +56,7 @@ def run(seed: int = 0):
     return rows
 
 
+main = make_main(register_bench("fig16_pipeline", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, make_engine, time_it, zipf_input
+from .common import (emit, make_engine, make_main, register_bench, time_it, zipf_input)
 
 CONFIGS = [(8, 32), (8, 64), (16, 64), (16, 128), (32, 128), (64, 256)]
 SOLVER_MODES = ("scan", "batched")
@@ -56,5 +56,7 @@ def run(seed: int = 0):
     return rows_out
 
 
+main = make_main(register_bench("fig9_sched_overhead", run))
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

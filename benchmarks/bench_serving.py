@@ -14,14 +14,13 @@ as ``BENCH,...`` lines (benchmarks/common.emit) and as one JSON document
 """
 from __future__ import annotations
 
-import argparse
 import json
 
 from repro.configs import get_config
 from repro.engine import ServeConfig
 from repro.serve import ServingSession, poisson_trace
 
-from .common import emit
+from .common import emit, make_main, register_bench
 
 CONFIGS = [
     # (bench name, arch, rate requests/step)
@@ -70,15 +69,7 @@ def run(requests: int = 12, out: str = None, seed: int = 0):
     return results
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--out", default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    run(requests=args.requests, out=args.out, seed=args.seed)
-    return 0
-
+main = make_main(register_bench("serving", run))
 
 if __name__ == "__main__":
     raise SystemExit(main())

@@ -1,8 +1,20 @@
-"""Shared benchmark utilities: workloads, the straggler time model, CSV."""
+"""Shared benchmark utilities: workloads, the straggler time model, CSV,
+and the one-line registration/CLI surface every bench module uses.
+
+A benchmark is one module with a ``run(...)`` function.  It registers with
+``register_bench(<name>, run)`` (this is the whole boilerplate —
+``benchmarks.run`` discovers the registry) and exposes a CLI with
+``main = make_main(run)``, which derives ``--flag`` options from ``run``'s
+keyword signature (bools become ``--flag/--no-flag``, ints/floats/strs
+take values, a ``smoke`` parameter gives the conventional ``--smoke``).
+"""
 from __future__ import annotations
 
+import argparse
+import inspect
+import sys
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +22,55 @@ import numpy as np
 
 from repro.core.lp import replica_devices, solve_lpp1
 from repro.engine import MicroEPEngine, PlacementSpec, SchedulePolicy
+
+# ---- bench registry + shared CLI main (one line per bench module) --------
+
+BENCHES: Dict[str, Callable] = {}
+
+
+def register_bench(name: str, run_fn: Callable) -> Callable:
+    """Register ``run_fn`` as benchmark ``name`` in ``benchmarks.run``'s
+    menu.  Returns ``run_fn`` so modules can write
+    ``main = make_main(register_bench(<name>, run))``."""
+    if name in BENCHES and BENCHES[name] is not run_fn:
+        raise ValueError(f"benchmark {name!r} is already registered")
+    BENCHES[name] = run_fn
+    return run_fn
+
+
+def make_main(run_fn: Callable) -> Callable:
+    """Build the conventional ``main(argv) -> int`` from ``run_fn``'s
+    keyword signature — the argparse boilerplate PR 2-4 kept re-copying.
+
+    Every simple-typed keyword becomes a flag: ``smoke: bool = False`` ->
+    ``--smoke/--no-smoke``, ``seed: int = 0`` -> ``--seed N``,
+    ``out: str = None`` -> ``--out PATH``, ``n_seeds`` -> ``--n-seeds``.
+    """
+    mod = sys.modules.get(run_fn.__module__)
+    doc = (mod.__doc__ if mod is not None else None) \
+        or run_fn.__doc__ or ""
+    description = doc.strip().split("\n")[0]
+
+    def main(argv=None) -> int:
+        ap = argparse.ArgumentParser(description=description)
+        for name, p in inspect.signature(run_fn).parameters.items():
+            if p.kind not in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY) or \
+                    p.default is p.empty:
+                continue
+            flag = "--" + name.replace("_", "-")
+            if isinstance(p.default, bool):
+                ap.add_argument(flag, action=argparse.BooleanOptionalAction,
+                                default=p.default)
+            elif isinstance(p.default, int):
+                ap.add_argument(flag, type=int, default=p.default)
+            elif isinstance(p.default, float):
+                ap.add_argument(flag, type=float, default=p.default)
+            elif p.default is None or isinstance(p.default, str):
+                ap.add_argument(flag, default=p.default)
+        run_fn(**vars(ap.parse_args(argv)))
+        return 0
+
+    return main
 
 # ---- TPU v5e time model (the paper's straggler model, §2.3/§7.4:
 # FFN time ∝ max device load; a2a time ∝ max send/recv bytes) -------------

@@ -3,8 +3,10 @@
   PYTHONPATH=src python -m benchmarks.run            # all CPU-scale benches
   PYTHONPATH=src python -m benchmarks.run fig7 fig9  # a subset
 
-The multi-combo dry-run/roofline table is produced separately (it compiles
-512-device programs): `python -m repro.launch.dryrun --all --out r.json`
+Each bench module registers itself with ``common.register_bench`` (one
+line); importing the modules below populates the menu.  The multi-combo
+dry-run/roofline table is produced separately (it compiles 512-device
+programs): `python -m repro.launch.dryrun --all --out r.json`
 then `python -m benchmarks.roofline r.json`.
 """
 from __future__ import annotations
@@ -13,24 +15,11 @@ import sys
 import time
 import traceback
 
-from . import (bench_ablation, bench_balance, bench_breakdown,
+from . import (bench_ablation, bench_balance, bench_breakdown,  # noqa: F401
                bench_commaware, bench_e2e_model, bench_forecast,
-               bench_hotpath, bench_migration, bench_pipeline,
-               bench_sched_overhead, bench_serving)
-
-ALL = {
-    "fig6_e2e": bench_e2e_model.run,
-    "fig7_balance": bench_balance.run,
-    "fig8_breakdown": bench_breakdown.run,
-    "fig9_sched_overhead": bench_sched_overhead.run,
-    "fig10_migration": bench_migration.run,
-    "fig11_ablation": bench_ablation.run,
-    "fig15_commaware": bench_commaware.run,
-    "fig16_pipeline": bench_pipeline.run,
-    "serving": bench_serving.run,
-    "forecast": bench_forecast.run,
-    "hotpath": bench_hotpath.run,
-}
+               bench_hetero, bench_hotpath, bench_migration,
+               bench_pipeline, bench_sched_overhead, bench_serving)
+from .common import BENCHES as ALL
 
 
 def main(argv=None) -> int:

@@ -13,6 +13,14 @@ Problem (LPP 1):
 
 Variables are the replica loads x_e^g.  ``dev[e, r]`` maps replica r of
 expert e to its flat device index (-1 = padding for asymmetric placements).
+
+**Weighted LPP 1** (heterogeneous fleets, DESIGN.md §11): device g has a
+relative compute weight w_g, so "balanced" means *proportional to weight*.
+The device rows become  sum_{on g} x <= w_g * m  and the objective m is
+the *weighted makespan* max_g load_g / w_g.  With all w_g equal this is
+exactly the uniform LP.  The same machinery answers per-device *token
+budget* feasibility: loads fit budgets b_g iff the weighted LP with
+weights b has optimum <= 1 (:func:`budget_feasible`).
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ import dataclasses
 import numpy as np
 from scipy.optimize import linprog
 
-__all__ = ["LPResult", "solve_lpp1", "solve_lpp4", "replica_devices"]
+__all__ = ["LPResult", "solve_lpp1", "solve_lpp4", "replica_devices",
+           "budget_feasible"]
 
 
 @dataclasses.dataclass
@@ -36,7 +45,8 @@ def replica_devices(placement) -> np.ndarray:
     """int[E, R] flat device index of each replica, -1 padding.
 
     R = max replica count over experts.  Replica order is ascending flat
-    device index (deterministic across all devices)."""
+    device index (deterministic across all devices).  Empty placement
+    slots (table entry -1, budgeted placements) are skipped."""
     flat = placement.flat()
     counts = placement.replica_count()
     r_max = int(counts.max())
@@ -45,6 +55,8 @@ def replica_devices(placement) -> np.ndarray:
     for g in range(flat.shape[0]):
         for s in range(flat.shape[1]):
             e = int(flat[g, s])
+            if e < 0:
+                continue
             dev[e, fill[e]] = g
             fill[e] += 1
     return dev
@@ -56,21 +68,36 @@ def _var_index(dev: np.ndarray):
     return e_idx, r_idx
 
 
-def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int) -> LPResult:
-    """Exact LPP 1 with HiGHS."""
+def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int,
+               weights: np.ndarray | None = None) -> LPResult:
+    """Exact LPP 1 with HiGHS.
+
+    ``weights`` (f64[num_devices], all > 0) makes it the *weighted* LP of
+    DESIGN.md §11: device rows become  sum_{on g} x <= w_g * m  and the
+    objective is the weighted makespan max_g load_g / w_g.  None = uniform
+    (identical to the unweighted LP).  ``max_load`` always reports the raw
+    max device load in tokens."""
     loads = np.asarray(loads, dtype=np.float64)
     e_idx, r_idx = _var_index(dev)
     nvar = len(e_idx)
     n_e, r_max = dev.shape
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float64).ravel()
+        if weights.shape != (num_devices,):
+            raise ValueError(
+                f"weights must be [num_devices]={num_devices}, "
+                f"got shape {weights.shape}")
+        if not (weights > 0).all():
+            raise ValueError("device weights must all be > 0")
 
     c = np.zeros(nvar + 1)
     c[-1] = 1.0  # minimize m
 
-    # GPU rows: sum_{vars on g} x - m <= 0
+    # GPU rows: sum_{vars on g} x - w_g * m <= 0
     a_ub = np.zeros((num_devices, nvar + 1))
     for v in range(nvar):
         a_ub[dev[e_idx[v], r_idx[v]], v] = 1.0
-    a_ub[:, -1] = -1.0
+    a_ub[:, -1] = -1.0 if weights is None else -weights
     b_ub = np.zeros(num_devices)
 
     # expert rows: sum_r x = load_e
@@ -88,6 +115,24 @@ def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int) -> LPResult
     np.add.at(dev_loads, dev[e_idx, r_idx], x[e_idx, r_idx])
     return LPResult(x=x, objective=float(res.fun) if res.status == 0 else np.inf,
                     max_load=float(dev_loads.max()), status=res.status)
+
+
+def budget_feasible(loads: np.ndarray, dev: np.ndarray, num_devices: int,
+                    budgets: np.ndarray, tol: float = 1e-6
+                    ) -> tuple[bool, float]:
+    """Can ``loads`` be scheduled so device g carries <= budgets[g] tokens?
+
+    Returns ``(feasible, utilization)`` where utilization is the optimum of
+    the weighted LP with weights = budgets: max_g load_g / budget_g at the
+    best achievable split.  Feasible iff utilization <= 1 (+tol) — the
+    reduction of DESIGN.md §11 (budget feasibility IS a weighted solve).
+    An infeasible *LP* (no replica for a loaded expert) returns
+    ``(False, inf)``."""
+    budgets = np.asarray(budgets, dtype=np.float64).ravel()
+    res = solve_lpp1(loads, dev, num_devices, weights=budgets)
+    if res.status != 0:
+        return False, np.inf
+    return bool(res.objective <= 1.0 + tol), float(res.objective)
 
 
 def solve_lpp4(

@@ -21,7 +21,11 @@ Strategies implemented (paper §6.2-6.3):
                    linked through every row offset.
   * cayley       — d=2 constructions from Appendix B for power-of-two sizes.
   * asymmetric   — greedy replica counts + Monte-Carlo placement given real
-                   expert loads (§6.3).
+                   expert loads (§6.3).  Optionally budget-respecting:
+                   per-device ``slot_budgets`` cap the replica slots a
+                   device hosts (HBM budgets; unfilled slots are -1) and
+                   per-device ``weights`` make the Monte-Carlo search
+                   optimize the weighted makespan (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -46,7 +50,10 @@ class Placement:
     """An expert placement for one MicroEP group.
 
     Attributes:
-      table: int32[rows, cols, slots] expert id per replica slot.
+      table: int32[rows, cols, slots] expert id per replica slot.  An
+        entry of -1 marks an *empty* slot — devices whose HBM budget is
+        below the uniform slot count simply host fewer replicas
+        (budget-respecting asymmetric placements, DESIGN.md §11).
       num_experts: E.
     """
 
@@ -55,7 +62,11 @@ class Placement:
 
     def __post_init__(self):
         assert self.table.ndim == 3, self.table.shape
-        assert self.table.min() >= 0 and self.table.max() < self.num_experts
+        assert self.table.min() >= -1 and self.table.max() < self.num_experts
+        # every expert still needs at least one replica somewhere
+        present = np.unique(self.table[self.table >= 0])
+        assert len(present) == self.num_experts, \
+            f"placement hosts {len(present)} of {self.num_experts} experts"
 
     @property
     def rows(self) -> int:
@@ -83,8 +94,13 @@ class Placement:
         return g
 
     def replica_count(self) -> np.ndarray:
-        """int[E] number of replicas per expert."""
-        return np.bincount(self.flat().ravel(), minlength=self.num_experts)
+        """int[E] number of replicas per expert (empty slots ignored)."""
+        flat = self.flat().ravel()
+        return np.bincount(flat[flat >= 0], minlength=self.num_experts)
+
+    def slots_per_device(self) -> np.ndarray:
+        """int[G] occupied replica slots per device (<= ``slots``)."""
+        return (self.flat() >= 0).sum(axis=1)
 
     def consistent_slots(self) -> bool:
         """Paper §B.3: all replicas of an expert share the local slot index."""
@@ -161,6 +177,8 @@ def asymmetric_placement(
     loads: np.ndarray,
     seed: int = 0,
     num_samples: int = 64,
+    slot_budgets: Sequence[int] | np.ndarray | None = None,
+    weights: np.ndarray | None = None,
 ) -> Placement:
     """Asymmetric placement given real expert loads (paper §6.3).
 
@@ -170,15 +188,33 @@ def asymmetric_placement(
     Step 2 (Monte-Carlo): sample ``num_samples`` random slot assignments
     consistent with the replica counts and keep the one minimizing the
     sampled max induced-subgraph density (Eq. 3 on the given loads).
+
+    Heterogeneous fleets (DESIGN.md §11): ``slot_budgets`` (int[G]) caps
+    how many replica slots each flat device may host — the HBM budget.
+    Devices below the max budget get trailing *empty* slots (table entry
+    -1); total slots = Σ budgets.  ``weights`` (f64[G] compute weights)
+    switches the Monte-Carlo scoring to the weighted density, so the
+    search optimizes the weighted makespan the scheduler will actually
+    see.
     """
     k = _check_sizes(rows, cols, num_experts)
     loads = np.asarray(loads, dtype=np.float64)
     assert loads.shape == (num_experts,)
-    total_slots = rows * cols * k
+    num_devices = rows * cols
+    if slot_budgets is not None:
+        slot_budgets = np.asarray(slot_budgets, dtype=np.int64).ravel()
+        if slot_budgets.shape != (num_devices,):
+            raise ValueError(
+                f"slot_budgets must have one entry per device "
+                f"({num_devices}), got shape {slot_budgets.shape}")
+        if (slot_budgets < 1).any():
+            raise ValueError("slot_budgets must all be >= 1")
+        k = int(slot_budgets.max())
+        total_slots = int(slot_budgets.sum())
+    else:
+        total_slots = rows * cols * k
     if total_slots < num_experts:
         raise ValueError("not enough replica slots for one replica per expert")
-
-    num_devices = rows * cols
 
     # -- Step 1: greedy replica counts (capped at one replica per device) ---
     counts = np.ones(num_experts, dtype=np.int64)
@@ -208,11 +244,13 @@ def asymmetric_placement(
     rng = np.random.default_rng(seed)
     best_tbl, best_m = None, np.inf
     for _ in range(num_samples):
-        tbl = _assign_slots(rows, cols, k, counts, rng)
+        tbl = _assign_slots(rows, cols, k, counts, rng,
+                            slot_budgets=slot_budgets)
         if tbl is None:
             continue
         p = Placement(tbl, num_experts)
-        m = max_induced_density(p, loads, num_samples=128, rng=rng)
+        m = max_induced_density(p, loads, num_samples=128, rng=rng,
+                                weights=weights)
         if m < best_m:
             best_m, best_tbl = m, tbl
     if best_tbl is None:
@@ -220,14 +258,20 @@ def asymmetric_placement(
     return Placement(best_tbl, num_experts)
 
 
-def _assign_slots(rows, cols, k, counts, rng):
+def _assign_slots(rows, cols, k, counts, rng, slot_budgets=None):
     """Assign each expert's replicas to distinct devices, filling all slots.
 
     Greedy: experts in decreasing replica count; each picks its r_e replicas
     on the devices with the most free slots (noise-randomized tie-break).
-    Returns None if the greedy dead-ends (caller resamples)."""
+    With ``slot_budgets`` device g only offers budgets[g] of its k slots
+    (the rest stay -1 = empty).  Returns None if the greedy dead-ends
+    (caller resamples)."""
     num_devices = rows * cols
-    free = np.full(num_devices, k, dtype=np.int64)
+    if slot_budgets is None:
+        budgets = np.full(num_devices, k, dtype=np.int64)
+    else:
+        budgets = np.asarray(slot_budgets, dtype=np.int64)
+    free = budgets.copy()
     table = np.full((num_devices, k), -1, dtype=np.int32)
     order = np.argsort(-counts + rng.uniform(0, 0.1, len(counts)))
     for e in order:
@@ -237,9 +281,9 @@ def _assign_slots(rows, cols, k, counts, rng):
             return None
         pick = cand[np.argsort(-(free[cand] + rng.uniform(0, 0.5, len(cand))))[:r_e]]
         for g in pick:
-            table[g, k - free[g]] = e
+            table[g, budgets[g] - free[g]] = e
             free[g] -= 1
-    if (table < 0).any():
+    if ((table >= 0).sum(axis=1) != budgets).any():
         return None
     return table.reshape(rows, cols, k)
 
@@ -249,7 +293,8 @@ def replica_matrix(p: Placement) -> np.ndarray:
     flat = p.flat()
     a = np.zeros((p.num_experts, p.num_devices), dtype=bool)
     for g in range(p.num_devices):
-        a[flat[g], g] = True
+        occupied = flat[g][flat[g] >= 0]
+        a[occupied, g] = True
     return a
 
 
@@ -258,9 +303,15 @@ def max_induced_density(
     loads: np.ndarray,
     num_samples: int = 0,
     rng=None,
+    weights: np.ndarray | None = None,
 ) -> float:
     """Optimal LP objective m via Eq. 3: max over device subsets S of
     (sum of loads of experts whose EDP group ⊆ S) / |S|.
+
+    With per-device compute ``weights`` the denominator generalizes to
+    Σ_{g∈S} w_g, and the value is the optimal *weighted makespan*
+    max_g load_g / w_g of the weighted LP (DESIGN.md §11) — the same
+    supermodular-duality argument, with the uniform case being w ≡ 1.
 
     Exact (bitmask enumeration) for num_devices <= 20; otherwise falls back to
     exact-on-structure heuristics + Monte-Carlo subset sampling (used only for
@@ -268,6 +319,11 @@ def max_induced_density(
     """
     loads = np.asarray(loads, dtype=np.float64)
     g_count = p.num_devices
+    if weights is None:
+        wdev = np.ones(g_count, dtype=np.float64)
+    else:
+        wdev = np.asarray(weights, dtype=np.float64).ravel()
+        assert wdev.shape == (g_count,) and (wdev > 0).all()
     a = replica_matrix(p)  # [E, G]
     masks = np.zeros(p.num_experts, dtype=np.int64)
     for e in range(p.num_experts):
@@ -276,28 +332,31 @@ def max_induced_density(
             mask |= 1 << int(g)
         masks[e] = mask
 
+    def subset_weight(sub: int) -> float:
+        return float(sum(wdev[g] for g in range(g_count) if sub >> g & 1))
+
     total = loads.sum()
+    w_total = float(wdev.sum())
     if g_count <= 20:
-        best = total / g_count  # S = everything is always a candidate
+        best = total / w_total  # S = everything is always a candidate
         for sub in range(1, 1 << g_count):
             inside = (masks & ~sub) == 0
             w = loads[inside].sum()
             if w > 0:
-                best = max(best, w / bin(sub).count("1"))
+                best = max(best, w / subset_weight(sub))
         return float(best)
 
     # Monte-Carlo + structural candidates for big groups.
-    best = total / g_count
+    best = total / w_total
     # candidate: each expert's own EDP group and unions of top-loaded experts
     order = np.argsort(-loads)
-    acc = 0
     for take in range(1, min(len(order), 32)):
         sub = 0
         for e in order[:take]:
             sub |= int(masks[e])
         inside = (masks & ~sub) == 0
         w = loads[inside].sum()
-        size = bin(sub).count("1")
+        size = subset_weight(sub)
         if size:
             best = max(best, w / size)
     if num_samples and rng is not None:
@@ -310,5 +369,5 @@ def max_induced_density(
             inside = (masks & ~sub) == 0
             w = loads[inside].sum()
             if w > 0:
-                best = max(best, w / size)
+                best = max(best, w / subset_weight(sub))
     return float(best)

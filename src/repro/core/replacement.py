@@ -41,11 +41,24 @@ class ReplacementManager:
     Runs outside the compiled step (placement changes recompile the dispatch
     program by design — same as the paper's training suspension during
     re-initialization; the cost is measured, not hidden).
+
+    Heterogeneous fleets (DESIGN.md §11): ``weights`` (f64[G] compute
+    weights) make both the predicted score and the ideal *weighted* —
+    candidates are judged on the weighted makespan — and ``slot_budgets``
+    (int[G]) constrain every regenerated placement to the per-device
+    HBM budgets.
     """
 
-    def __init__(self, placement: Placement, cfg: ReplacementConfig = ReplacementConfig()):
+    def __init__(self, placement: Placement,
+                 cfg: ReplacementConfig = ReplacementConfig(),
+                 weights: Optional[np.ndarray] = None,
+                 slot_budgets: Optional[np.ndarray] = None):
         self.placement = placement
         self.cfg = cfg
+        self.weights = (None if weights is None
+                        else np.asarray(weights, np.float64).ravel())
+        self.slot_budgets = (None if slot_budgets is None
+                             else np.asarray(slot_budgets, np.int64).ravel())
         self.ema: Optional[np.ndarray] = None
         self.step = 0
         self.replacements = 0
@@ -54,7 +67,9 @@ class ReplacementManager:
         self._rng = np.random.default_rng(cfg.seed)
 
     def ideal(self, loads: np.ndarray) -> float:
-        return float(np.sum(loads)) / self.placement.num_devices
+        denom = (self.placement.num_devices if self.weights is None
+                 else float(self.weights.sum()))
+        return float(np.sum(loads)) / denom
 
     def observe(self, loads: np.ndarray) -> bool:
         """Feed one micro-batch's expert loads; returns True if the placement
@@ -68,7 +83,8 @@ class ReplacementManager:
             return False
         predicted = self.ema
         m = max_induced_density(
-            self.placement, predicted, num_samples=256, rng=self._rng
+            self.placement, predicted, num_samples=256, rng=self._rng,
+            weights=self.weights,
         )
         ideal = max(self.ideal(predicted), 1e-9)
         # decision inputs, surfaced so serving stats can say *why* a
@@ -87,6 +103,7 @@ class ReplacementManager:
         self.placement = asymmetric_placement(
             p.rows, p.cols, p.num_experts, predicted,
             seed=int(self._rng.integers(2**31)), num_samples=self.cfg.mc_samples,
+            slot_budgets=self.slot_budgets, weights=self.weights,
         )
         self.replacements += 1
         return True

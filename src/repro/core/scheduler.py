@@ -37,15 +37,23 @@ __all__ = ["ScheduleStatics", "Schedule", "MicroEPScheduler"]
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleStatics:
-    """Static (trace-time) description of one MicroEP group's placement."""
+    """Static (trace-time) description of one MicroEP group's placement.
+
+    ``weights`` (f64[G], mean-normalized, or None) are the per-device
+    compute weights of a heterogeneous group (DESIGN.md §11).  None means
+    homogeneous — the canonical form for uniform profiles, so the uniform
+    path stays bit-identical to the pre-profile scheduler."""
 
     placement: Placement
     dev: np.ndarray          # int[E, R] replica -> flat device, -1 pad
     slot: np.ndarray         # int[E, R] replica -> local slot id on its device
     num_devices: int
+    weights: Optional[np.ndarray] = None   # f64[G] device compute weights
 
     @classmethod
-    def from_placement(cls, p: Placement) -> "ScheduleStatics":
+    def from_placement(cls, p: Placement,
+                       weights: Optional[np.ndarray] = None
+                       ) -> "ScheduleStatics":
         dev = lp_host.replica_devices(p)
         flat = p.flat()
         slot = np.full_like(dev, -1)
@@ -54,7 +62,20 @@ class ScheduleStatics:
                 g = dev[e, r]
                 if g >= 0:
                     slot[e, r] = int(np.nonzero(flat[g] == e)[0][0])
-        return cls(placement=p, dev=dev, slot=slot, num_devices=p.num_devices)
+        if weights is not None:
+            weights = np.asarray(weights, np.float64).ravel()
+            if weights.shape != (p.num_devices,):
+                raise ValueError(
+                    f"weights must have one entry per device "
+                    f"({p.num_devices}), got shape {weights.shape}")
+            if not (weights > 0).all():
+                raise ValueError("device weights must all be > 0")
+            if np.all(weights == weights[0]):
+                weights = None          # canonical: uniform == no weights
+            else:
+                weights = weights / weights.mean()
+        return cls(placement=p, dev=dev, slot=slot,
+                   num_devices=p.num_devices, weights=weights)
 
     @property
     def num_experts(self) -> int:
@@ -121,6 +142,9 @@ class MicroEPScheduler:
         # keep host numpy here: converting at call time keeps this object
         # safe to cache/reuse across different jit traces
         self._dev = np.asarray(statics.dev, np.int32)
+        # heterogeneous groups (DESIGN.md §11): None = uniform fast path
+        self._weights = (None if statics.weights is None
+                         else np.asarray(statics.weights, np.float32))
 
     def init_state(self) -> SolverState:
         e, r = self.statics.dev.shape
@@ -134,6 +158,8 @@ class MicroEPScheduler:
         dev = jnp.asarray(self._dev, jnp.int32)
         valid = dev >= 0
         loads = input_eg.sum(axis=1).astype(jnp.int32)           # [E]
+        weights = (None if self._weights is None
+                   else jnp.asarray(self._weights, jnp.float32))
 
         if self.mode == "vanilla":
             # Each source row dispatches within its own EP group: replica on
@@ -159,6 +185,7 @@ class MicroEPScheduler:
                     st.num_devices,
                     x_init=None if state is None else state.x,
                     sweeps=2 * self.sweeps,
+                    weights=weights,
                 )
             else:
                 sol = solve_replica_loads(
@@ -167,6 +194,7 @@ class MicroEPScheduler:
                     st.num_devices,
                     x_init=None if state is None else state.x,
                     sweeps=self.sweeps,
+                    weights=weights,
                 )
             x_int = round_replica_loads(sol.x, loads, valid)
             routed = route_tokens(input_eg, x_int, dev,
@@ -176,19 +204,26 @@ class MicroEPScheduler:
             dl = device_loads(x_int.astype(jnp.float32), dev, st.num_devices)
             state_out = sol
 
+        # balance: max over the mean device load — against *weighted* loads
+        # on a heterogeneous group (weights are mean-normalized, so the
+        # ideal per-unit-weight load is still the plain mean)
         mean = jnp.maximum(dl.mean(), 1e-9)
+        dl_norm = dl if weights is None else dl / weights
         return Schedule(
             flow=flow,
             x_int=x_int,
             solver_state=state_out,
             max_load=dl.max(),
-            balance=dl.max() / mean,
+            balance=dl_norm.max() / mean,
         )
 
     # ---------------- host-side oracle (paper's HiGHS path) ----------------
     def schedule_host(self, input_eg: np.ndarray) -> np.ndarray:
         """Solve with HiGHS on the host (paper §5.1 exact path).  Returns the
-        optimal fractional x[E, R].  Used by tests/benches as the oracle."""
+        optimal fractional x[E, R].  Used by tests/benches as the oracle.
+        On a heterogeneous group this is the weighted LP (DESIGN.md §11)."""
         loads = np.asarray(input_eg).sum(axis=1)
-        res = lp_host.solve_lpp1(loads, self.statics.dev, self.statics.num_devices)
+        res = lp_host.solve_lpp1(loads, self.statics.dev,
+                                 self.statics.num_devices,
+                                 weights=self.statics.weights)
         return res.x

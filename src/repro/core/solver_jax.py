@@ -37,6 +37,14 @@ Two sweep orders are provided:
   in (0, 1] keeps the update a convex combination of two feasible points
   (row sums stay = loads).  Leading batch dimensions (e.g. all MoE layers
   of a decoder sweep) are solved in the same vectorized pass.
+
+Both solvers take optional per-device compute ``weights`` (heterogeneous
+fleets, DESIGN.md §11): the QP becomes Σ_g L_g²/w_g, whose minimizer over
+the base polytope is the lexicographically optimal base w.r.t. w
+(Fujishige 1980) and hence minimizes the weighted makespan
+max_g L_g / w_g.  Each block subproblem stays a water-fill — on the
+weight-normalized levels b_r / w_r with fill rate w_r.  ``weights=None``
+keeps the original arithmetic bit-exactly.
 """
 from __future__ import annotations
 
@@ -54,30 +62,58 @@ class SolverState(NamedTuple):
     x: jax.Array  # f32[E, R] replica loads (padding replicas forced to 0)
 
 
-def water_fill(levels: jax.Array, budget: jax.Array, valid: jax.Array) -> jax.Array:
+def water_fill(levels: jax.Array, budget: jax.Array, valid: jax.Array,
+               weights: jax.Array | None = None) -> jax.Array:
     """Pour ``budget`` onto ``levels`` to equalize: returns alloc[R] >= 0 with
     sum = budget minimizing Σ (levels + alloc)² over valid entries.
 
     levels: f32[R]; budget: f32[]; valid: bool[R] (at least one True).
+
+    With ``weights`` (f32[R] device weights per replica, > 0) the step is
+    the *weighted* water-fill of DESIGN.md §11: minimize
+    Σ (levels + alloc)² / weights — pour onto the normalized levels
+    t = levels / weights with per-replica fill rate weights, so replicas
+    on heavier devices absorb proportionally more.  ``weights=None`` is
+    the bit-exact uniform path.
     """
     big = jnp.asarray(1e30, levels.dtype)
-    lv = jnp.where(valid, levels, big)
-    order = jnp.argsort(lv)
-    srt = lv[order]
-    r = lv.shape[0]
-    # For j+1 active replicas: tau_j = (budget + Σ_{i<=j} srt_i) / (j+1)
-    csum = jnp.cumsum(srt)
-    j1 = jnp.arange(1, r + 1, dtype=levels.dtype)
-    tau = (budget + csum) / j1
-    # valid j: tau_j >= srt_j (water covers the j-th level) and
-    #          (j == last or tau_j <= srt_{j+1})
-    nxt = jnp.concatenate([srt[1:], jnp.full((1,), big, levels.dtype)])
-    ok = (tau >= srt - 1e-6) & (tau <= nxt + 1e-6)
-    # first valid j (there is always exactly one for budget > 0)
+    if weights is None:
+        lv = jnp.where(valid, levels, big)
+        order = jnp.argsort(lv)
+        srt = lv[order]
+        r = lv.shape[0]
+        # For j+1 active replicas: tau_j = (budget + Σ_{i<=j} srt_i) / (j+1)
+        csum = jnp.cumsum(srt)
+        j1 = jnp.arange(1, r + 1, dtype=levels.dtype)
+        tau = (budget + csum) / j1
+        # valid j: tau_j >= srt_j (water covers the j-th level) and
+        #          (j == last or tau_j <= srt_{j+1})
+        nxt = jnp.concatenate([srt[1:], jnp.full((1,), big, levels.dtype)])
+        ok = (tau >= srt - 1e-6) & (tau <= nxt + 1e-6)
+        # first valid j (there is always exactly one for budget > 0)
+        idx = jnp.argmax(ok)
+        level = tau[idx]
+        alloc_sorted = jnp.clip(level - srt, 0.0, None)
+        # keep exact budget: scale tiny numeric drift
+        total = alloc_sorted.sum()
+        alloc_sorted = alloc_sorted * jnp.where(total > 0, budget / total, 0.0)
+        inv = jnp.argsort(order)
+        return alloc_sorted[inv] * valid
+    w = jnp.where(valid, weights, 1.0)
+    t = jnp.where(valid, levels / w, big)       # normalized levels
+    order = jnp.argsort(t)
+    ts = t[order]
+    ws = (jnp.where(valid, w, 0.0))[order]
+    # For the first j+1 (sorted) active replicas the common level is
+    #   tau_j = (budget + Σ_{i<=j} w_i t_i) / Σ_{i<=j} w_i
+    cw = jnp.cumsum(ws)
+    cwt = jnp.cumsum(ws * ts)
+    tau = (budget + cwt) / jnp.maximum(cw, 1e-30)
+    nxt = jnp.concatenate([ts[1:], jnp.full((1,), big, levels.dtype)])
+    ok = (tau >= ts - 1e-6) & (tau <= nxt + 1e-6)
     idx = jnp.argmax(ok)
     level = tau[idx]
-    alloc_sorted = jnp.clip(level - srt, 0.0, None)
-    # keep exact budget: scale tiny numeric drift
+    alloc_sorted = jnp.clip(level - ts, 0.0, None) * ws
     total = alloc_sorted.sum()
     alloc_sorted = alloc_sorted * jnp.where(total > 0, budget / total, 0.0)
     inv = jnp.argsort(order)
@@ -112,6 +148,7 @@ def solve_replica_loads(
     num_devices: int,
     x_init: jax.Array | None = None,
     sweeps: int = 6,
+    weights: jax.Array | None = None,
 ) -> SolverState:
     """Solve LPP 1 on device.
 
@@ -122,12 +159,19 @@ def solve_replica_loads(
       x_init: optional f32[E, R] warm start (previous micro-batch solution);
         it is re-projected onto the current loads before use.
       sweeps: Gauss-Seidel sweeps (fixed for static compilation).
+      weights: optional f32[G] device compute weights (> 0) — solves the
+        *weighted* LP min max_g load_g / w_g by descending the weighted QP
+        Σ_g L_g²/w_g (the lexicographically optimal base w.r.t. w; each
+        block subproblem is a weighted water-fill, DESIGN.md §11).  None =
+        the bit-exact uniform path.
 
     Returns SolverState with x: f32[E, R], Σ_r x[e] == loads[e].
     """
     n_e, r_max = dev.shape
     valid = dev >= 0
     loads = loads.astype(jnp.float32)
+    if weights is not None:
+        weights = weights.astype(jnp.float32)
     x = _init_iterate(loads, valid, x_init)
     dl = device_loads(x, dev, num_devices)
 
@@ -138,7 +182,8 @@ def solve_replica_loads(
         valid_e = dev_e >= 0
         safe_dev = jnp.where(valid_e, dev_e, 0)
         b = dl[safe_dev] - xe  # device load excluding e
-        alloc = water_fill(b, loads[e], valid_e)
+        w_e = None if weights is None else weights[safe_dev]
+        alloc = water_fill(b, loads[e], valid_e, weights=w_e)
         dl = dl.at[safe_dev].add(jnp.where(valid_e, alloc - xe, 0.0))
         x = x.at[e].set(alloc)
         return (x, dl), None
@@ -152,14 +197,20 @@ def solve_replica_loads(
 
 
 def _jacobi_solve_one(loads, dev, num_devices: int, x_init, sweeps: int,
-                      damping):
-    """One LP instance, damped-Jacobi sweeps.  loads f32[E], x f32[E, R]."""
+                      damping, weights=None):
+    """One LP instance, damped-Jacobi sweeps.  loads f32[E], x f32[E, R].
+
+    ``weights`` f32[G] switches every per-expert step to the weighted
+    water-fill (see :func:`water_fill`); None keeps the bit-exact uniform
+    arithmetic."""
     valid = dev >= 0
     safe_dev = jnp.where(valid, dev, 0)
     x = _init_iterate(loads, valid, x_init)
     r = dev.shape[1]
     big = jnp.asarray(1e30, jnp.float32)
     j1 = jnp.arange(1, r + 1, dtype=jnp.float32)
+    w_r = None if weights is None else \
+        jnp.where(valid, weights[safe_dev], 0.0)      # [E, R]
 
     def sweep(x, _):
         dl = device_loads(x, dev, num_devices)
@@ -167,15 +218,31 @@ def _jacobi_solve_one(loads, dev, num_devices: int, x_init, sweeps: int,
         # water-fill every expert at once.  Unlike `water_fill` no inverse
         # argsort is needed: once the water level is known the allocation
         # is clip(level - b, 0) in the *original* replica order.
-        srt = jnp.sort(b, axis=-1)                    # [E, R]
-        csum = jnp.cumsum(srt, axis=-1)
-        tau = (loads[:, None] + csum) / j1            # level for j+1 active
-        nxt = jnp.concatenate(
-            [srt[:, 1:], jnp.full_like(srt[:, :1], big)], axis=-1)
-        ok = (tau >= srt - 1e-6) & (tau <= nxt + 1e-6)
-        idx = jnp.argmax(ok, axis=-1)
-        level = jnp.take_along_axis(tau, idx[:, None], axis=-1)  # [E, 1]
-        alloc = jnp.clip(level - b, 0.0, None) * valid
+        if weights is None:
+            srt = jnp.sort(b, axis=-1)                # [E, R]
+            csum = jnp.cumsum(srt, axis=-1)
+            tau = (loads[:, None] + csum) / j1        # level for j+1 active
+            nxt = jnp.concatenate(
+                [srt[:, 1:], jnp.full_like(srt[:, :1], big)], axis=-1)
+            ok = (tau >= srt - 1e-6) & (tau <= nxt + 1e-6)
+            idx = jnp.argmax(ok, axis=-1)
+            level = jnp.take_along_axis(tau, idx[:, None], axis=-1)  # [E, 1]
+            alloc = jnp.clip(level - b, 0.0, None) * valid
+        else:
+            # weighted: levels normalize to t = b/w, fill rate is w
+            t = jnp.where(valid, b / jnp.maximum(w_r, 1e-30), big)
+            order = jnp.argsort(t, axis=-1)
+            ts = jnp.take_along_axis(t, order, axis=-1)
+            ws = jnp.take_along_axis(w_r, order, axis=-1)
+            cw = jnp.cumsum(ws, axis=-1)
+            cwt = jnp.cumsum(ws * ts, axis=-1)
+            tau = (loads[:, None] + cwt) / jnp.maximum(cw, 1e-30)
+            nxt = jnp.concatenate(
+                [ts[:, 1:], jnp.full_like(ts[:, :1], big)], axis=-1)
+            ok = (tau >= ts - 1e-6) & (tau <= nxt + 1e-6)
+            idx = jnp.argmax(ok, axis=-1)
+            level = jnp.take_along_axis(tau, idx[:, None], axis=-1)  # [E, 1]
+            alloc = jnp.clip(level - t, 0.0, None) * w_r * valid
         total = alloc.sum(-1, keepdims=True)
         alloc = alloc * jnp.where(total > 0, loads[:, None] / total, 0.0)
         # convex combination of two feasible points stays feasible
@@ -188,17 +255,29 @@ def _jacobi_solve_one(loads, dev, num_devices: int, x_init, sweeps: int,
     return jnp.where(valid, x, 0.0)
 
 
-def _jacobi_damping(dev: jax.Array, num_devices: int) -> jax.Array:
+def _jacobi_damping(dev: jax.Array, num_devices: int,
+                    weights: jax.Array | None = None) -> jax.Array:
     """Stable Jacobi step size: 1 / (max replicas hosted on one device).
 
     That many blocks update the same device-load coordinate simultaneously;
     scaling the step by their count is the classic weighted-Jacobi fix —
     damping 1/2 provably cycles when 8 replicas share a device (2-periodic
     orbit observed empirically), 1/occupancy converges on every placement
-    family in the test sweep."""
+    family in the test sweep.
+
+    With device ``weights`` the occupancy is weight-normalized: a device of
+    relative weight w attracts w× the allocation from *every* block that
+    writes to it, so its effective simultaneous-update pressure is
+    occ_g · w_g / w̄ and the step is 1 / max_g of that (never above the
+    uniform 1/occ when the heaviest device is also the most shared)."""
     flat = jnp.where(dev >= 0, dev, num_devices).ravel()
     occ = jnp.zeros(num_devices + 1, jnp.float32).at[flat].add(1.0)
-    return 1.0 / jnp.maximum(occ[:num_devices].max(), 1.0)
+    occ = occ[:num_devices]
+    if weights is None:
+        return 1.0 / jnp.maximum(occ.max(), 1.0)
+    w = weights.astype(jnp.float32)
+    occ_w = occ * w / jnp.maximum(w.mean(), 1e-30)
+    return 1.0 / jnp.maximum(occ_w.max(), 1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_devices", "sweeps"))
@@ -209,6 +288,7 @@ def solve_replica_loads_batched(
     x_init: jax.Array | None = None,
     sweeps: int = 8,
     damping: jax.Array | float | None = None,
+    weights: jax.Array | None = None,
 ) -> SolverState:
     """Solve LPP 1 with damped Jacobi water-filling — all experts per sweep
     in one vectorized step (no `lax.scan` over experts), batched over any
@@ -227,15 +307,22 @@ def solve_replica_loads_batched(
         — but each sweep is one vectorized step instead of E sequential
         water-fills, which is why it wins wall-clock (bench_hotpath).
       damping: step size toward the per-sweep water-fill proposal; default
-        (None) = 1 / max replicas hosted per device — see
-        :func:`_jacobi_damping`.  Any value in (0, 1] keeps the iterate a
-        convex combination of feasible points (row sums stay = loads).
+        (None) = 1 / max replicas hosted per device (weight-normalized
+        occupancy when ``weights`` is given) — see :func:`_jacobi_damping`.
+        Any value in (0, 1] keeps the iterate a convex combination of
+        feasible points (row sums stay = loads).
+      weights: optional f32[G] device compute weights — solve the weighted
+        LP min max_g load_g / w_g (weighted water-fill per sweep,
+        DESIGN.md §11); shared across the batch.  None = the bit-exact
+        uniform path.
 
     Returns SolverState with x: f32[..., E, R], Σ_r x[..., e, :] == loads.
     """
     loads = loads.astype(jnp.float32)
+    if weights is not None:
+        weights = weights.astype(jnp.float32)
     if damping is None:
-        damping = _jacobi_damping(dev, num_devices)
+        damping = _jacobi_damping(dev, num_devices, weights)
     batch_shape = loads.shape[:-1]
     n_e = loads.shape[-1]
     r_max = dev.shape[1]
@@ -244,12 +331,12 @@ def solve_replica_loads_batched(
         flat_init = None
         solve = jax.vmap(
             lambda l: _jacobi_solve_one(l, dev, num_devices, None,
-                                        sweeps, damping))
+                                        sweeps, damping, weights))
         x = solve(flat_loads)
     else:
         flat_init = x_init.reshape((-1, n_e, r_max))
         solve = jax.vmap(
             lambda l, x0: _jacobi_solve_one(l, dev, num_devices, x0,
-                                            sweeps, damping))
+                                            sweeps, damping, weights))
         x = solve(flat_loads, flat_init)
     return SolverState(x=x.reshape(batch_shape + (n_e, r_max)))

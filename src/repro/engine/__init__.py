@@ -30,8 +30,9 @@ from .registry import (
     get_placement_strategy,
     get_baseline_system,
 )
-from .config import (ConfigError, PlacementSpec, RuntimeConfig,
-                     SchedulePolicy, ServeConfig, TelemetryConfig)
+from .config import (ConfigError, DeviceProfile, PlacementSpec,
+                     RuntimeConfig, SchedulePolicy, ServeConfig,
+                     TelemetryConfig, profile_slot_budgets, profile_weights)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -39,6 +40,7 @@ __all__ = [
     "placement_strategies", "baseline_systems",
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
-    "ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
-    "ServeConfig", "TelemetryConfig", "MicroEPEngine",
+    "ConfigError", "DeviceProfile", "PlacementSpec", "SchedulePolicy",
+    "RuntimeConfig", "ServeConfig", "TelemetryConfig", "MicroEPEngine",
+    "profile_weights", "profile_slot_budgets",
 ]

@@ -25,8 +25,9 @@ from typing import Any, Mapping, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ConfigError", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
-           "ServeConfig", "TelemetryConfig"]
+__all__ = ["ConfigError", "DeviceProfile", "PlacementSpec", "SchedulePolicy",
+           "RuntimeConfig", "ServeConfig", "TelemetryConfig",
+           "profile_weights", "profile_slot_budgets"]
 
 
 class ConfigError(ValueError):
@@ -100,6 +101,146 @@ class PlacementSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Capabilities of one device in a MicroEP group (DESIGN.md §11).
+
+    weight — relative compute throughput.  The weighted LP minimizes the
+             *weighted makespan* max_g load_g / weight_g, so a device with
+             weight 2 is scheduled twice the tokens of a weight-1 device.
+             Only ratios matter; profiles are mean-normalized internally.
+    slots  — expert-replica slot budget (the HBM constraint: how many
+             expert copies this device can hold).  None = no cap beyond
+             the placement's uniform slot count.
+
+    CLI form: one entry per device, comma-separated — ``weight`` or
+    ``weight@slots`` (e.g. ``--device-profiles 2,1,1,1`` or
+    ``2@4,1@2,1@2,1@2``).
+    """
+
+    weight: float = 1.0
+    slots: Optional[int] = None
+
+    def __post_init__(self):
+        try:
+            w = float(self.weight)
+        except (TypeError, ValueError):
+            w = -1.0
+        if not w > 0:
+            raise ConfigError(
+                f"DeviceProfile.weight must be a positive number, "
+                f"got {self.weight!r}")
+        object.__setattr__(self, "weight", w)
+        if self.slots is not None:
+            if not isinstance(self.slots, (int, np.integer)) or self.slots < 1:
+                raise ConfigError(
+                    f"DeviceProfile.slots must be a positive int or None, "
+                    f"got {self.slots!r}")
+            object.__setattr__(self, "slots", int(self.slots))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DeviceProfile":
+        return cls(**_known_fields(cls, d))
+
+    # ------------------------------------------------------- CLI strings
+    @classmethod
+    def parse(cls, text: str) -> "DeviceProfile":
+        """``'2'`` or ``'2@4'`` (weight[@slots]) -> DeviceProfile."""
+        text = text.strip()
+        slots = None
+        if "@" in text:
+            w_str, _, s_str = text.partition("@")
+            try:
+                slots = int(s_str)
+            except ValueError:
+                raise ConfigError(
+                    f"device profile {text!r}: slots part {s_str!r} is not "
+                    f"an int (expected 'weight' or 'weight@slots')") from None
+        else:
+            w_str = text
+        try:
+            weight = float(w_str)
+        except ValueError:
+            raise ConfigError(
+                f"device profile {text!r}: weight part {w_str!r} is not a "
+                f"number (expected 'weight' or 'weight@slots')") from None
+        return cls(weight=weight, slots=slots)
+
+    @classmethod
+    def parse_list(cls, text: str) -> Tuple["DeviceProfile", ...]:
+        """Comma-separated profile list, e.g. ``'2@4,1@2,1@2,1@2'``."""
+        parts = [p for p in text.split(",") if p.strip()]
+        if not parts:
+            raise ConfigError(
+                f"device profile list {text!r} is empty (expected "
+                f"comma-separated 'weight' or 'weight@slots' entries)")
+        return tuple(cls.parse(p) for p in parts)
+
+    def to_cli(self) -> str:
+        w = f"{self.weight:g}"
+        return w if self.slots is None else f"{w}@{self.slots}"
+
+
+def _canonical_profiles(value) -> Optional[Tuple[DeviceProfile, ...]]:
+    """Normalize a device-profile list given as None / CLI string / sequence
+    of DeviceProfile | dict | number."""
+    if value is None:
+        return None
+    if isinstance(value, str):
+        return DeviceProfile.parse_list(value)
+    if isinstance(value, DeviceProfile):
+        raise ConfigError(
+            "device_profiles must be a sequence with one entry per device, "
+            "got a single DeviceProfile")
+    out = []
+    for p in value:
+        if isinstance(p, DeviceProfile):
+            out.append(p)
+        elif isinstance(p, Mapping):
+            out.append(DeviceProfile.from_dict(p))
+        elif isinstance(p, str):
+            out.append(DeviceProfile.parse(p))
+        elif isinstance(p, (int, float, np.integer, np.floating)):
+            out.append(DeviceProfile(weight=float(p)))
+        else:
+            raise ConfigError(
+                f"device profile entries must be DeviceProfile, dict, "
+                f"number, or 'weight[@slots]' string, got {p!r}")
+    if not out:
+        raise ConfigError("device_profiles must not be an empty sequence "
+                          "(use None for a homogeneous fleet)")
+    return tuple(out)
+
+
+def profile_weights(profiles) -> Optional[np.ndarray]:
+    """f64[G] mean-normalized compute weights, or None when the profile is
+    uniform (the homogeneous fast path stays bit-identical to no profile).
+    """
+    if not profiles:
+        return None
+    w = np.asarray([p.weight for p in profiles], np.float64)
+    if np.all(w == w[0]):
+        return None
+    return w / w.mean()
+
+
+def profile_slot_budgets(profiles, default_slots: Optional[int] = None
+                         ) -> Optional[np.ndarray]:
+    """int64[G] per-device expert-slot budgets, or None when no profile
+    constrains slots.  Devices whose profile leaves ``slots=None`` get
+    ``default_slots`` (callers pass the placement's uniform slot count);
+    without a default they inherit the largest specified budget."""
+    if not profiles or all(p.slots is None for p in profiles):
+        return None
+    fallback = (default_slots if default_slots is not None
+                else max(p.slots for p in profiles if p.slots is not None))
+    return np.asarray([p.slots if p.slots is not None else fallback
+                       for p in profiles], np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
 class SchedulePolicy:
     """Per-micro-batch scheduling policy (paper §5).
 
@@ -157,6 +298,7 @@ _LEGACY_KWARGS = {
     "sequencing": ("policy", "sequencing"),
     "solver_mode": ("policy", "solver_mode"),
     "pipeline_stages": (None, "pipeline_stages"),
+    "device_profiles": (None, "device_profiles"),
 }
 
 
@@ -179,6 +321,15 @@ class RuntimeConfig:
                       (DESIGN.md §2).  1 = the monolithic hot path;
                       values that do not divide the group size fall back
                       to the largest divisor below.
+    device_profiles — per-device :class:`DeviceProfile` tuple (one entry
+                      per flat device of the MicroEP group, row-major)
+                      for heterogeneous fleets: relative compute weights
+                      steer the weighted LP scheduler, slot budgets cap
+                      expert replicas per device (DESIGN.md §11).  None
+                      (default) = homogeneous group, bit-identical to the
+                      pre-profile scheduler.  Accepts the CLI string form
+                      (``'2@4,1@2'``), a sequence of numbers (weights), or
+                      dicts.
     """
 
     placement: PlacementSpec = PlacementSpec()
@@ -191,6 +342,7 @@ class RuntimeConfig:
     layout: str = "scan"
     seq_parallel: bool = False
     pipeline_stages: int = 1
+    device_profiles: Optional[Tuple[DeviceProfile, ...]] = None
 
     def __post_init__(self):
         if isinstance(self.placement, str):
@@ -217,6 +369,8 @@ class RuntimeConfig:
             raise ConfigError(
                 f"RuntimeConfig.pipeline_stages must be a positive int, "
                 f"got {self.pipeline_stages!r}")
+        object.__setattr__(self, "device_profiles",
+                           _canonical_profiles(self.device_profiles))
 
     # ------------------------------------------------------------- dtypes
     @property
@@ -230,6 +384,9 @@ class RuntimeConfig:
         d = dataclasses.asdict(self)
         d["placement"] = self.placement.to_dict()
         d["policy"] = self.policy.to_dict()
+        if self.device_profiles is not None:
+            d["device_profiles"] = [p.to_dict()
+                                    for p in self.device_profiles]
         return d
 
     @classmethod
@@ -299,6 +456,14 @@ class RuntimeConfig:
                        default=d.pipeline_stages,
                        help="destination chunks of the MoE dispatch "
                             "pipeline (1 = monolithic)")
+        g.add_argument("--device-profiles",
+                       default=(",".join(p.to_cli()
+                                         for p in d.device_profiles)
+                                if d.device_profiles else None),
+                       help="per-device 'weight[@slots]' list, comma-"
+                            "separated, one entry per MicroEP-group device "
+                            "(e.g. '2@4,1@2,1@2,1@2'); omit for a "
+                            "homogeneous fleet (DESIGN.md §11)")
 
     @classmethod
     def from_cli_args(cls, args: argparse.Namespace) -> "RuntimeConfig":
@@ -312,7 +477,8 @@ class RuntimeConfig:
             dtype=args.dtype, capacity_factor=args.capacity_factor,
             impl=args.impl, remat=args.remat, unroll=args.unroll,
             layout=args.layout, seq_parallel=args.seq_parallel,
-            pipeline_stages=args.pipeline_stages)
+            pipeline_stages=args.pipeline_stages,
+            device_profiles=args.device_profiles)
 
     def to_cli_args(self) -> list:
         """Flag list such that ``from_cli_args(parser.parse_args(...))``
@@ -335,6 +501,9 @@ class RuntimeConfig:
         ]
         if self.impl is not None:
             flags += ["--impl", self.impl]
+        if self.device_profiles is not None:
+            flags += ["--device-profiles",
+                      ",".join(p.to_cli() for p in self.device_profiles)]
         return flags
 
 

@@ -20,7 +20,8 @@ test enforces this.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+import inspect
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -30,13 +31,16 @@ from ..core.scheduler import MicroEPScheduler, Schedule, ScheduleStatics
 from ..core.solver_jax import SolverState
 from ..moe import dispatch as D
 from ..moe.layer import MoEFFNSpec
-from .config import ConfigError, PlacementSpec, RuntimeConfig, SchedulePolicy
+from .config import (ConfigError, DeviceProfile, PlacementSpec,
+                     RuntimeConfig, SchedulePolicy, _canonical_profiles,
+                     profile_slot_budgets, profile_weights)
 from .registry import placement_strategies
 
 __all__ = ["MicroEPEngine"]
 
 PlacementLike = Union[PlacementSpec, Placement, str, None]
 PolicyLike = Union[SchedulePolicy, str, None]
+ProfilesLike = Union[Sequence[DeviceProfile], str, None]
 
 
 class MicroEPEngine:
@@ -49,11 +53,15 @@ class MicroEPEngine:
     """
 
     def __init__(self, placement: Placement, policy: SchedulePolicy,
-                 statics: ScheduleStatics, scheduler: MicroEPScheduler):
+                 statics: ScheduleStatics, scheduler: MicroEPScheduler,
+                 device_profiles: Optional[Tuple[DeviceProfile, ...]] = None,
+                 slot_budgets: Optional[np.ndarray] = None):
         self.placement = placement
         self.policy = policy
         self.statics = statics
         self.scheduler = scheduler
+        self.device_profiles = device_profiles
+        self.slot_budgets = slot_budgets
         self._dispatch_cache: dict = {}
 
     # ------------------------------------------------------------- build
@@ -64,6 +72,7 @@ class MicroEPEngine:
         grid: Tuple[int, int],
         placement: PlacementLike = None,
         policy: PolicyLike = None,
+        device_profiles: ProfilesLike = None,
     ) -> "MicroEPEngine":
         """Assemble an engine for ``num_experts`` experts on a (rows, cols)
         device grid.
@@ -73,6 +82,14 @@ class MicroEPEngine:
         adaptive replacement manager), or None (spec default).  ``policy``
         may be a :class:`SchedulePolicy`, a mode name ('microep' |
         'vanilla'), or None (policy default).
+
+        ``device_profiles`` (DESIGN.md §11) describes a heterogeneous
+        group: one :class:`DeviceProfile` per flat device (row-major), or
+        the CLI string form (``'2@4,1@2,...'``).  Compute weights steer
+        the scheduler's weighted LP; slot budgets constrain (and are
+        validated against) the placement.  Uniform weights canonicalize
+        to the unweighted fast path, so passing all-equal profiles is
+        bit-identical to passing none.
         """
         rows, cols = grid
         if isinstance(policy, str):
@@ -83,6 +100,17 @@ class MicroEPEngine:
             raise ConfigError(
                 f"policy must be a SchedulePolicy or mode name, "
                 f"got {policy!r}")
+
+        profiles = _canonical_profiles(device_profiles)
+        if profiles is not None and len(profiles) != rows * cols:
+            raise ConfigError(
+                f"device_profiles has {len(profiles)} entries but the "
+                f"{rows}x{cols} grid has {rows * cols} devices (one "
+                f"profile per flat device, row-major)")
+        weights = profile_weights(profiles)
+        default_slots = (num_experts // cols) if cols and \
+            num_experts % cols == 0 else None
+        budgets = profile_slot_budgets(profiles, default_slots=default_slots)
 
         if isinstance(placement, Placement):
             table = placement
@@ -102,21 +130,46 @@ class MicroEPEngine:
                     f"placement must be a PlacementSpec, strategy name, or "
                     f"Placement, got {placement!r}")
             strategy = placement_strategies.get(placement.strategy)
-            table = strategy(rows, cols, num_experts,
-                             seed=placement.seed, loads=placement.loads)
+            kwargs = dict(seed=placement.seed, loads=placement.loads)
+            if budgets is not None or weights is not None:
+                # budget/weight-aware strategies take the extra kwargs
+                # (an explicit parameter or a **kwargs catch-all); others
+                # must still *fit* the budgets (validated below)
+                params = inspect.signature(strategy).parameters
+                var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                             for p in params.values())
+                if budgets is not None and ("slot_budgets" in params
+                                            or var_kw):
+                    kwargs["slot_budgets"] = budgets
+                if weights is not None and ("weights" in params or var_kw):
+                    kwargs["weights"] = weights
+            table = strategy(rows, cols, num_experts, **kwargs)
 
-        statics = ScheduleStatics.from_placement(table)
+        if budgets is not None:
+            used = table.slots_per_device()
+            over = np.nonzero(used > budgets)[0]
+            if len(over):
+                raise ConfigError(
+                    f"placement exceeds device slot budgets on flat "
+                    f"device(s) {over.tolist()}: uses "
+                    f"{used[over].tolist()} slots, budgets are "
+                    f"{budgets[over].tolist()} — use a budget-aware "
+                    f"strategy (e.g. 'asymmetric') or raise the budgets")
+
+        statics = ScheduleStatics.from_placement(table, weights=weights)
         scheduler = MicroEPScheduler(
             statics, sweeps=policy.sweeps, locality=policy.locality,
             mode=policy.mode, sequencing=policy.sequencing,
             solver_mode=policy.solver_mode)
-        return cls(table, policy, statics, scheduler)
+        return cls(table, policy, statics, scheduler,
+                   device_profiles=profiles, slot_budgets=budgets)
 
     @classmethod
     def from_config(cls, num_experts: int, grid: Tuple[int, int],
                     config: RuntimeConfig) -> "MicroEPEngine":
         return cls.build(num_experts, grid, placement=config.placement,
-                         policy=config.policy)
+                         policy=config.policy,
+                         device_profiles=config.device_profiles)
 
     # -------------------------------------------------------- geometry
     @property
@@ -134,6 +187,12 @@ class MicroEPEngine:
     @property
     def max_replicas(self) -> int:
         return self.statics.max_replicas
+
+    @property
+    def weights(self) -> Optional[np.ndarray]:
+        """f64[G] mean-normalized device compute weights, or None for a
+        homogeneous group (DESIGN.md §11)."""
+        return self.statics.weights
 
     # ------------------------------------------------------- scheduling
     def schedule(self, input_eg: jax.Array,

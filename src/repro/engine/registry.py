@@ -181,13 +181,18 @@ def _latin(rows: int, cols: int, num_experts: int, *, seed: int = 0,
 
 @register_placement_strategy("asymmetric")
 def _asymmetric(rows: int, cols: int, num_experts: int, *, seed: int = 0,
-                loads=None, num_samples: int = 64) -> Placement:
+                loads=None, num_samples: int = 64, slot_budgets=None,
+                weights=None) -> Placement:
     """Greedy replica counts + Monte-Carlo placement on real loads (§6.3).
-    ``num_samples`` (strategy-specific kwarg) sizes the Monte-Carlo search."""
+    ``num_samples`` (strategy-specific kwarg) sizes the Monte-Carlo search.
+    Budget/weight-aware (DESIGN.md §11): ``slot_budgets`` caps per-device
+    replica slots, ``weights`` scores candidates on weighted makespan —
+    the engine passes both automatically when device profiles are set."""
     if loads is None:
         raise RegistryError(
             "placement strategy 'asymmetric' needs per-expert loads "
             "(PlacementSpec(loads=...) or the loads= argument)")
     return asymmetric_placement(rows, cols, num_experts,
                                 np.asarray(loads, np.float64), seed=seed,
-                                num_samples=num_samples)
+                                num_samples=num_samples,
+                                slot_budgets=slot_budgets, weights=weights)

@@ -218,7 +218,9 @@ def _build_hooks(cfg: ArchConfig, mi: sh.MeshInfo,
                  placement: Optional[Placement], dtype) -> LayoutHooks:
     if placement is None:
         return LayoutHooks.cast_only(dtype)
-    table = jnp.asarray(placement.table, jnp.int32)   # [D, M, S]
+    # empty (budgeted) slots carry -1; clamp the gather — the dead slot
+    # holds a copy of expert 0 that no token is ever scheduled toward
+    table = jnp.maximum(jnp.asarray(placement.table, jnp.int32), 0)
     work_spec = mi.named(P("data", "model", None, None, None))
 
     def to_working(master):
@@ -288,11 +290,19 @@ def build_runtime(
     engine = moe_apply = None
     if cfg.moe:
         e_virt = cfg.num_experts * max(cfg.etp, 1)
+        if config.device_profiles is not None and \
+                len(config.device_profiles) != mi.data * mi.model:
+            raise ConfigError(
+                f"device_profiles has {len(config.device_profiles)} "
+                f"entries but the mesh's MicroEP group is "
+                f"{mi.data}x{mi.model} = {mi.data * mi.model} devices "
+                f"(one 'weight[@slots]' entry per flat device, row-major)")
         engine = MicroEPEngine.build(
             e_virt, (mi.data, mi.model),
             placement=(placement_table if placement_table is not None
                        else config.placement),
-            policy=config.policy)
+            policy=config.policy,
+            device_profiles=config.device_profiles)
         moe_apply = _build_moe_apply(cfg, mi, engine, config)
     rt = dec.Runtime(moe_apply=moe_apply,
                      shard=sh.act_constraint(

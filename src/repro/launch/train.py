@@ -87,6 +87,7 @@ def main(argv=None):
                                        with_expert_load=want_load))
         placement = dr.engine.placement if cfg.moe else None
     else:
+        dr = None
         master = dec.init_params(key, cfg, jnp.float32)
         ts = TrainState(master=master, opt=adamw_init(master),
                         solver=dec.init_solver_states(cfg, 1),
@@ -108,10 +109,15 @@ def main(argv=None):
     # the *predicted* next-step loads seeds the in-graph warm start
     planner = None
     if want_load and telemetry.prewarm:
+        # heterogeneous groups: the LP prewarm must solve the same
+        # weighted LP the in-graph scheduler descends (DESIGN.md §11)
+        eng = dr.engine if dr is not None else None
         planner = ReplacementPlanner(
             placement, predictor=predictor_from_config(telemetry),
             check_every=10 ** 9,        # plan never; forecast every step
-            horizon=telemetry.horizon, seed=args.seed)
+            horizon=telemetry.horizon, seed=args.seed,
+            weights=None if eng is None else eng.weights,
+            slot_budgets=None if eng is None else eng.slot_budgets)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
                        noise=0.05, n_maps=4, seed=args.seed + 1)

@@ -101,6 +101,20 @@ def build_statics(
     sched: ScheduleStatics, tokens_per_device: int, top_k: int,
     capacity_factor: float = 2.0, bm: int = 128,
 ) -> DispatchStatics:
+    """Derive the trace-time dispatch constants from the schedule statics.
+
+    Empty placement slots (budgeted placements, table entry -1) get
+    ``exp_of_dev_slot = -1`` and are masked out of every segment layout —
+    no row is ever scheduled toward them, so their recv segments are
+    always zero.
+
+    **Heterogeneous capacity** (DESIGN.md §11): SPMD requires one static
+    ``cap`` on every device, but under weighted scheduling the heaviest
+    device receives  w_max / w̄  times its uniform share.  With group
+    weights present the per-(src, dst) chunk capacity therefore scales to
+    cover the heaviest destination, ``cap = ceil(C_in · f · w_max / Σw)``
+    — which reduces bit-exactly to the uniform ``ceil(C_in · f / G)``
+    when weights are absent (uniform profiles canonicalize to None)."""
     p = sched.placement
     g, s = p.num_devices, p.slots
     flat = p.flat()
@@ -109,9 +123,16 @@ def build_statics(
     for gi in range(g):
         for si in range(s):
             e = int(flat[gi, si])
+            if e < 0:
+                continue                      # empty (budgeted) slot
             rep_of[gi, si] = int(np.nonzero(sched.dev[e] == gi)[0][0])
     c_in = tokens_per_device * top_k
-    cap = int(np.ceil(c_in * capacity_factor / max(g, 1)))
+    if sched.weights is None:
+        cap = int(np.ceil(c_in * capacity_factor / max(g, 1)))
+    else:
+        w = np.asarray(sched.weights, np.float64)
+        cap = int(np.ceil(c_in * capacity_factor * float(w.max())
+                          / max(float(w.sum()), 1e-30)))
     cap = max(cap, 8)
     return DispatchStatics(
         sched=sched, exp_of_dev_slot=exp_of, rep_of_dev_slot=rep_of,
@@ -242,8 +263,10 @@ def _sender_layout(
     row_local = routed & (dst_dev == my_index)
 
     # ---- chunk layouts (sender & receiver compute these identically) ----
-    # send_seg[d, s] = rows I send into segment (dst d, slot s)
-    send_seg = flow[exp_of, my_index, rep_of]             # [G, S]
+    # send_seg[d, s] = rows I send into segment (dst d, slot s); empty
+    # (budgeted) slots carry exp_of = -1 and contribute zero-size segments
+    send_seg = jnp.where(exp_of >= 0,
+                         flow[jnp.maximum(exp_of, 0), my_index, rep_of], 0)
     send_seg_start = jnp.cumsum(send_seg, axis=1) - send_seg
     chunk_off = send_seg_start[dst_dev, dst_slot] + seg_off_row
     overflowed = ~row_local & (chunk_off >= cap)
@@ -261,10 +284,12 @@ def _recv_segments(st: DispatchStatics, flow: jax.Array,
     """int32[G, S] rows arriving from each source device into each of my
     slots: recv_seg[g, s] = flow[exp_of[me, s], g, rep_of[me, s]].  The
     (src, dst) within-chunk layout both plans derive from this is the
-    contract the sender's `_sender_layout` fills against."""
-    exp_of = jnp.asarray(st.exp_of_dev_slot, jnp.int32)
-    rep_of = jnp.asarray(st.rep_of_dev_slot, jnp.int32)
-    return flow[exp_of[my_index], :, rep_of[my_index]].T
+    contract the sender's `_sender_layout` fills against.  Empty
+    (budgeted) slots have exp_of = -1 and receive nothing."""
+    exp_of = jnp.asarray(st.exp_of_dev_slot, jnp.int32)[my_index]   # [S]
+    rep_of = jnp.asarray(st.rep_of_dev_slot, jnp.int32)[my_index]
+    seg = flow[jnp.maximum(exp_of, 0), :, rep_of]                   # [S, G]
+    return jnp.where(exp_of[None, :] >= 0, seg.T, 0)
 
 
 def _chunk_row_slots(seg_start: jax.Array, seg: jax.Array, cap: int):

@@ -18,6 +18,12 @@ i's compute and chunk i+1's collective are independent in the dataflow
 graph — XLA's scheduler can overlap them.  The pipelined path is
 bit-identical to the monolithic one (rows keep their replica/segment
 assignment; the FFN is row-wise).
+
+Heterogeneous groups (DESIGN.md §11) need no layer-level branching: the
+scheduler inside the spec solves the weighted LP when its statics carry
+device weights, the dispatch statics derive a weight-aware capacity, and
+empty budgeted placement slots are masked at the plan level — both the
+monolithic and the chunked path inherit all three through the spec.
 """
 from __future__ import annotations
 
@@ -39,7 +45,9 @@ class MoEMetrics(NamedTuple):
     aux_loss: jax.Array
     z_loss: jax.Array
     max_load: jax.Array      # scheduled max device load (tokens)
-    balance: jax.Array       # max / mean device load
+    balance: jax.Array       # max / mean device load; on a heterogeneous
+                             # group (device profiles, DESIGN.md §11) the
+                             # max is over weight-normalized loads L_g/w_g
     overflow: jax.Array      # rows dropped to residual by capacity clipping
     expert_load: jax.Array   # f32[E] group-wide routed tokens per expert
                              # (feeds the serving replacement manager;

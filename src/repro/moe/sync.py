@@ -68,6 +68,8 @@ def build_sync_plan(placement: Placement) -> SyncPlan:
             g = i * cols + c
             for s in range(slots):
                 e = int(flat[g, s])
+                if e < 0:
+                    continue        # empty (budgeted) slot: nothing to sync
                 owner_col = e // k
                 canon_s = e % k
                 if owner_col == c:

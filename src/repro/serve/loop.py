@@ -167,9 +167,17 @@ class ServingSession:
                     1, 1, cfg.num_experts * max(cfg.etp, 1))
             bpe = 3 * cfg.d_model * max(cfg.moe_d_ff, 1) \
                 * jnp.dtype(self.dtype).itemsize
+            # heterogeneous groups: the regenerated placements must respect
+            # the same weights/budgets the runtime schedules under
+            weights = budgets = None
+            if self.dr is not None and self.dr.engine is not None:
+                weights = self.dr.engine.weights
+                budgets = self.dr.engine.slot_budgets
             self.replacement = ServeReplacement(placement, serve_cfg, bpe,
                                                 seed=seed,
-                                                telemetry=telemetry)
+                                                telemetry=telemetry,
+                                                weights=weights,
+                                                slot_budgets=budgets)
 
         # expert-load trace capture on the step clock (TELEMETRY.md)
         self.recorder: Optional[LoadTraceRecorder] = None

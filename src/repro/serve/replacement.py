@@ -49,9 +49,12 @@ class ServeReplacement:
 
     def __init__(self, placement: Placement, serve_cfg: ServeConfig,
                  bytes_per_expert: int, seed: int = 0,
-                 telemetry: Optional[TelemetryConfig] = None):
+                 telemetry: Optional[TelemetryConfig] = None,
+                 weights=None, slot_budgets=None):
         self.forecast = bool(telemetry is not None
                              and telemetry.forecast_replacement)
+        # heterogeneous groups (DESIGN.md §11): scores are weighted
+        # makespans and regenerated placements respect the slot budgets
         if self.forecast:
             from ..telemetry import (ReplacementPlanner,
                                      predictor_from_config)
@@ -60,13 +63,15 @@ class ServeReplacement:
                 predictor=predictor_from_config(telemetry),
                 check_every=serve_cfg.repl_check_every,
                 threshold=serve_cfg.repl_threshold,
-                horizon=telemetry.horizon, seed=seed)
+                horizon=telemetry.horizon, seed=seed,
+                weights=weights, slot_budgets=slot_budgets)
         else:
             self.manager = ReplacementManager(
                 placement,
                 ReplacementConfig(check_every=serve_cfg.repl_check_every,
                                   threshold=serve_cfg.repl_threshold,
-                                  seed=seed))
+                                  seed=seed),
+                weights=weights, slot_budgets=slot_budgets)
         self.bytes_per_expert = int(bytes_per_expert)
         self.migrated_bytes = 0
         self.events: List[dict] = []

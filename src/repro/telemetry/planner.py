@@ -28,18 +28,26 @@ from .predictors import LoadPredictor, make_predictor
 __all__ = ["ReplacementPlanner", "lp_balance_ratio", "prewarm_solver_states"]
 
 
-def lp_balance_ratio(placement: Placement, loads: np.ndarray) -> float:
+def lp_balance_ratio(placement: Placement, loads: np.ndarray,
+                     weights: Optional[np.ndarray] = None) -> float:
     """Schedulable balance of ``placement`` under ``loads``: the LPP-1
     optimal max device load divided by the ideal (total / devices).  1.0
     means the LP can spread the forecast perfectly; the replacement
-    threshold bounds how far above 1.0 we tolerate."""
+    threshold bounds how far above 1.0 we tolerate.
+
+    With per-device compute ``weights`` (heterogeneous groups, DESIGN.md
+    §11) this becomes weighted-makespan over weighted-ideal: the optimum
+    of max_g load_g / w_g divided by total / Σw."""
     loads = np.asarray(loads, np.float64).ravel()
     total = float(loads.sum())
     if total <= 0:
         return 1.0
     res = solve_lpp1(loads, replica_devices(placement),
-                     placement.num_devices)
-    return float(res.max_load) / (total / placement.num_devices)
+                     placement.num_devices, weights=weights)
+    if weights is None:
+        return float(res.max_load) / (total / placement.num_devices)
+    w = np.asarray(weights, np.float64).ravel()
+    return float(res.objective) / (total / float(w.sum()))
 
 
 class ReplacementPlanner:
@@ -56,11 +64,19 @@ class ReplacementPlanner:
                  check_every: int = 16, threshold: float = 1.15,
                  horizon: int = 1, min_history: int = 2,
                  mc_samples: int = 32, improve_margin: float = 0.0,
-                 history_cap: int = 512, seed: int = 0, **predictor_kwargs):
+                 history_cap: int = 512, seed: int = 0,
+                 weights: Optional[np.ndarray] = None,
+                 slot_budgets: Optional[np.ndarray] = None,
+                 **predictor_kwargs):
         if threshold < 1.0:
             raise ValueError(
                 f"threshold must be >= 1.0 (ratio to ideal), got {threshold}")
         self.placement = placement
+        # heterogeneous scoring + regeneration constraints (DESIGN.md §11)
+        self.weights = (None if weights is None
+                        else np.asarray(weights, np.float64).ravel())
+        self.slot_budgets = (None if slot_budgets is None
+                             else np.asarray(slot_budgets, np.int64).ravel())
         self.predictor = (predictor if isinstance(predictor, LoadPredictor)
                           else make_predictor(predictor, **predictor_kwargs))
         self.check_every = int(check_every)
@@ -108,7 +124,8 @@ class ReplacementPlanner:
         """One planning pass: forecast -> score -> maybe regenerate."""
         observed = self._history[-1]
         predicted = self.forecast()
-        score = lp_balance_ratio(self.placement, predicted)
+        score = lp_balance_ratio(self.placement, predicted,
+                                 weights=self.weights)
         decision = {
             "step": self.step,
             "observed": [round(float(v), 4) for v in observed],
@@ -122,8 +139,10 @@ class ReplacementPlanner:
             candidate = asymmetric_placement(
                 p.rows, p.cols, p.num_experts, predicted,
                 seed=int(self._rng.integers(2 ** 31)),
-                num_samples=self.mc_samples)
-            cand_score = lp_balance_ratio(candidate, predicted)
+                num_samples=self.mc_samples,
+                slot_budgets=self.slot_budgets, weights=self.weights)
+            cand_score = lp_balance_ratio(candidate, predicted,
+                                          weights=self.weights)
             decision["candidate_score"] = round(cand_score, 4)
             if cand_score + self.improve_margin < score:
                 self.placement = candidate
@@ -157,9 +176,11 @@ class ReplacementPlanner:
             import jax.numpy as jnp
             from ..core.solver_jax import solve_replica_loads_batched
             arr = np.asarray(loads, np.float32)
+            w = (None if self.weights is None
+                 else jnp.asarray(self.weights, jnp.float32))
             sol = solve_replica_loads_batched(
                 jnp.asarray(arr), jnp.asarray(dev, jnp.int32),
-                self.placement.num_devices, sweeps=24)
+                self.placement.num_devices, sweeps=24, weights=w)
             return np.asarray(sol.x, np.float32)
         if solver != "lp":
             raise ValueError(
@@ -171,11 +192,13 @@ class ReplacementPlanner:
             # in a single vectorized solve)
             flat = loads.reshape(-1, loads.shape[-1])
             xs = np.stack([
-                solve_lpp1(row, dev, self.placement.num_devices).x
+                solve_lpp1(row, dev, self.placement.num_devices,
+                           weights=self.weights).x
                 for row in flat])
             return xs.reshape(loads.shape[:-1] + xs.shape[1:]) \
                 .astype(np.float32)
-        res = solve_lpp1(loads.ravel(), dev, self.placement.num_devices)
+        res = solve_lpp1(loads.ravel(), dev, self.placement.num_devices,
+                         weights=self.weights)
         return res.x.astype(np.float32)
 
 
