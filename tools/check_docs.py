@@ -2,13 +2,20 @@
 """Docs-consistency checker: every doc citation in the source tree must
 resolve.
 
-Scans src/, benchmarks/, examples/, tests/ for citations of the form
-``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``, ``TELEMETRY.md``,
-``ROADMAP.md``, ``PAPER.md`` — optionally with a section number
-(``DESIGN.md §6``) — and fails if the cited file does not exist at the
-repo root or, for ``DESIGN.md §N``, if no Markdown heading containing
-``§N`` exists.  Run by CI (.github/workflows/ci.yml) and by
-tests/test_docs.py.
+Two checks, both run by CI (.github/workflows/ci.yml) and by
+tests/test_docs.py:
+
+  * **doc citations** — scans src/, benchmarks/, examples/, tests/ for
+    citations of the form ``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``,
+    ``TELEMETRY.md``, ``ROADMAP.md``, ``PAPER.md`` — optionally with a
+    section number (``DESIGN.md §6``) — and fails if the cited file does
+    not exist at the repo root or, for ``DESIGN.md §N``, if no Markdown
+    heading containing ``§N`` exists.
+  * **benchmark citations** — every ``python -m benchmarks.run NAME`` /
+    ``python -m benchmarks.bench_X`` usage in the root Markdown docs and
+    in source docstrings must resolve against the bench registry
+    (``register_bench("NAME", ...)`` lines in benchmarks/*.py) /
+    an existing ``benchmarks/bench_X.py`` module.
 
   python tools/check_docs.py
 """
@@ -23,6 +30,9 @@ SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
 CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|TELEMETRY|ROADMAP|PAPER)\.md"
                   r"(?:\s*§\s*(\d+))?")
 HEADING_SECTION = re.compile(r"^#+\s.*§\s*(\d+)\b")
+BENCH_REG = re.compile(r"register_bench\(\s*[\"']([\w-]+)[\"']")
+RUN_CITE = re.compile(r"-m\s+benchmarks\.run\b((?:\s+[A-Za-z0-9_-]+)*)")
+MOD_CITE = re.compile(r"-m\s+benchmarks\.(bench_\w+)")
 
 
 def doc_sections(path: pathlib.Path) -> set:
@@ -33,6 +43,55 @@ def doc_sections(path: pathlib.Path) -> set:
         if m:
             nums.add(int(m.group(1)))
     return nums
+
+
+def bench_registry(root: pathlib.Path = ROOT) -> set:
+    """Benchmark names registered via ``register_bench("name", ...)``."""
+    names = set()
+    bdir = root / "benchmarks"
+    if bdir.exists():
+        for py in sorted(bdir.glob("*.py")):
+            names |= set(BENCH_REG.findall(py.read_text(encoding="utf-8")))
+    return names
+
+
+def check_bench_citations(root: pathlib.Path = ROOT) -> list:
+    """Every benchmark cited in docs/docstrings must exist.
+
+    ``-m benchmarks.run NAME...`` name tokens must select at least one
+    registered benchmark (the registry uses substring matching, so a
+    token resolves iff it is a substring of some registered name);
+    ``-m benchmarks.bench_X`` must be an existing module.
+    """
+    names = bench_registry(root)
+    errors = []
+    files = sorted(root.glob("*.md"))
+    for d in SCAN_DIRS:
+        if d == "tools":
+            continue        # this checker documents the citation pattern
+        base = root / d
+        if base.exists():
+            files += sorted(base.rglob("*.py"))
+    for path in files:
+        rel = path.relative_to(root)
+        for ln, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            for m in MOD_CITE.finditer(line):
+                mod = m.group(1)
+                if not (root / "benchmarks" / f"{mod}.py").exists():
+                    errors.append(
+                        f"{rel}:{ln}: cites benchmarks/{mod}.py, which "
+                        f"does not exist")
+            for m in RUN_CITE.finditer(line):
+                for tok in m.group(1).split():
+                    if tok.startswith("-"):
+                        break                  # flags end the name list
+                    if not any(tok in n for n in names):
+                        errors.append(
+                            f"{rel}:{ln}: '-m benchmarks.run {tok}' "
+                            f"matches no registered benchmark "
+                            f"(registry: {', '.join(sorted(names))})")
+    return errors
 
 
 def check(root: pathlib.Path = ROOT) -> list:
@@ -59,7 +118,7 @@ def check(root: pathlib.Path = ROOT) -> list:
                             f"{rel}:{ln}: cites {name}.md §{sec}, but "
                             f"{name}.md has no heading for §{sec} "
                             f"(found: {sorted(sections[name])})")
-    return errors
+    return errors + check_bench_citations(root)
 
 
 def main() -> int:
