@@ -6,8 +6,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.placement import latin_placement, asymmetric_placement
+from repro.core.placement import (asymmetric_placement, count_moved_slots,
+                                  latin_placement)
 from repro.moe.sync import build_sync_plan, sync_traffic_bytes
+from repro.replication import replica_histogram
 
 from .common import (ICI_BW, emit, make_main, register_bench)
 
@@ -35,10 +37,17 @@ def run(seed: int = 0):
         t_per_layer = per_dev / ICI_BW
         # optimizer states (f32 master + 2 moments) ride along: x6 bytes
         t_total = t_per_layer * cfg.num_layers * 6
+        # incremental cost of the p0 -> p1 switch: only changed, non-empty
+        # slots re-fetch params (the replication gate's signal, DESIGN.md
+        # §12) — vs. the full-resync bytes modeled above
+        moved = count_moved_slots(p0, p1)
         emit("fig10_migration", model=name,
              bytes_per_expert_mb=round(bytes_per_expert / 2**20, 1),
              per_device_per_layer_mb=round(per_dev / 2**20, 1),
-             modeled_total_ms=round(t_total * 1e3, 1))
+             modeled_total_ms=round(t_total * 1e3, 1),
+             moved_slots=moved,
+             migration_mb=round(moved * bytes_per_expert / 2**20, 1),
+             replica_hist=replica_histogram(p1))
         rows_out.append((name, t_total))
     # paper observation: total migration in the "hundreds of ms" regime
     assert all(0.001 < t < 30 for _, t in rows_out), rows_out

@@ -1,0 +1,149 @@
+"""Replication benchmark: dynamic replica-topology planning vs. a static
+topology on drifting regime-shift traces (DESIGN.md §12).
+
+Workload: the drifting Zipf process of bench_forecast — popularity is
+stable between regime shifts but the expert->rank assignment jumps every
+``drift_every`` steps.  A *static* replica topology (planned once for the
+long-run mean, never migrated) can only be right on average; the
+LPLB/EPLB-style dynamic planner (``repro.replication``) re-plans where
+replicas live from forecast loads, so hot experts regain replicas after
+every shift — paying migration bytes only when the forecast improvement
+beats the migration-cost gate.
+
+Per policy and seed the simulation scores the *current* topology on the
+*actual* loads with the exact LPP-1 oracle every step (same measure as
+bench_forecast), and accounts migration traffic as changed, non-empty
+slots × bytes_per_expert (the gate's own cost signal).  Asserted over the
+seed aggregate (the ISSUE 6 acceptance bar):
+
+  * dynamic mean balance <= static mean balance;
+  * every fired migration's cost obeys the gate — the balance improvement
+    it bought exceeds its migration penalty.
+
+  PYTHONPATH=src python -m benchmarks.bench_replication
+  PYTHONPATH=src python -m benchmarks.bench_replication --smoke --out r.json
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.replication import (TopologyController, replica_histogram,
+                               replicated_placement)
+from repro.telemetry import lp_balance_ratio
+
+from .bench_forecast import drifting_loads
+from .common import emit, make_main, register_bench
+
+ROWS, COLS, EXPERTS = 2, 4, 16
+CHECK_EVERY = 4
+WINDOW = 4
+THRESHOLD = 1.3
+GATE = 0.05
+BYTES_PER_EXPERT = 1 << 20          # nominal 1 MiB expert (fixed model)
+
+
+def simulate(loads: np.ndarray, controller=None, placement=None) -> dict:
+    """Score the (static or controller-driven) topology on the actual
+    loads each step; drive the controller's observe when given one."""
+    ratios = []
+    for row in loads:
+        p = controller.placement if controller is not None else placement
+        ratios.append(lp_balance_ratio(p, row))
+        if controller is not None:
+            controller.observe(row)
+    out = {"mean_balance": round(float(np.mean(ratios)), 4),
+           "p99_balance": round(float(np.percentile(ratios, 99)), 4),
+           "migrations": (controller.replacements
+                          if controller is not None else 0),
+           "moved_slots": (controller.moved_slots
+                           if controller is not None else 0),
+           "migration_bytes": (controller.migrated_bytes
+                               if controller is not None else 0)}
+    final = controller.placement if controller is not None else placement
+    out["replica_hist"] = replica_histogram(final)
+    return out
+
+
+def _aggregate(per_seed: list) -> dict:
+    return {"mean_balance": round(float(np.mean(
+                [r["mean_balance"] for r in per_seed])), 4),
+            "p99_balance": round(float(np.max(
+                [r["p99_balance"] for r in per_seed])), 4),
+            "migrations": int(sum(r["migrations"] for r in per_seed)),
+            "migration_bytes": int(sum(r["migration_bytes"]
+                                       for r in per_seed))}
+
+
+def _check_gate(controller: TopologyController) -> None:
+    """Every fired migration must have bought more balance than its
+    migration penalty — the improvement-minus-migration-cost gate."""
+    for d in controller.decisions:
+        if not d["fired"]:
+            continue
+        assert d["candidate_score"] + d["penalty"] < d["score"] + 1e-9, d
+        assert d["migration_bytes"] == \
+            d["moved_slots"] * controller.bytes_per_expert, d
+
+
+def run(steps: int = 192, out: str = None, seed: int = 0,
+        n_seeds: int = 3, smoke: bool = False) -> dict:
+    if smoke:
+        steps = min(steps, 96)      # the conventional CI short run
+    static_runs, dynamic_runs = [], []
+    for s in range(seed, seed + n_seeds):
+        w = drifting_loads(steps, EXPERTS, seed=s)
+        # static: planned once for the long-run mean (uniform across the
+        # regime permutations), never migrated
+        p0 = replicated_placement(ROWS, COLS, EXPERTS)
+        static_runs.append(simulate(w, placement=p0))
+        ctl = TopologyController(
+            p0, BYTES_PER_EXPERT, migration_gate=GATE,
+            predictor="window", window=WINDOW, check_every=CHECK_EVERY,
+            threshold=THRESHOLD, min_history=4, seed=s)
+        dynamic_runs.append(simulate(w, controller=ctl))
+        _check_gate(ctl)
+        emit("replication_seed", seed=s,
+             static_balance=static_runs[-1]["mean_balance"],
+             dynamic_balance=dynamic_runs[-1]["mean_balance"],
+             migrations=dynamic_runs[-1]["migrations"],
+             migration_mb=round(
+                 dynamic_runs[-1]["migration_bytes"] / 2 ** 20, 1),
+             replica_hist=dynamic_runs[-1]["replica_hist"])
+    static = _aggregate(static_runs)
+    dynamic = _aggregate(dynamic_runs)
+    emit("replication", policy="static", seeds=n_seeds,
+         mean_balance=static["mean_balance"],
+         p99_balance=static["p99_balance"], migrations=0, migration_mb=0.0)
+    emit("replication", policy="dynamic", seeds=n_seeds,
+         mean_balance=dynamic["mean_balance"],
+         p99_balance=dynamic["p99_balance"],
+         migrations=dynamic["migrations"],
+         migration_mb=round(dynamic["migration_bytes"] / 2 ** 20, 1))
+
+    # the acceptance bar (ISSUE 6): re-planning the topology must not lose
+    # on balance, and may only pay migration bytes the gate approved
+    assert dynamic["mean_balance"] <= static["mean_balance"] + 1e-9, \
+        (dynamic, static)
+
+    results = {"steps": steps, "experts": EXPERTS, "devices": ROWS * COLS,
+               "check_every": CHECK_EVERY, "threshold": THRESHOLD,
+               "migration_gate": GATE,
+               "bytes_per_expert": BYTES_PER_EXPERT, "seeds": n_seeds,
+               "static": static, "dynamic": dynamic,
+               "per_seed": {"static": static_runs,
+                            "dynamic": dynamic_runs}}
+    payload = json.dumps(results, indent=1)
+    if out:
+        with open(out, "w") as f:
+            f.write(payload)
+    else:
+        print(payload)
+    return results
+
+
+main = make_main(register_bench("replication", run))
+
+if __name__ == "__main__":
+    raise SystemExit(main())

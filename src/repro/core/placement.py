@@ -40,6 +40,8 @@ __all__ = [
     "random_placement",
     "latin_placement",
     "asymmetric_placement",
+    "greedy_replica_counts",
+    "count_moved_slots",
     "max_induced_density",
     "replica_matrix",
 ]
@@ -170,6 +172,79 @@ def latin_placement(rows: int, cols: int, num_experts: int) -> Placement:
     return Placement(table, num_experts)
 
 
+def greedy_replica_counts(
+    loads: np.ndarray,
+    total_slots: int,
+    max_per_expert: int,
+) -> np.ndarray:
+    """int64[E] replica counts by water-filling replicas onto load (§6.3
+    step 1, also the replica-count planner of DESIGN.md §12).
+
+    Start with one replica per expert; repeatedly grant a replica to the
+    expert with maximum load-per-replica, capped at ``max_per_expert``
+    (a device hosts an expert at most once).  Exactly ``total_slots``
+    replicas are allocated.
+    """
+    loads = np.asarray(loads, dtype=np.float64).ravel()
+    num_experts = len(loads)
+    if total_slots < num_experts:
+        raise ValueError(
+            f"not enough replica slots for one replica per expert "
+            f"({total_slots} slots < {num_experts} experts)")
+    if total_slots > num_experts * max_per_expert:
+        raise ValueError(
+            f"{total_slots} replica slots cannot be filled: at most "
+            f"{max_per_expert} replicas per expert x {num_experts} experts")
+    counts = np.ones(num_experts, dtype=np.int64)
+    import heapq
+
+    heap = [(-loads[e] / 1.0, e) for e in range(num_experts)]
+    heapq.heapify(heap)
+    remaining = total_slots - num_experts
+    while remaining > 0 and heap:
+        _, e = heapq.heappop(heap)
+        counts[e] += 1
+        remaining -= 1
+        if counts[e] < max_per_expert:
+            heapq.heappush(heap, (-loads[e] / counts[e], e))
+    if remaining > 0:
+        # everyone is capped; spread leftovers round-robin over experts
+        order = np.argsort(-loads)
+        i = 0
+        while remaining > 0:
+            e = order[i % num_experts]
+            if counts[e] < max_per_expert:
+                counts[e] += 1
+                remaining -= 1
+            i += 1
+    return counts
+
+
+def count_moved_slots(old: "Placement", new: "Placement") -> int:
+    """Expert-parameter fetches a migration ``old`` -> ``new`` needs.
+
+    Per device: the number of occupied slots in ``new`` hosting an expert
+    the device did *not* already host in ``old``.  Empty slots (table
+    entry -1) never count, replicas that stay on their device are free
+    regardless of local slot index, and tables with differing
+    ``slots_per_device`` (budgeted asymmetric placements, DESIGN.md §11)
+    diff correctly — the comparison is per-device set membership, not
+    positional.  This is the migration cost signal of the replica-topology
+    gate (DESIGN.md §12).
+    """
+    if old.num_devices != new.num_devices:
+        raise ValueError(
+            f"placements span different groups: {old.num_devices} vs "
+            f"{new.num_devices} devices")
+    of, nf = old.flat(), new.flat()
+    moved = 0
+    for g in range(new.num_devices):
+        old_set = set(of[g][of[g] >= 0].tolist())
+        moved += sum(1 for e in nf[g][nf[g] >= 0].tolist()
+                     if e not in old_set)
+    return moved
+
+
 def asymmetric_placement(
     rows: int,
     cols: int,
@@ -213,32 +288,9 @@ def asymmetric_placement(
         total_slots = int(slot_budgets.sum())
     else:
         total_slots = rows * cols * k
-    if total_slots < num_experts:
-        raise ValueError("not enough replica slots for one replica per expert")
 
     # -- Step 1: greedy replica counts (capped at one replica per device) ---
-    counts = np.ones(num_experts, dtype=np.int64)
-    import heapq
-
-    heap = [(-loads[e] / 1.0, e) for e in range(num_experts)]
-    heapq.heapify(heap)
-    remaining = total_slots - num_experts
-    while remaining > 0 and heap:
-        _, e = heapq.heappop(heap)
-        counts[e] += 1
-        remaining -= 1
-        if counts[e] < num_devices:  # a device hosts an expert at most once
-            heapq.heappush(heap, (-loads[e] / counts[e], e))
-    if remaining > 0:
-        # everyone is capped; spread leftovers round-robin over experts
-        order = np.argsort(-loads)
-        i = 0
-        while remaining > 0:
-            e = order[i % num_experts]
-            if counts[e] < num_devices:
-                counts[e] += 1
-                remaining -= 1
-            i += 1
+    counts = greedy_replica_counts(loads, total_slots, num_devices)
 
     # -- Step 2: Monte-Carlo slot assignment (collision-free greedy) -------
     rng = np.random.default_rng(seed)
@@ -254,7 +306,13 @@ def asymmetric_placement(
         if m < best_m:
             best_m, best_tbl = m, tbl
     if best_tbl is None:
-        raise RuntimeError("could not construct a collision-free placement")
+        raise RuntimeError(
+            f"could not construct a collision-free placement in "
+            f"{num_samples} samples: {num_experts} experts with replica "
+            f"counts summing to {total_slots} do not pack into the "
+            f"per-device slot budgets "
+            f"{'(uniform ' + str(k) + ')' if slot_budgets is None else np.asarray(slot_budgets).tolist()}"
+            f" — raise the budgets or num_samples")
     return Placement(best_tbl, num_experts)
 
 

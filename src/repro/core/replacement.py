@@ -20,6 +20,7 @@ import numpy as np
 from .placement import (
     Placement,
     asymmetric_placement,
+    count_moved_slots,
     max_induced_density,
 )
 
@@ -63,6 +64,8 @@ class ReplacementManager:
         self.step = 0
         self.replacements = 0
         self.migrated_bytes = 0
+        self.moved_slots = 0            # changed, non-empty slots (total)
+        self.last_moved_slots = 0       # ... of the most recent switch
         self.last_decision: Optional[dict] = None
         self._rng = np.random.default_rng(cfg.seed)
 
@@ -105,11 +108,18 @@ class ReplacementManager:
             seed=int(self._rng.integers(2**31)), num_samples=self.cfg.mc_samples,
             slot_budgets=self.slot_budgets, weights=self.weights,
         )
+        self.last_moved_slots = count_moved_slots(p, self.placement)
+        self.moved_slots += self.last_moved_slots
         self.replacements += 1
         return True
 
     def migration_bytes(self, bytes_per_expert: int) -> int:
-        """Upper bound on redistribute traffic for one placement switch:
-        every replica slot re-fetches its (possibly new) expert parameters."""
-        p = self.placement
-        return p.num_devices * p.slots * bytes_per_expert
+        """Redistribute traffic of the most recent placement switch,
+        counting only *changed, non-empty* slots between the old and new
+        tables (``core.placement.count_moved_slots``): a replica that
+        stays on its device is free, empty ``-1`` slots of budgeted
+        asymmetric tables are never expert moves, and tables with
+        differing ``slots_per_device`` diff correctly.  0 before the
+        first switch.  This is the cost signal the replica-topology
+        migration gate prices against (DESIGN.md §12)."""
+        return self.last_moved_slots * bytes_per_expert

@@ -31,8 +31,9 @@ from .registry import (
     get_baseline_system,
 )
 from .config import (ConfigError, DeviceProfile, PlacementSpec,
-                     RuntimeConfig, SchedulePolicy, ServeConfig,
-                     TelemetryConfig, profile_slot_budgets, profile_weights)
+                     ReplicationConfig, RuntimeConfig, SchedulePolicy,
+                     ServeConfig, TelemetryConfig, profile_slot_budgets,
+                     profile_weights)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -41,6 +42,6 @@ __all__ = [
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
     "ConfigError", "DeviceProfile", "PlacementSpec", "SchedulePolicy",
-    "RuntimeConfig", "ServeConfig", "TelemetryConfig", "MicroEPEngine",
-    "profile_weights", "profile_slot_budgets",
+    "ReplicationConfig", "RuntimeConfig", "ServeConfig", "TelemetryConfig",
+    "MicroEPEngine", "profile_weights", "profile_slot_budgets",
 ]

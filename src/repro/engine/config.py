@@ -27,7 +27,7 @@ import numpy as np
 
 __all__ = ["ConfigError", "DeviceProfile", "PlacementSpec", "SchedulePolicy",
            "RuntimeConfig", "ServeConfig", "TelemetryConfig",
-           "profile_weights", "profile_slot_budgets"]
+           "ReplicationConfig", "profile_weights", "profile_slot_budgets"]
 
 
 class ConfigError(ValueError):
@@ -715,6 +715,111 @@ class TelemetryConfig:
         if self.trace_path is not None:
             flags += ["--trace-out", self.trace_path]
         return flags
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Dynamic replica-topology planning configuration (DESIGN.md §12).
+
+    enabled        — plan replica topologies from forecast loads with the
+                     ``repro.replication`` controller (LPLB/EPLB-style):
+                     hot experts gain replicas, redundant replicas land on
+                     underloaded devices.  False (default) keeps the
+                     static topology — schedules stay bit-identical to
+                     the replication-free path.
+    check_every    — steps between topology evaluations.
+    threshold      — forecast LPP-1 balance (max/ideal) that opens a
+                     migration check; below it the topology is kept.
+    migration_gate — migration-cost price in balance-score units per
+                     full-table move: a candidate topology pays
+                     ``migration_gate * moved_slots / total_slots`` on
+                     top of its forecast score, so it must buy more
+                     balance than its parameter traffic costs.  0 = free
+                     migrations (pure balance chasing).
+    improve_margin — extra balance improvement a candidate must clear
+                     beyond the gate before a migration fires.
+    mc_samples     — Monte-Carlo samples for the same-shape 'regenerate'
+                     candidate scored alongside the planned topology.
+    """
+
+    enabled: bool = False
+    check_every: int = 32
+    threshold: float = 1.15
+    migration_gate: float = 0.05
+    improve_margin: float = 0.0
+    mc_samples: int = 16
+
+    def __post_init__(self):
+        for name in ("check_every", "mc_samples"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ConfigError(
+                    f"ReplicationConfig.{name} must be a positive int, "
+                    f"got {v!r}")
+        if not self.threshold >= 1.0:
+            raise ConfigError(
+                f"ReplicationConfig.threshold must be >= 1.0 (ratio of "
+                f"forecast max to ideal load), got {self.threshold!r}")
+        if not self.migration_gate >= 0:
+            raise ConfigError(
+                f"ReplicationConfig.migration_gate must be >= 0 (score "
+                f"penalty per full-table move), got {self.migration_gate!r}")
+        if not self.improve_margin >= 0:
+            raise ConfigError(
+                f"ReplicationConfig.improve_margin must be >= 0, "
+                f"got {self.improve_margin!r}")
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ReplicationConfig":
+        return cls(**_known_fields(cls, d))
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "ReplicationConfig" = None) -> None:
+        d = defaults if defaults is not None else ReplicationConfig()
+        b = argparse.BooleanOptionalAction
+        g = parser.add_argument_group("replication")
+        g.add_argument("--replication", action=b, default=d.enabled,
+                       help="dynamic replica-topology planning from "
+                            "forecast loads (DESIGN.md §12)")
+        g.add_argument("--replication-check-every", type=int,
+                       default=d.check_every)
+        g.add_argument("--replication-threshold", type=float,
+                       default=d.threshold)
+        g.add_argument("--migration-gate", type=float,
+                       default=d.migration_gate,
+                       help="migration-cost price in balance-score units "
+                            "per full-table move (0 = free migrations)")
+        g.add_argument("--replication-margin", type=float,
+                       default=d.improve_margin)
+        g.add_argument("--replication-mc-samples", type=int,
+                       default=d.mc_samples)
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "ReplicationConfig":
+        return cls(enabled=args.replication,
+                   check_every=args.replication_check_every,
+                   threshold=args.replication_threshold,
+                   migration_gate=args.migration_gate,
+                   improve_margin=args.replication_margin,
+                   mc_samples=args.replication_mc_samples)
+
+    def to_cli_args(self) -> list:
+        """Flag list such that ``from_cli_args(parser.parse_args(...))``
+        reproduces this config."""
+        return [
+            "--replication" if self.enabled else "--no-replication",
+            "--replication-check-every", str(self.check_every),
+            "--replication-threshold", str(self.threshold),
+            "--migration-gate", str(self.migration_gate),
+            "--replication-margin", str(self.improve_margin),
+            "--replication-mc-samples", str(self.mc_samples),
+        ]
 
 
 def _known_fields(cls, d: Mapping[str, Any]) -> dict:

@@ -29,7 +29,8 @@ import argparse
 import json
 
 from ..configs import get_config
-from ..engine import RuntimeConfig, ServeConfig, TelemetryConfig
+from ..engine import (ReplicationConfig, RuntimeConfig, ServeConfig,
+                      TelemetryConfig)
 from ..serve import (ServingSession, load_trace, poisson_trace, replay_trace,
                      trace_requests)
 from .mesh import make_local_mesh
@@ -65,10 +66,12 @@ def main(argv=None):
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     ServeConfig.add_cli_args(ap)
     TelemetryConfig.add_cli_args(ap)
+    ReplicationConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     serve_cfg = ServeConfig.from_cli_args(args)
     telemetry = TelemetryConfig.from_cli_args(args)
+    replication = ReplicationConfig.from_cli_args(args)
     if telemetry.forecast_replacement and not serve_cfg.replacement:
         ap.error("--forecast-replacement selects the trigger policy of the "
                  "replacement hook; enable the hook with --replacement")
@@ -110,7 +113,9 @@ def main(argv=None):
             if args.data_axis > 0 else None)
     sess = ServingSession(cfg, serve_cfg, run_cfg=run_cfg, mesh=mesh,
                           seed=args.seed,
-                          telemetry=telemetry if telemetry.enabled else None)
+                          telemetry=telemetry if telemetry.enabled else None,
+                          replication=(replication if replication.enabled
+                                       else None))
     report = sess.run(requests)
     print(f"arch={cfg.name} slots={serve_cfg.max_batch} "
           f"max_seq={serve_cfg.max_seq} "

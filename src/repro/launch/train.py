@@ -24,10 +24,11 @@ import numpy as np
 from ..checkpoint import save_checkpoint
 from ..configs import get_config
 from ..data.synthetic import SyntheticLM
-from ..engine import RuntimeConfig, TelemetryConfig
+from ..engine import ReplicationConfig, RuntimeConfig, TelemetryConfig
 from ..models import decoder as dec
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..optim.schedule import warmup_cosine
+from ..replication import TopologyController
 from ..telemetry import (LoadTraceRecorder, ReplacementPlanner,
                          predictor_from_config, prewarm_solver_states)
 from ..train.loop import TrainState, make_train_step
@@ -58,9 +59,11 @@ def main(argv=None):
     RuntimeConfig.add_cli_args(
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     TelemetryConfig.add_cli_args(ap)
+    ReplicationConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     telemetry = TelemetryConfig.from_cli_args(args)
+    replication = ReplicationConfig.from_cli_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -68,7 +71,8 @@ def main(argv=None):
     # telemetry needs the per-step expert-load vector out of the compiled
     # step (TELEMETRY.md); dense configs have nothing to record
     want_load = cfg.moe and (telemetry.record or telemetry.prewarm
-                             or telemetry.trace_path is not None)
+                             or telemetry.trace_path is not None
+                             or replication.enabled)
 
     opt_cfg = AdamWConfig(lr=args.lr)
     lr_fn = lambda s: warmup_cosine(s, args.lr, warmup=20, total=args.steps)
@@ -118,6 +122,26 @@ def main(argv=None):
             horizon=telemetry.horizon, seed=args.seed,
             weights=None if eng is None else eng.weights,
             slot_budgets=None if eng is None else eng.slot_budgets)
+    # dynamic replica-topology planning (DESIGN.md §12): re-plan where
+    # replicas live from forecast loads, migrate through the same
+    # runtime-rebuild path a serving migration uses; without a mesh the
+    # controller runs in shadow mode (planned, counted, nothing to move)
+    controller = None
+    if want_load and replication.enabled:
+        eng = dr.engine if dr is not None else None
+        bpe = 3 * cfg.d_model * max(cfg.moe_d_ff, 1) * \
+            jnp.dtype(dr.dtype if dr is not None else jnp.float32).itemsize
+        controller = TopologyController(
+            placement, bpe,
+            migration_gate=replication.migration_gate,
+            predictor=predictor_from_config(telemetry),
+            check_every=replication.check_every,
+            threshold=replication.threshold,
+            improve_margin=replication.improve_margin,
+            mc_samples=replication.mc_samples,
+            horizon=telemetry.horizon, seed=args.seed,
+            weights=None if eng is None else eng.weights,
+            slot_budgets=None if eng is None else eng.slot_budgets)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
                        noise=0.05, n_maps=4, seed=args.seed + 1)
@@ -128,6 +152,21 @@ def main(argv=None):
             eload = np.asarray(m.pop("expert_load"), np.float64)
             if recorder is not None:
                 recorder.record(i, eload)
+            if controller is not None:
+                new_table = controller.observe(eload)
+                if new_table is not None and dr is not None:
+                    # topology migration: rebuild the runtime around the
+                    # new table (PR 2 machinery — same path as a serving
+                    # migration; the re-jit suspension is the cost)
+                    dr = R.build_runtime(cfg, mesh, run_cfg,
+                                         placement_table=new_table)
+                    step = jax.jit(R.make_train_fn(
+                        dr, n_micro=args.n_micro, opt_cfg=opt_cfg,
+                        with_expert_load=want_load))
+                    ts = ts._replace(solver=dr.init_solver())
+                    placement = dr.engine.placement
+                    if planner is not None:
+                        planner.placement = placement
             if planner is not None:
                 planner.observe(eload)
                 if planner.history_size >= planner.min_history:
@@ -137,6 +176,10 @@ def main(argv=None):
                         planner.warm_start_x(solver="jacobi")))
         logger.log(i, m)
     logger.close()
+    if controller is not None and controller.replacements:
+        print(f"replication: {controller.replacements} topology migrations, "
+              f"{controller.moved_slots} slots moved "
+              f"({controller.migrated_bytes} B)")
     if recorder is not None and telemetry.trace_path:
         recorder.save(telemetry.trace_path)
         print(f"recorded {len(recorder)}-step load trace -> "

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..engine import RuntimeConfig, ServeConfig, TelemetryConfig
+from ..engine import (ReplicationConfig, RuntimeConfig, ServeConfig,
+                      TelemetryConfig)
 from ..models import decoder as dec
 from ..telemetry import LoadTraceRecorder
 from .batching import BatchManager
@@ -130,10 +131,12 @@ class ServingSession:
     def __init__(self, cfg: ArchConfig, serve_cfg: ServeConfig,
                  run_cfg: Optional[RuntimeConfig] = None,
                  mesh=None, seed: int = 0,
-                 telemetry: Optional[TelemetryConfig] = None):
+                 telemetry: Optional[TelemetryConfig] = None,
+                 replication: Optional[ReplicationConfig] = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.telemetry = telemetry
+        self.replication = replication
         self.run_cfg = run_cfg if run_cfg is not None else RuntimeConfig(
             dtype="float32", impl="ref", remat=False)
         self.mesh = mesh
@@ -157,7 +160,9 @@ class ServingSession:
             self.dtype = jnp.float32
 
         self.replacement: Optional[ServeReplacement] = None
-        if serve_cfg.replacement and cfg.moe:
+        want_repl = serve_cfg.replacement or (
+            replication is not None and replication.enabled)
+        if want_repl and cfg.moe:
             placement = (self.dr.engine.placement if self.dr is not None
                          else None)
             if placement is None:
@@ -177,7 +182,8 @@ class ServingSession:
                                                 seed=seed,
                                                 telemetry=telemetry,
                                                 weights=weights,
-                                                slot_budgets=budgets)
+                                                slot_budgets=budgets,
+                                                replication=replication)
 
         # expert-load trace capture on the step clock (TELEMETRY.md)
         self.recorder: Optional[LoadTraceRecorder] = None

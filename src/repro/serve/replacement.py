@@ -38,24 +38,48 @@ import numpy as np
 
 from ..core.placement import Placement
 from ..core.replacement import ReplacementConfig, ReplacementManager
-from ..engine import ServeConfig, TelemetryConfig
+from ..engine import ReplicationConfig, ServeConfig, TelemetryConfig
 from ..moe.sync import build_sync_plan, sync_traffic_bytes
 
 __all__ = ["ServeReplacement"]
 
 
 class ServeReplacement:
-    """Predicted-balance-triggered placement migration for the serve loop."""
+    """Predicted-balance-triggered placement migration for the serve loop.
+
+    Three trigger policies: reactive (default), forecast
+    (``TelemetryConfig.forecast_replacement``), and replica-*topology*
+    planning (``ReplicationConfig.enabled``, DESIGN.md §12) — the last
+    migrates to a re-planned replica set (hot experts gain replicas) when
+    the forecast improvement beats the migration-cost gate, and accounts
+    traffic as changed slots × bytes_per_expert instead of a full resync.
+    """
 
     def __init__(self, placement: Placement, serve_cfg: ServeConfig,
                  bytes_per_expert: int, seed: int = 0,
                  telemetry: Optional[TelemetryConfig] = None,
-                 weights=None, slot_budgets=None):
-        self.forecast = bool(telemetry is not None
-                             and telemetry.forecast_replacement)
+                 weights=None, slot_budgets=None,
+                 replication: Optional[ReplicationConfig] = None):
+        self.topology = bool(replication is not None and replication.enabled)
+        self.forecast = self.topology or bool(
+            telemetry is not None and telemetry.forecast_replacement)
         # heterogeneous groups (DESIGN.md §11): scores are weighted
         # makespans and regenerated placements respect the slot budgets
-        if self.forecast:
+        if self.topology:
+            from ..replication import TopologyController
+            from ..telemetry import predictor_from_config
+            self.manager = TopologyController(
+                placement, bytes_per_expert,
+                migration_gate=replication.migration_gate,
+                predictor=(predictor_from_config(telemetry)
+                           if telemetry is not None else "window"),
+                check_every=replication.check_every,
+                threshold=replication.threshold,
+                improve_margin=replication.improve_margin,
+                mc_samples=replication.mc_samples,
+                horizon=(telemetry.horizon if telemetry is not None else 1),
+                seed=seed, weights=weights, slot_budgets=slot_budgets)
+        elif self.forecast:
             from ..telemetry import (ReplacementPlanner,
                                      predictor_from_config)
             self.manager = ReplacementPlanner(
@@ -114,7 +138,14 @@ class ServeReplacement:
             self.events.append(decision)
         if not fired:
             return None
-        # exact per-device ppermute traffic of one canonical->working pass
-        self.migrated_bytes += sync_traffic_bytes(
-            build_sync_plan(new), self.bytes_per_expert)
+        if self.topology and decision is not None and \
+                "migration_bytes" in decision:
+            # topology migrations price exactly the changed, non-empty
+            # slots (the gate's own cost signal, DESIGN.md §12)
+            self.migrated_bytes += int(decision["migration_bytes"])
+        else:
+            # exact per-device ppermute traffic of one full
+            # canonical->working pass
+            self.migrated_bytes += sync_traffic_bytes(
+                build_sync_plan(new), self.bytes_per_expert)
         return new

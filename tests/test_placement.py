@@ -188,3 +188,41 @@ def test_adaptive_replacement_triggers_on_drift():
     m_old = max_induced_density(p0, skew, num_samples=64, rng=rng)
     assert m_new <= m_old + 1e-9
     assert mgr.migration_bytes(1000) > 0
+
+
+# ------------------------------------- budgeted asymmetric edge cases (§11)
+
+def test_budget_exactly_replica_demand():
+    """Total budget == num_experts: exactly one replica each, every
+    device filled to its budget."""
+    budgets = np.asarray([2, 2, 2, 2, 2, 2, 2, 2])
+    loads = np.arange(1, 17, dtype=np.float64)
+    p = asymmetric_placement(2, 4, 16, loads, seed=0, num_samples=32,
+                             slot_budgets=budgets)
+    assert (p.replica_count() == 1).all()
+    assert (p.slots_per_device() == budgets).all()
+    assert set(np.unique(p.flat())) - {-1} == set(range(16))
+
+
+def test_budget_single_slot_device():
+    budgets = np.asarray([1, 3, 3, 3, 3, 3, 3, 3])
+    loads = np.random.default_rng(0).zipf(1.4, size=16).astype(np.float64)
+    p = asymmetric_placement(2, 4, 16, loads, seed=0, num_samples=64,
+                             slot_budgets=budgets)
+    assert p.slots_per_device()[0] == 1
+    assert (p.slots_per_device() <= budgets).all()
+    assert (p.replica_count() >= 1).all()
+    # the single-slot device hosts exactly one real expert
+    assert (p.flat()[0] >= 0).sum() == 1
+
+
+def test_budget_infeasible_raises_clear_error():
+    # sum(budgets) = 8 < 16 experts: no table can host every expert
+    with pytest.raises(ValueError, match="not enough replica slots"):
+        asymmetric_placement(2, 4, 16, np.ones(16), seed=0,
+                             slot_budgets=np.ones(8, np.int64))
+    # budgets exceeding one-replica-per-device capacity are also rejected
+    # (total slots cannot all be filled under the distinct-device rule)
+    with pytest.raises(ValueError, match="cannot be filled"):
+        asymmetric_placement(1, 2, 2, np.ones(2), seed=0,
+                             slot_budgets=np.asarray([3, 3]))

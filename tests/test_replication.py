@@ -1,0 +1,382 @@
+"""repro.replication: replica-topology planning, the migration controller,
+engine wiring, and the migration-byte accounting it prices against
+(DESIGN.md §12)."""
+import numpy as np
+import pytest
+
+from repro.core.placement import (Placement, asymmetric_placement,
+                                  count_moved_slots, greedy_replica_counts,
+                                  latin_placement)
+from repro.core.replacement import ReplacementConfig, ReplacementManager
+from repro.engine import (ConfigError, DeviceProfile, MicroEPEngine,
+                          PlacementSpec, ReplicationConfig, ServeConfig,
+                          placement_strategies)
+from repro.replication import (TopologyController, plan_topology,
+                               replica_histogram, replicated_placement)
+from repro.serve.replacement import ServeReplacement
+
+
+def _valid_topology(p: Placement):
+    flat = p.flat()
+    # every expert placed at least once; a device hosts an expert at most
+    # once (replicas live on distinct devices); -1 marks empty slots only
+    assert set(np.unique(flat)) - {-1} == set(range(p.num_experts))
+    for g in range(p.num_devices):
+        occ = flat[g][flat[g] >= 0]
+        assert len(set(occ.tolist())) == len(occ)
+
+
+# ------------------------------------------------- replica-count water-fill
+
+
+def test_greedy_counts_waterfill_follows_load():
+    loads = np.ones(8)
+    loads[2] = 100.0
+    counts = greedy_replica_counts(loads, 16, 8)
+    assert counts.sum() == 16
+    assert (counts >= 1).all()
+    assert counts[2] == counts.max()
+    # the hot expert soaks up most of the extra replicas
+    assert counts[2] >= 6
+
+
+def test_greedy_counts_uniform_spreads_evenly():
+    counts = greedy_replica_counts(np.ones(8), 16, 8)
+    assert (counts == 2).all()
+
+
+def test_greedy_counts_infeasible_raises():
+    with pytest.raises(ValueError, match="not enough replica slots"):
+        greedy_replica_counts(np.ones(8), 7, 4)
+    with pytest.raises(ValueError, match="cannot be filled"):
+        greedy_replica_counts(np.ones(4), 9, 2)
+
+
+# --------------------------------------------------------- move accounting
+
+
+def test_count_moved_slots_identity_and_shuffle_free():
+    p = latin_placement(2, 4, 16)
+    assert count_moved_slots(p, p) == 0
+    # permuting slots within each device is free (set membership, not
+    # positional diff)
+    tbl = p.table.copy()
+    tbl = tbl[:, :, ::-1].copy()
+    assert count_moved_slots(p, Placement(tbl, 16)) == 0
+
+
+def test_count_moved_slots_counts_new_hosts_only():
+    # 2 devices, 2 slots: device 0 keeps expert 0, gains 3; device 1
+    # keeps 2, gains 1
+    old = Placement(np.array([[[0, 1]], [[2, 3]]], np.int32), 4)
+    new = Placement(np.array([[[0, 3]], [[2, 1]]], np.int32), 4)
+    assert count_moved_slots(old, new) == 2
+
+
+def test_count_moved_slots_ignores_empty_and_diffs_axes():
+    # differing slots_per_device: old has 2 uniform slots, new is budgeted
+    # with 3/1 and two empty slots — the -1 entries never count as moves
+    old = Placement(np.array([[[0, 1]], [[2, 3]]], np.int32), 4)
+    new = Placement(np.array([[[0, 1, 2]], [[3, -1, -1]]], np.int32), 4)
+    # old -> new: dev0 {0,1} -> {0,1,2} fetches expert 2; dev1 {2,3} ->
+    # {3} fetches nothing (shrinking is free)
+    assert count_moved_slots(old, new) == 1
+    # new -> old: dev1 {3} -> {2,3} re-fetches expert 2
+    assert count_moved_slots(new, old) == 1
+
+
+def test_count_moved_slots_device_mismatch_raises():
+    with pytest.raises(ValueError, match="different groups"):
+        count_moved_slots(latin_placement(2, 4, 16),
+                          latin_placement(2, 2, 16))
+
+
+# ------------------------------------------------------- topology planning
+
+
+def test_plan_topology_grows_hot_expert_replicas():
+    p0 = latin_placement(2, 4, 16)
+    loads = np.ones(16)
+    loads[3] = 40.0
+    p1 = plan_topology(p0, loads)
+    _valid_topology(p1)
+    rc = p1.replica_count()
+    assert rc[3] == rc.max()
+    assert rc[3] > p0.replica_count()[3]
+    # total slots preserved (budgets default to the incumbent's)
+    assert p1.slots_per_device().sum() == p0.slots_per_device().sum()
+
+
+def test_plan_topology_zero_move_when_counts_already_match():
+    """When the incumbent already hosts the target replica counts, the
+    planner keeps every replica in place — zero migration bytes."""
+    p0 = latin_placement(2, 4, 16)        # 2 replicas each, 32 slots
+    p1 = plan_topology(p0, np.ones(16))   # uniform -> counts all 2
+    assert count_moved_slots(p0, p1) == 0
+
+
+def test_plan_topology_converges_to_zero_move_fixed_point():
+    """Replanning under stationary loads reaches a fixed topology within
+    a couple of rounds (the drop/recycle pass can shift a replica once);
+    after that, replans are zero-move — the migration gate then sees a
+    free candidate identical to the incumbent."""
+    for seed in range(4):
+        p = latin_placement(2, 4, 16)
+        loads = np.random.default_rng(seed).zipf(1.3, size=16) \
+            .astype(np.float64)
+        moves = []
+        for _ in range(3):
+            q = plan_topology(p, loads)
+            moves.append(count_moved_slots(p, q))
+            p = q
+        assert moves[-1] == 0, (seed, moves)
+
+
+def test_plan_topology_respects_budgets_and_single_slot_device():
+    budgets = np.asarray([6, 4, 4, 4, 4, 4, 4, 1])
+    loads = np.random.default_rng(1).zipf(1.4, size=16).astype(np.float64)
+    p1 = plan_topology(latin_placement(2, 4, 16), loads,
+                       slot_budgets=budgets)
+    _valid_topology(p1)
+    assert (p1.slots_per_device() <= budgets).all()
+    assert p1.slots_per_device()[-1] == 1
+
+
+def test_plan_topology_weighted_packs_strong_devices():
+    # one device 8x the compute: the redundant replicas should gravitate
+    # toward it (lowest weight-normalized projected load)
+    w = np.asarray([8.0] + [1.0] * 7)
+    loads = np.ones(16)
+    p1 = plan_topology(latin_placement(2, 4, 16), loads, weights=w,
+                       slot_budgets=np.full(8, 4))
+    _valid_topology(p1)
+
+
+def test_plan_topology_load_shape_validated():
+    with pytest.raises(ValueError, match="one entry per expert"):
+        plan_topology(latin_placement(2, 4, 16), np.ones(8))
+
+
+def test_replicated_placement_uniform_and_histogram():
+    p = replicated_placement(2, 4, 16)
+    _valid_topology(p)
+    assert (p.replica_count() == 2).all()
+    assert replica_histogram(p) == "2x16"
+    assert "," not in replica_histogram(p)    # BENCH-line safe
+
+
+def test_replicated_placement_budgeted():
+    budgets = [4, 4, 2, 2, 2, 2, 2, 2]
+    loads = np.ones(16)
+    loads[:2] = 50.0
+    p = replicated_placement(2, 4, 16, loads, slot_budgets=budgets)
+    _valid_topology(p)
+    assert (p.slots_per_device() <= np.asarray(budgets)).all()
+    rc = p.replica_count()
+    assert rc[0] > 1 and rc[1] > 1
+
+
+# ------------------------------------------------------------- controller
+
+
+def _shifting_loads(t, e=16):
+    l = np.ones(e)
+    l[(t // 16) % e] = 30.0
+    return l
+
+
+def test_controller_fires_and_prices_migrations():
+    p0 = latin_placement(2, 4, 16)
+    ctl = TopologyController(p0, bytes_per_expert=1000, migration_gate=0.05,
+                             predictor="window", window=4, check_every=4,
+                             threshold=1.1, min_history=2, seed=0)
+    fired = [ctl.observe(_shifting_loads(t)) is not None for t in range(48)]
+    assert any(fired)
+    assert ctl.replacements == sum(fired)
+    assert ctl.moved_slots > 0
+    assert ctl.migrated_bytes == ctl.moved_slots * 1000
+    d = next(d for d in ctl.decisions if d["fired"])
+    assert {"candidate", "candidates", "candidate_score", "moved_slots",
+            "migration_bytes", "penalty"} <= set(d)
+    # the gate inequality held on every fired decision
+    for d in ctl.decisions:
+        if d["fired"]:
+            assert d["candidate_score"] + d["penalty"] < d["score"] + 1e-9
+    # topology changed to give the hot expert more replicas at some point
+    assert ctl.placement.replica_count().max() > 2 or \
+        ctl.placement.slots_per_device().sum() == 32
+
+
+def test_controller_huge_gate_blocks_all_migrations():
+    p0 = latin_placement(2, 4, 16)
+    ctl = TopologyController(p0, bytes_per_expert=1000,
+                             migration_gate=1e9, predictor="window",
+                             window=4, check_every=4, threshold=1.1,
+                             min_history=2, seed=0)
+    for t in range(48):
+        assert ctl.observe(_shifting_loads(t)) is None
+    assert ctl.replacements == 0 and ctl.migrated_bytes == 0
+    # it still *checked* (decisions recorded, candidates priced out)
+    assert any("candidate" in d for d in ctl.decisions)
+
+
+def test_controller_validates_gate():
+    with pytest.raises(ValueError, match="migration_gate"):
+        TopologyController(latin_placement(2, 4, 16), 1000,
+                           migration_gate=-0.1)
+
+
+def test_controller_respects_budgets():
+    budgets = np.asarray([6, 2, 4, 4, 2, 2, 6, 6])
+    loads0 = np.random.default_rng(2).zipf(1.4, size=16).astype(np.float64)
+    p0 = asymmetric_placement(2, 4, 16, loads0, seed=1, num_samples=16,
+                              slot_budgets=budgets)
+    ctl = TopologyController(p0, bytes_per_expert=1000, migration_gate=0.02,
+                             predictor="last", check_every=4, threshold=1.05,
+                             min_history=1, mc_samples=8, seed=3,
+                             slot_budgets=budgets)
+    for t in range(32):
+        ctl.observe(_shifting_loads(t))
+    assert (ctl.placement.slots_per_device() <= budgets).all()
+    assert (ctl.placement.replica_count() >= 1).all()
+
+
+def test_controller_survives_surplus_budgets():
+    """Budgets exceeding E*G distinct replicas (surplus HBM capacity)
+    must not crash the check: asymmetric_placement treats budgets as
+    demands and cannot fill the surplus, so the regenerate candidate is
+    skipped and the topology candidate still plans (trailing slots stay
+    empty)."""
+    budgets = np.full(8, 6)                 # 48 slots for E*G = 4*8 = 32
+    p0 = replicated_placement(2, 4, 4)      # tight start: 2 replicas each
+    ctl = TopologyController(p0, bytes_per_expert=1000, migration_gate=0.0,
+                             predictor="last", check_every=2, threshold=1.0,
+                             min_history=1, seed=0, slot_budgets=budgets)
+    for t in range(8):
+        ctl.observe(np.asarray([40.0, 1.0, 1.0, 1.0]) if t >= 4
+                    else np.ones(4))
+    checked = [d for d in ctl.decisions if "candidates" in d]
+    assert checked                          # the gate actually ran
+    assert all(len(d["candidates"]) == 1 for d in checked)   # topology only
+    assert (ctl.placement.slots_per_device() <= budgets).all()
+
+
+# ----------------------------------------------------------- engine wiring
+
+
+def test_replicated_strategy_registered_and_builds():
+    assert "replicated" in placement_strategies
+    eng = MicroEPEngine.build(16, (2, 4),
+                              placement=PlacementSpec("replicated"))
+    _valid_topology(eng.placement)
+    assert (eng.placement.replica_count() == 2).all()
+
+
+def test_replicated_strategy_with_profiles_and_loads():
+    loads = tuple([10.0] * 2 + [1.0] * 14)
+    eng = MicroEPEngine.build(
+        16, (2, 4), placement=PlacementSpec("replicated", loads=loads),
+        device_profiles=tuple([DeviceProfile(2.0, 4)] * 2 +
+                              [DeviceProfile(1.0, 2)] * 6))
+    _valid_topology(eng.placement)
+    assert (eng.placement.slots_per_device() <=
+            np.asarray([4, 4, 2, 2, 2, 2, 2, 2])).all()
+    rc = eng.placement.replica_count()
+    assert rc[0] > 1 and rc[1] > 1
+
+
+def test_replication_config_roundtrips():
+    rc = ReplicationConfig(enabled=True, check_every=8, threshold=1.2,
+                           migration_gate=0.1, improve_margin=0.01,
+                           mc_samples=4)
+    assert ReplicationConfig.from_dict(rc.to_dict()) == rc
+    import argparse
+    ap = argparse.ArgumentParser()
+    ReplicationConfig.add_cli_args(ap)
+    assert ReplicationConfig.from_cli_args(
+        ap.parse_args(rc.to_cli_args())) == rc
+    # defaults round-trip too (disabled path)
+    d = ReplicationConfig()
+    assert not d.enabled
+    assert ReplicationConfig.from_cli_args(ap.parse_args(
+        d.to_cli_args())) == d
+
+
+@pytest.mark.parametrize("bad", [
+    dict(check_every=0), dict(threshold=0.9), dict(migration_gate=-1.0),
+    dict(improve_margin=-0.5), dict(mc_samples=0)])
+def test_replication_config_validates(bad):
+    with pytest.raises(ConfigError):
+        ReplicationConfig(**bad)
+
+
+def test_replication_config_unknown_field():
+    with pytest.raises(ConfigError, match="unknown"):
+        ReplicationConfig.from_dict({"enabled": True, "nope": 1})
+
+
+# ---------------------------------------------------------- serve threading
+
+
+def test_serve_replacement_topology_policy():
+    p0 = latin_placement(2, 4, 16)
+    hook = ServeReplacement(
+        p0, ServeConfig(), bytes_per_expert=1000, seed=0,
+        replication=ReplicationConfig(enabled=True, check_every=4,
+                                      threshold=1.1, migration_gate=0.02))
+    assert isinstance(hook.manager, TopologyController)
+    migrated = 0
+    for t in range(48):
+        new = hook.observe(_shifting_loads(t), step=t)
+        if new is not None:
+            migrated += 1
+            _valid_topology(new)
+    assert migrated > 0 and hook.migrations == migrated
+    # traffic accounted as the gate's own cost signal: changed slots x bpe
+    assert hook.migrated_bytes == sum(
+        d["migration_bytes"] for d in hook.manager.decisions if d["fired"])
+    assert hook.migration_events and \
+        all(e["fired"] for e in hook.migration_events)
+
+
+def test_serve_replacement_disabled_replication_keeps_reactive_manager():
+    # replication off -> the PR 5 path, manager type unchanged
+    p0 = latin_placement(2, 4, 16)
+    hook = ServeReplacement(p0, ServeConfig(), bytes_per_expert=1000,
+                            replication=ReplicationConfig(enabled=False))
+    assert isinstance(hook.manager, ReplacementManager)
+    hook_none = ServeReplacement(p0, ServeConfig(), bytes_per_expert=1000)
+    assert isinstance(hook_none.manager, ReplacementManager)
+
+
+# ----------------------------------------------- migration-byte accounting
+
+
+def test_migration_bytes_counts_only_changed_slots():
+    rng = np.random.default_rng(5)
+    p0 = latin_placement(2, 4, 16)
+    mgr = ReplacementManager(
+        p0, ReplacementConfig(check_every=4, threshold=1.05, seed=7))
+    assert mgr.migration_bytes(1000) == 0      # before any switch
+    fired = False
+    for step in range(32):
+        skew = np.zeros(16)
+        skew[(step // 8) % 16] = 1000.0
+        skew += rng.uniform(0, 5, size=16)
+        fired |= mgr.observe(skew)
+    assert fired
+    # bytes = changed slots of the most recent switch x bpe, and the
+    # changed-slot count is bounded by the table size (not the full resync)
+    assert mgr.migration_bytes(1000) == mgr.last_moved_slots * 1000
+    assert 0 < mgr.last_moved_slots <= \
+        int(mgr.placement.slots_per_device().sum())
+    assert mgr.moved_slots >= mgr.last_moved_slots
+
+
+def test_migration_bytes_zero_for_identical_regeneration():
+    # a regeneration that lands on the same hosting sets costs nothing
+    p = latin_placement(2, 4, 16)
+    mgr = ReplacementManager(p)
+    mgr.placement = Placement(p.table[:, :, ::-1].copy(), 16)
+    mgr.last_moved_slots = count_moved_slots(p, mgr.placement)
+    assert mgr.migration_bytes(10**6) == 0
