@@ -30,7 +30,7 @@ from .registry import (
     get_placement_strategy,
     get_baseline_system,
 )
-from .config import (ConfigError, DeviceProfile, PlacementSpec,
+from .config import (ConfigError, DeviceProfile, DisaggConfig, PlacementSpec,
                      ReplicationConfig, RuntimeConfig, SchedulePolicy,
                      ServeConfig, TelemetryConfig, profile_slot_budgets,
                      profile_weights)
@@ -41,7 +41,8 @@ __all__ = [
     "placement_strategies", "baseline_systems",
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
-    "ConfigError", "DeviceProfile", "PlacementSpec", "SchedulePolicy",
+    "ConfigError", "DeviceProfile", "DisaggConfig", "PlacementSpec",
+    "SchedulePolicy",
     "ReplicationConfig", "RuntimeConfig", "ServeConfig", "TelemetryConfig",
     "MicroEPEngine", "profile_weights", "profile_slot_budgets",
 ]

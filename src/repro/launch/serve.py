@@ -13,6 +13,13 @@ report).
       --smoke --traffic poisson --requests 16 --rate 0.5 --replacement
   PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
       --traffic replay --trace trace.json
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-gpt-32x1.3b \
+      --smoke --traffic replay --disagg --prefill-slots 4 --decode-slots 2
+
+Disaggregation flags (``--disagg``, ``--prefill-slots``,
+``--decode-slots``, ``--handoff-depth``, ``--prefill-profiles``,
+``--decode-profiles`` — DESIGN.md §13) split the session into a prefill
+fleet and a decode fleet joined by a bounded KV-handoff buffer.
 
 Engine flags (``--placement``, ``--mode``, ``--sweeps``, ``--dtype``,
 ``--capacity-factor``, ...), serving flags (``--max-batch``, ``--max-seq``,
@@ -29,8 +36,8 @@ import argparse
 import json
 
 from ..configs import get_config
-from ..engine import (ReplicationConfig, RuntimeConfig, ServeConfig,
-                      TelemetryConfig)
+from ..engine import (DisaggConfig, ReplicationConfig, RuntimeConfig,
+                      ServeConfig, TelemetryConfig)
 from ..serve import (ServingSession, load_trace, poisson_trace, replay_trace,
                      trace_requests)
 from .mesh import make_local_mesh
@@ -67,11 +74,13 @@ def main(argv=None):
     ServeConfig.add_cli_args(ap)
     TelemetryConfig.add_cli_args(ap)
     ReplicationConfig.add_cli_args(ap)
+    DisaggConfig.add_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     serve_cfg = ServeConfig.from_cli_args(args)
     telemetry = TelemetryConfig.from_cli_args(args)
     replication = ReplicationConfig.from_cli_args(args)
+    disagg = DisaggConfig.from_cli_args(args)
     if telemetry.forecast_replacement and not serve_cfg.replacement:
         ap.error("--forecast-replacement selects the trigger policy of the "
                  "replacement hook; enable the hook with --replacement")
@@ -115,11 +124,18 @@ def main(argv=None):
                           seed=args.seed,
                           telemetry=telemetry if telemetry.enabled else None,
                           replication=(replication if replication.enabled
-                                       else None))
+                                       else None),
+                          disagg=disagg if disagg.enabled else None)
     report = sess.run(requests)
-    print(f"arch={cfg.name} slots={serve_cfg.max_batch} "
-          f"max_seq={serve_cfg.max_seq} "
-          f"kv_budget={serve_cfg.budget_tokens} traffic={args.traffic}")
+    if disagg.enabled:
+        print(f"arch={cfg.name} disagg: prefill={disagg.prefill_slots} "
+              f"decode={disagg.decode_slots} "
+              f"handoff_depth={disagg.handoff_depth} "
+              f"max_seq={serve_cfg.max_seq} traffic={args.traffic}")
+    else:
+        print(f"arch={cfg.name} slots={serve_cfg.max_batch} "
+              f"max_seq={serve_cfg.max_seq} "
+              f"kv_budget={serve_cfg.budget_tokens} traffic={args.traffic}")
     print(report.summary())
     if sess.recorder is not None and telemetry.trace_path:
         print(f"recorded {len(sess.recorder)}-step load trace -> "

@@ -46,6 +46,7 @@ from .layers.rwkv6 import (RWKVState, init_rwkv6, init_rwkv6_channel,
 __all__ = ["Runtime", "Metrics", "init_params", "forward", "lm_loss",
            "loss_fn", "init_decode_state", "decode_step", "expand_router_etp",
            "local_moe_apply", "param_dtypes", "reset_decode_slots",
+           "extract_decode_slot", "insert_decode_slot", "decode_slot_bytes",
            "n_moe_layers"]
 
 
@@ -807,3 +808,89 @@ def reset_decode_slots(state: dict, mask: jax.Array) -> dict:
             out[key] = jax.tree_util.tree_map(
                 functools.partial(clear, axis), state[key])
     return out
+
+
+# The per-slot cache axes of a per-slot decode state: "scan" leaves are
+# stacked [reps, B, ...], "rem"/"list" leaves are [B, ...].  Shared with
+# reset_decode_slots; extract/insert below carry one slot's slice across
+# states of *different* batch widths (the prefill->decode KV handoff of
+# SERVING.md / DESIGN.md §13).
+_SLOT_AXES = (("scan", 1), ("rem", 0), ("list", 0))
+
+
+def extract_decode_slot(state: dict, slot: int) -> dict:
+    """Slice one slot's per-sequence caches out of a per-slot decode state.
+
+    Returns the KV-handoff payload of a completed prefill: the slot's
+    position counter plus, for every cache leaf that carries a slot axis,
+    the slot's slice (slot axis removed).  Leaves without a slot axis
+    (scalar lengths, shared statics) pass through unchanged and are
+    ignored by :func:`insert_decode_slot`.  The "solver" warm start is a
+    property of a fleet's expert-load stream, not of any one sequence,
+    and is excluded."""
+    if getattr(state["pos"], "ndim", 0) != 1:
+        raise ValueError("extract_decode_slot needs per-slot positions; "
+                         "build the state with init_decode_state(..., "
+                         "per_slot=True)")
+    b = state["pos"].shape[0]
+
+    def take(axis, leaf):
+        if getattr(leaf, "ndim", 0) <= axis or leaf.shape[axis] != b:
+            return leaf
+        return jnp.take(leaf, slot, axis=axis)
+
+    out: dict = {"pos": state["pos"][slot]}
+    for key, axis in _SLOT_AXES:
+        if key in state:
+            out[key] = jax.tree_util.tree_map(
+                functools.partial(take, axis), state[key])
+    return out
+
+
+def insert_decode_slot(state: dict, payload: dict, slot: int) -> dict:
+    """Write a KV-handoff payload (from :func:`extract_decode_slot`, on a
+    state of any batch width but the same ``max_seq``) into ``slot`` of a
+    per-slot decode state — the receive side of the prefill->decode
+    boundary.  Returns the new state; the "solver" entry (if any) is the
+    receiving fleet's and is kept untouched."""
+    if getattr(state["pos"], "ndim", 0) != 1:
+        raise ValueError("insert_decode_slot needs per-slot positions; "
+                         "build the state with init_decode_state(..., "
+                         "per_slot=True)")
+    b = state["pos"].shape[0]
+
+    def put(axis, leaf, pl):
+        if getattr(leaf, "ndim", 0) <= axis or leaf.shape[axis] != b:
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[axis] = slot
+        return leaf.at[tuple(idx)].set(jnp.asarray(pl, leaf.dtype))
+
+    out = dict(state)
+    out["pos"] = state["pos"].at[slot].set(
+        jnp.asarray(payload["pos"], state["pos"].dtype))
+    for key, axis in _SLOT_AXES:
+        if key in state:
+            out[key] = jax.tree_util.tree_map(
+                functools.partial(put, axis), state[key], payload[key])
+    return out
+
+
+def decode_slot_bytes(state: dict) -> int:
+    """Bytes one slot's KV-handoff payload occupies (the staged-transfer
+    size a :class:`repro.serve.HandoffBuffer` entry accounts): per-slot
+    cache bytes / batch width, position counter included."""
+    if getattr(state["pos"], "ndim", 0) != 1:
+        raise ValueError("decode_slot_bytes needs per-slot positions")
+    b = state["pos"].shape[0]
+    total = state["pos"].dtype.itemsize
+
+    def add(axis, leaf):
+        nonlocal total
+        if getattr(leaf, "ndim", 0) > axis and leaf.shape[axis] == b:
+            total += leaf.nbytes // b
+
+    for key, axis in _SLOT_AXES:
+        if key in state:
+            jax.tree_util.tree_map(functools.partial(add, axis), state[key])
+    return int(total)

@@ -8,6 +8,11 @@ the MicroEP scheduler re-solving on the live batch's expert loads every
 step and an optional adaptive-replacement migration hook (replacement.py,
 paper §6.4 — reactive, or forecast-driven via TELEMETRY.md).
 
+Disaggregated serving (``repro.engine.DisaggConfig``, DESIGN.md §13)
+splits the same loop into a prefill fleet and a decode fleet joined by a
+bounded KV :class:`HandoffBuffer`; disabled, the co-located path is
+bit-identical (golden-pinned in tests/test_serve.py).
+
 Quickstart::
 
     from repro.configs import get_config
@@ -22,7 +27,7 @@ Quickstart::
 CLI: ``python -m repro.launch.serve --arch qwen1_5-0.5b --smoke
 --traffic poisson``.
 """
-from .batching import ActiveSeq, BatchManager
+from .batching import ActiveSeq, BatchManager, HandoffBuffer, HandoffItem
 from .loop import ServeReport, ServingSession
 from .replacement import ServeReplacement
 from .request import Request, RequestRecord
@@ -30,7 +35,7 @@ from .traffic import (LoadReplay, load_trace, poisson_trace, replay_trace,
                       trace_requests, trace_source)
 
 __all__ = [
-    "ActiveSeq", "BatchManager",
+    "ActiveSeq", "BatchManager", "HandoffBuffer", "HandoffItem",
     "ServeReport", "ServingSession",
     "ServeReplacement",
     "Request", "RequestRecord",

@@ -7,26 +7,35 @@ token — the next prompt token while the request is prefilling, else its
 last sampled token — so prefill and decode interleave in the same program
 and admission never recompiles.
 
-Invariants (enforced here, asserted by tests/test_serve.py):
+Invariants (enforced here, asserted by tests/test_serve.py and the
+property suite in tests/test_disagg.py):
   * at most ``max_batch`` slots are active;
   * the sum of active KV reservations (prompt_len + max_new per request)
     never exceeds ``kv_budget`` tokens;
   * a request only admits if it can ever fit (kv_tokens <= max_seq);
   * finishing a request frees its slot and its reservation the same step;
   * admission is strict FIFO (head-of-line blocking, no starvation).
+
+Disaggregated serving (DESIGN.md §13) splits the manager into fleet roles:
+a ``role="prefill"`` manager admits arrivals and streams prompts until the
+first token is sampled, then parks the sequence *handoff-ready* (slot and
+KV reservation held — back-pressure, not loss — until the bounded
+:class:`HandoffBuffer` stages its KV payload); a ``role="decode"`` manager
+has no arrival queue and admits only transferred sequences.  The default
+``role="unified"`` keeps the co-located behavior bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Any, Deque, List, Optional
 
 import numpy as np
 
 from ..engine import ServeConfig
 from .request import Request
 
-__all__ = ["ActiveSeq", "BatchManager"]
+__all__ = ["ActiveSeq", "BatchManager", "HandoffBuffer", "HandoffItem"]
 
 
 @dataclasses.dataclass
@@ -40,6 +49,9 @@ class ActiveSeq:
     tokens: Optional[list] = None      # generated token ids
     first_token_step: int = -1
     first_token_wall: float = 0.0
+    # prefill fleet only (DESIGN.md §13): first token sampled, parked in
+    # its slot until the handoff buffer stages its KV payload
+    handoff_ready: bool = False
 
     def __post_init__(self):
         if self.tokens is None:
@@ -56,11 +68,22 @@ class ActiveSeq:
         return self.tokens[-1]
 
 
-class BatchManager:
-    """Admit/evict sequences per decode step against a fixed KV budget."""
+_ROLES = ("unified", "prefill", "decode")
 
-    def __init__(self, cfg: ServeConfig):
+
+class BatchManager:
+    """Admit/evict sequences per decode step against a fixed KV budget.
+
+    ``role`` selects the fleet behavior (module docstring): "unified"
+    (default, the co-located loop), "prefill" (parks sequences
+    handoff-ready at their first sampled token), or "decode" (admits only
+    via :meth:`admit_transfer`, never from the arrival queue)."""
+
+    def __init__(self, cfg: ServeConfig, role: str = "unified"):
+        if role not in _ROLES:
+            raise ValueError(f"BatchManager role {role!r} not in {_ROLES}")
         self.cfg = cfg
+        self.role = role
         self.slots: List[Optional[ActiveSeq]] = [None] * cfg.max_batch
         self.queue: Deque[Request] = deque()
         self.reserved_tokens = 0
@@ -70,6 +93,9 @@ class BatchManager:
     def submit(self, request: Request) -> bool:
         """Queue a request; oversize requests (could never fit a slot) are
         rejected immediately and recorded, not raised."""
+        if self.role == "decode":
+            raise ValueError("decode-fleet managers admit only transferred "
+                             "sequences (admit_transfer), not raw requests")
         if request.kv_tokens > self.cfg.max_seq:
             self.rejected.append(request)
             return False
@@ -125,7 +151,9 @@ class BatchManager:
         toks = np.zeros((self.cfg.max_batch, 1), np.int32)
         act = np.zeros(self.cfg.max_batch, bool)
         for i, s in enumerate(self.slots):
-            if s is not None:
+            if s is not None and not s.handoff_ready:
+                # handoff-ready sequences are stalled (buffer back-pressure):
+                # they hold their slot but feed nothing
                 toks[i, 0] = s.next_token()
                 act[i] = True
         return toks, act
@@ -140,8 +168,8 @@ class BatchManager:
         slots and KV reservations are already freed)."""
         finished: List[ActiveSeq] = []
         for i, s in enumerate(self.slots):
-            if s is None:
-                continue
+            if s is None or s.handoff_ready:
+                continue                     # stalled slots fed nothing
             s.fed += 1
             if s.prefilling:
                 continue                     # still streaming the prompt in
@@ -157,5 +185,103 @@ class BatchManager:
                 self.slots[i] = None
                 self.reserved_tokens -= s.request.kv_tokens
                 finished.append(s)
+            elif self.role == "prefill":
+                # prefill's job ends at the first token (TTFT); park the
+                # sequence for KV handoff, holding slot + reservation
+                s.handoff_ready = True
         assert self.reserved_tokens >= 0
         return finished
+
+    # ----------------------------------------- prefill/decode handoff
+    def take_handoff_ready(self) -> List[ActiveSeq]:
+        """Handoff-ready sequences in slot order (prefill fleet).  The
+        caller stages each into the :class:`HandoffBuffer` while it has
+        space and then frees the slot with :meth:`release`."""
+        return [s for s in self.slots
+                if s is not None and s.handoff_ready]
+
+    def release(self, seq: ActiveSeq) -> None:
+        """Free a handoff-ready sequence's slot + KV reservation — the
+        send side of the boundary, once its payload is staged."""
+        assert self.slots[seq.slot] is seq and seq.handoff_ready
+        self.slots[seq.slot] = None
+        self.reserved_tokens -= seq.request.kv_tokens
+        assert self.reserved_tokens >= 0
+
+    def admit_transfer(self, seq: ActiveSeq, step: int) -> Optional[int]:
+        """Bind a transferred sequence to a free decode slot (decode
+        fleet).  Returns the slot, or None when no slot is free or the KV
+        reservation would exceed the budget (the sequence stays staged in
+        the handoff buffer)."""
+        assert self.role == "decode", "admit_transfer is decode-fleet only"
+        free = next((i for i, s in enumerate(self.slots) if s is None),
+                    None)
+        if free is None:
+            return None
+        if self.reserved_tokens + seq.request.kv_tokens > \
+                self.cfg.budget_tokens:
+            return None
+        seq.slot = free
+        seq.handoff_ready = False
+        self.slots[free] = seq
+        self.reserved_tokens += seq.request.kv_tokens
+        assert self.reserved_tokens <= self.cfg.budget_tokens
+        return free
+
+
+@dataclasses.dataclass
+class HandoffItem:
+    """One staged prefill->decode transfer: the sequence plus its
+    extracted per-slot KV payload (``models.decoder.extract_decode_slot``,
+    or None in manager-level simulations)."""
+
+    seq: ActiveSeq
+    payload: Any = None
+    kv_bytes: int = 0
+    push_step: int = -1
+
+
+class HandoffBuffer:
+    """Bounded FIFO staging buffer on the prefill/decode boundary
+    (DESIGN.md §13).
+
+    ``push`` stages a completed prefill's KV payload (False when full —
+    the sequence then stalls in its prefill slot: back-pressure, never
+    loss); ``pop`` hands the eldest transfer to the decode fleet.  Depth
+    bounds the staged-KV memory; the occupancy invariant (never above
+    ``depth``) is asserted here and property-tested in
+    tests/test_disagg.py."""
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"HandoffBuffer depth must be >= 1, "
+                             f"got {depth}")
+        self.depth = int(depth)
+        self.items: Deque[HandoffItem] = deque()
+        self.transferred = 0               # pops, i.e. completed handoffs
+        self.peak = 0                      # max occupancy seen
+        self.bytes_total = 0               # staged KV bytes, cumulative
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    @property
+    def full(self) -> bool:
+        return len(self.items) >= self.depth
+
+    def push(self, item: HandoffItem) -> bool:
+        if self.full:
+            return False
+        self.items.append(item)
+        self.peak = max(self.peak, len(self.items))
+        self.bytes_total += int(item.kv_bytes)
+        assert len(self.items) <= self.depth
+        return True
+
+    def peek(self) -> Optional[HandoffItem]:
+        return self.items[0] if self.items else None
+
+    def pop(self) -> HandoffItem:
+        item = self.items.popleft()
+        self.transferred += 1
+        return item

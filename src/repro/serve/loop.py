@@ -22,23 +22,35 @@ the adaptive replacement hook, and drives an open-loop request trace:
 The step clock (one tick per compiled step) is the virtual time base for
 arrivals, so a (trace seed, model seed) pair reproduces token-identical
 runs; wall-clock timestamps are recorded alongside for latency stats.
+
+Disaggregated serving (``DisaggConfig.enabled``, DESIGN.md §13) splits the
+session into a *prefill fleet* and a *decode fleet* on the same shared
+step clock: arrivals admit only into prefill slots, a completed prefill's
+per-slot KV caches are extracted into a bounded :class:`HandoffBuffer`
+(``models.decoder.extract_decode_slot`` — the staged transfer), and decode
+slots admit only staged sequences (``insert_decode_slot`` on the receive
+side).  Each fleet gets its own ``DeviceProfile`` mix, runtime/placement,
+per-step LP re-solve, and replacement hook (decision records tagged with
+the fleet that fired).  Disabled or absent, the co-located path below is
+bit-identical to the pre-disaggregation loop (golden-pinned in
+tests/test_serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..engine import (ReplicationConfig, RuntimeConfig, ServeConfig,
-                      TelemetryConfig)
+from ..engine import (DisaggConfig, ReplicationConfig, RuntimeConfig,
+                      ServeConfig, TelemetryConfig)
 from ..models import decoder as dec
 from ..telemetry import LoadTraceRecorder
-from .batching import BatchManager
+from .batching import BatchManager, HandoffBuffer, HandoffItem
 from .replacement import ServeReplacement
 from .request import Request, RequestRecord, percentile
 
@@ -60,8 +72,13 @@ class ServeReport:
     migrated_bytes: int
     rejected: int
     # decision records of fired migrations: step, observed/predicted loads,
-    # score, threshold (SERVING.md / TELEMETRY.md — *why* each one fired)
+    # score, threshold (SERVING.md / TELEMETRY.md — *why* each one fired);
+    # disaggregated runs tag each with the fleet that fired it
     migration_events: List[dict] = dataclasses.field(default_factory=list)
+    # disaggregated runs only (DESIGN.md §13): fleet widths, handoff
+    # transfer/occupancy/bytes stats, per-fleet balance.  None co-located —
+    # the co-located to_dict() stays bit-identical to pre-disaggregation.
+    disagg: Optional[dict] = None
 
     def _ms(self, attr: str, q: float) -> Optional[float]:
         vals = [getattr(r, attr) * 1e3 for r in self.records]
@@ -72,7 +89,7 @@ class ServeReport:
         w = max(self.wall_s, 1e-9)
         lat_mean = (float(np.mean([r.latency_s * 1e3 for r in self.records]))
                     if self.records else None)
-        return {
+        out = {
             "requests": len(self.records),
             "rejected": self.rejected,
             "steps": self.steps,
@@ -93,6 +110,9 @@ class ServeReport:
             "migration_events": self.migration_events,
             "per_request": [r.to_dict() for r in self.records],
         }
+        if self.disagg is not None:
+            out["disagg"] = self.disagg
+        return out
 
     def summary(self) -> str:
         d = self.to_dict()
@@ -115,7 +135,43 @@ class ServeReport:
             f"throughput: {d['gen_tokens_per_s']:.1f} generated tokens/s "
             f"({d['tokens_per_s']:.1f} processed tokens/s)\n"
             f"mean balance ratio: {bal}   migrations: {self.migrations} "
-            f"({self.migrated_bytes} B)" + why)
+            f"({self.migrated_bytes} B)" + why + (
+                f"\ndisagg: prefill {self.disagg['prefill_slots']} + decode "
+                f"{self.disagg['decode_slots']} slots, "
+                f"{self.disagg['transferred']} handoffs "
+                f"(buffer peak {self.disagg['handoff_peak']}/"
+                f"{self.disagg['handoff_depth']}, "
+                f"{self.disagg['handoff_bytes']} B staged, "
+                f"{self.disagg['prefill_stall_seq_steps']} stall seq-steps)"
+                if self.disagg is not None else ""))
+
+
+@dataclasses.dataclass
+class _Fleet:
+    """One side of the disaggregated boundary (DESIGN.md §13): its own
+    slots/KV budget, runtime (profile mix), compiled step, replacement
+    hook, decode state, and balance accumulators.  The batch manager and
+    state are (re)built per run; the runtime persists across runs like the
+    co-located session's."""
+
+    name: str                              # "prefill" | "decode"
+    serve_cfg: ServeConfig
+    run_cfg: RuntimeConfig
+    dr: Any                                # DistRuntime, or None (shadow)
+    params: Any
+    rt: Any
+    dtype: Any
+    step_fn: Any
+    replacement: Optional[ServeReplacement]
+    bm: Optional[BatchManager] = None
+    state: Optional[dict] = None
+    bal_sum: float = 0.0
+    bal_steps: int = 0
+    overflow: float = 0.0
+
+    @property
+    def balance(self) -> Optional[float]:
+        return self.bal_sum / self.bal_steps if self.bal_steps else None
 
 
 class ServingSession:
@@ -132,11 +188,17 @@ class ServingSession:
                  run_cfg: Optional[RuntimeConfig] = None,
                  mesh=None, seed: int = 0,
                  telemetry: Optional[TelemetryConfig] = None,
-                 replication: Optional[ReplicationConfig] = None):
+                 replication: Optional[ReplicationConfig] = None,
+                 disagg: Optional[DisaggConfig] = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.telemetry = telemetry
         self.replication = replication
+        self.seed = int(seed)
+        # a DisaggConfig with enabled=False is the co-located loop, same
+        # as passing no DisaggConfig at all (golden-pinned bit-identity)
+        self.disagg = disagg if (disagg is not None
+                                 and disagg.enabled) else None
         self.run_cfg = run_cfg if run_cfg is not None else RuntimeConfig(
             dtype="float32", impl="ref", remat=False)
         self.mesh = mesh
@@ -146,11 +208,21 @@ class ServingSession:
         if mesh is not None:
             from ..launch import runtime as R     # avoid cycle at import
             self._R = R
-            self.dr = R.build_runtime(cfg, mesh, self.run_cfg)
-            self.master = dec.init_params(key, cfg, jnp.float32)
-            self.params = self.dr.hooks.to_working(self.master)
-            self.rt = self.dr.rt
-            self.dtype = self.dr.dtype
+            if self.disagg is None:
+                self.dr = R.build_runtime(cfg, mesh, self.run_cfg)
+                self.master = dec.init_params(key, cfg, jnp.float32)
+                self.params = self.dr.hooks.to_working(self.master)
+                self.rt = self.dr.rt
+                self.dtype = self.dr.dtype
+            else:
+                # disaggregated: each fleet builds its own runtime around
+                # its own profile mix (_build_fleet); the session keeps
+                # only the canonical master both fleets materialize from
+                self.dr = None
+                self.master = dec.init_params(key, cfg, jnp.float32)
+                self.params = None
+                self.rt = None
+                self.dtype = jnp.float32
         else:
             self._R = None
             self.dr = None
@@ -159,31 +231,11 @@ class ServingSession:
             self.rt = dec.Runtime(impl=self.run_cfg.impl)
             self.dtype = jnp.float32
 
+        # disaggregated runs get one hook per fleet instead (_build_fleet)
         self.replacement: Optional[ServeReplacement] = None
-        want_repl = serve_cfg.replacement or (
-            replication is not None and replication.enabled)
-        if want_repl and cfg.moe:
-            placement = (self.dr.engine.placement if self.dr is not None
-                         else None)
-            if placement is None:
-                # shadow mode: degenerate one-device placement
-                from ..core.placement import vanilla_placement
-                placement = vanilla_placement(
-                    1, 1, cfg.num_experts * max(cfg.etp, 1))
-            bpe = 3 * cfg.d_model * max(cfg.moe_d_ff, 1) \
-                * jnp.dtype(self.dtype).itemsize
-            # heterogeneous groups: the regenerated placements must respect
-            # the same weights/budgets the runtime schedules under
-            weights = budgets = None
-            if self.dr is not None and self.dr.engine is not None:
-                weights = self.dr.engine.weights
-                budgets = self.dr.engine.slot_budgets
-            self.replacement = ServeReplacement(placement, serve_cfg, bpe,
-                                                seed=seed,
-                                                telemetry=telemetry,
-                                                weights=weights,
-                                                slot_budgets=budgets,
-                                                replication=replication)
+        if self.disagg is None:
+            self.replacement = self._make_replacement_hook(self.dr,
+                                                           self.dtype)
 
         # expert-load trace capture on the step clock (TELEMETRY.md)
         self.recorder: Optional[LoadTraceRecorder] = None
@@ -192,12 +244,127 @@ class ServingSession:
             self.recorder = LoadTraceRecorder(
                 source="serve", meta={"arch": cfg.name, "seed": int(seed)})
 
-        self._step = self._make_step()
+        self._step = self._make_step() if self.rt is not None else None
         self._reset = jax.jit(dec.reset_decode_slots)
 
+        self.fleets: Optional[Dict[str, _Fleet]] = None
+        if self.disagg is not None:
+            dg = self.disagg
+            # decorrelated per-fleet candidate RNG streams: seed, seed + 1
+            self.fleets = {
+                "prefill": self._build_fleet("prefill", dg.prefill_slots,
+                                             dg.prefill_profiles, seed),
+                "decode": self._build_fleet("decode", dg.decode_slots,
+                                            dg.decode_profiles, seed + 1),
+            }
+
+    # ----------------------------------------------------- replacement
+    def _make_replacement_hook(self, dr, dtype, fleet: Optional[str] = None,
+                               seed: Optional[int] = None
+                               ) -> Optional[ServeReplacement]:
+        """The adaptive replacement hook for one runtime (paper §6.4) —
+        the co-located session has one, a disaggregated session one per
+        fleet (decision records tagged with ``fleet``)."""
+        want = self.serve_cfg.replacement or (
+            self.replication is not None and self.replication.enabled)
+        if not (want and self.cfg.moe):
+            return None
+        placement = (dr.engine.placement if dr is not None else None)
+        if placement is None:
+            # shadow mode: degenerate one-device placement
+            from ..core.placement import vanilla_placement
+            placement = vanilla_placement(
+                1, 1, self.cfg.num_experts * max(self.cfg.etp, 1))
+        bpe = 3 * self.cfg.d_model * max(self.cfg.moe_d_ff, 1) \
+            * jnp.dtype(dtype).itemsize
+        # heterogeneous groups: the regenerated placements must respect
+        # the same weights/budgets the runtime schedules under
+        weights = budgets = None
+        if dr is not None and dr.engine is not None:
+            weights = dr.engine.weights
+            budgets = dr.engine.slot_budgets
+        return ServeReplacement(placement, self.serve_cfg, bpe,
+                                seed=self.seed if seed is None else seed,
+                                telemetry=self.telemetry,
+                                weights=weights,
+                                slot_budgets=budgets,
+                                replication=self.replication,
+                                fleet=fleet)
+
+    # ------------------------------------------------------------ fleets
+    def _fleet_serve_cfg(self, slots: int) -> ServeConfig:
+        """Per-fleet ServeConfig: the fleet's slot count, with an explicit
+        KV budget split proportionally (clamped so one request can always
+        fit).  None stays None — slot-limited per fleet."""
+        sc = self.serve_cfg
+        kv = sc.kv_budget
+        if kv is not None:
+            total = self.disagg.prefill_slots + self.disagg.decode_slots
+            kv = max(sc.max_seq, (kv * slots) // total)
+        return dataclasses.replace(sc, max_batch=slots, kv_budget=kv)
+
+    def _build_fleet(self, name: str, slots: int, profiles,
+                     hook_seed: int) -> "_Fleet":
+        sc = self._fleet_serve_cfg(slots)
+        run_cfg = self.run_cfg
+        if profiles is not None:
+            run_cfg = dataclasses.replace(run_cfg, device_profiles=profiles)
+        if self.mesh is not None:
+            dr = self._R.build_runtime(self.cfg, self.mesh, run_cfg)
+            params = dr.hooks.to_working(self.master)
+            rt = dr.rt
+            dtype = dr.dtype
+            step_fn = self._make_step(rt)
+        else:
+            # shadow path: fleets share the single-device params/step —
+            # the fleet split is purely a scheduling boundary here
+            dr = None
+            params = self.params
+            rt = self.rt
+            dtype = self.dtype
+            step_fn = self._step
+        return _Fleet(name=name, serve_cfg=sc, run_cfg=run_cfg, dr=dr,
+                      params=params, rt=rt, dtype=dtype, step_fn=step_fn,
+                      replacement=self._make_replacement_hook(
+                          dr, dtype, fleet=name, seed=hook_seed))
+
+    def _init_fleet_state(self, fleet: "_Fleet") -> dict:
+        sc = fleet.serve_cfg
+        state = dec.init_decode_state(self.cfg, sc.max_batch, sc.max_seq,
+                                      fleet.dtype, fleet.rt, per_slot=True)
+        if self.cfg.moe:
+            state["solver"] = (fleet.dr.init_solver()
+                               if fleet.dr is not None
+                               else dec.init_solver_states(self.cfg, 1))
+        return state
+
+    def _warmup_fleet(self, fleet: "_Fleet") -> None:
+        b = fleet.serve_cfg.max_batch
+        toks = jnp.zeros((b, 1), jnp.int32)
+        act = jnp.ones((b,), bool)
+        out = fleet.step_fn(fleet.params, fleet.state, toks, act)
+        jax.block_until_ready(out[0])
+        jax.block_until_ready(
+            self._reset(fleet.state, jnp.zeros((b,), bool))["pos"])
+
+    def _migrate_fleet(self, fleet: "_Fleet", table) -> None:
+        """Per-fleet replacement migration: rebuild that fleet's runtime
+        only — the other fleet keeps serving through it."""
+        if fleet.dr is None:
+            return                             # shadow mode: no-op
+        fleet.dr = self._R.build_runtime(self.cfg, self.mesh,
+                                         fleet.run_cfg,
+                                         placement_table=table)
+        fleet.params = fleet.dr.hooks.to_working(self.master)
+        fleet.rt = fleet.dr.rt
+        fleet.step_fn = self._make_step(fleet.rt)
+        fleet.state = dict(fleet.state)
+        fleet.state["solver"] = fleet.dr.init_solver()
+
     # ---------------------------------------------------------- compiled
-    def _make_step(self):
-        cfg, rt = self.cfg, self.rt
+    def _make_step(self, rt=None):
+        cfg = self.cfg
+        rt = self.rt if rt is None else rt
 
         def step(params, state, toks, active):
             logits, new_state, m = dec.decode_step(
@@ -250,6 +417,8 @@ class ServingSession:
     def run(self, requests: List[Request],
             max_steps: Optional[int] = None,
             warmup: bool = True) -> ServeReport:
+        if self.disagg is not None:
+            return self._run_disagg(requests, max_steps, warmup)
         bm = BatchManager(self.serve_cfg)
         for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
             bm.submit(r)
@@ -337,3 +506,174 @@ class ServingSession:
             migration_events=([e for e in self.replacement.events[ev0:]
                                if e.get("fired")]
                               if self.replacement else []))
+
+    # ------------------------------------------------ disaggregated run
+    def _run_disagg(self, requests: List[Request],
+                    max_steps: Optional[int],
+                    warmup: bool) -> ServeReport:
+        """The two-fleet loop (DESIGN.md §13) on one shared step clock.
+
+        Per tick: drain staged transfers from the handoff buffer into free
+        decode slots (``insert_decode_slot`` — the receive side), admit
+        arrivals into prefill slots, step each fleet that has live work,
+        then stage completed prefills' per-slot KV
+        (``extract_decode_slot``) into the bounded buffer; a completed
+        prefill the full buffer cannot take stalls in its slot
+        (back-pressure, never loss — tests/test_disagg.py)."""
+        dg = self.disagg
+        pf, dc = self.fleets["prefill"], self.fleets["decode"]
+        buf = HandoffBuffer(dg.handoff_depth)
+        for f in (pf, dc):
+            f.bm = BatchManager(f.serve_cfg, role=f.name)
+            f.state = self._init_fleet_state(f)
+            f.bal_sum = 0.0
+            f.bal_steps = 0
+            f.overflow = 0.0
+        for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
+            pf.bm.submit(r)
+        if self.recorder is not None and len(self.recorder):
+            # one run = one trace: a second run() starts a fresh recording
+            self.recorder = LoadTraceRecorder(source="serve",
+                                              meta=dict(self.recorder.meta))
+        mig0 = {f.name: (f.replacement.migrations if f.replacement else 0)
+                for f in (pf, dc)}
+        bytes0 = {f.name: (f.replacement.migrated_bytes
+                           if f.replacement else 0) for f in (pf, dc)}
+        ev0 = {f.name: (len(f.replacement.events) if f.replacement else 0)
+               for f in (pf, dc)}
+        if warmup:
+            self._warmup_fleet(pf)
+            self._warmup_fleet(dc)
+        # what one staged transfer costs: the per-slot share of the
+        # prefill fleet's KV caches (models.decoder.decode_slot_bytes)
+        slot_bytes = dec.decode_slot_bytes(pf.state)
+        records: List[RequestRecord] = []
+        arrival_wall: dict = {}
+        step = 0
+        processed = 0
+        stalls = 0                 # seq-steps spent parked on a full buffer
+        t0 = time.perf_counter()
+
+        while (pf.bm.has_work() or dc.bm.has_work() or len(buf)) \
+                and (max_steps is None or step < max_steps):
+            if pf.bm.n_active == 0 and dc.bm.n_active == 0 \
+                    and not len(buf):
+                nxt_arr = pf.bm.next_arrival_step()
+                if nxt_arr is not None and nxt_arr > step:
+                    step = nxt_arr          # idle fast-forward (step clock)
+            now = time.perf_counter() - t0
+            for req in pf.bm.queue:         # stamp wall arrival lazily
+                if req.arrival_step <= step \
+                        and req.req_id not in arrival_wall:
+                    arrival_wall[req.req_id] = now
+            # receive side: drain staged transfers, eldest first, while a
+            # decode slot is free and the KV reservation fits
+            while True:
+                item = buf.peek()
+                if item is None:
+                    break
+                slot = dc.bm.admit_transfer(item.seq, step)
+                if slot is None:
+                    break                   # decode fleet full: stay staged
+                buf.pop()
+                if item.payload is not None:
+                    dc.state = dec.insert_decode_slot(dc.state,
+                                                      item.payload, slot)
+            # arrivals admit only into prefill slots
+            mask = pf.bm.admit_ready(step)
+            if mask.any():
+                pf.state = self._reset(pf.state, jnp.asarray(mask))
+            # step both fleets on the shared clock (prefill first: its
+            # tick-t completions stage this tick, transfer next tick)
+            tick_load = None
+            for f in (pf, dc):
+                toks, active = f.bm.next_tokens()
+                if not active.any():
+                    continue                # fleet idle/stalled this tick
+                nxt, f.state, (bal, eload, ovf) = f.step_fn(
+                    f.params, f.state, jnp.asarray(toks),
+                    jnp.asarray(active))
+                nxt = np.asarray(nxt)       # block on the fleet's step
+                now = time.perf_counter() - t0
+                processed += int(active.sum())
+                for s in f.bm.observe(nxt, step, now):
+                    records.append(RequestRecord(
+                        req_id=s.request.req_id,
+                        prompt_len=s.request.prompt_len,
+                        arrival_step=s.request.arrival_step,
+                        admit_step=s.admit_step,
+                        first_token_step=s.first_token_step,
+                        finish_step=step,
+                        arrival_wall=arrival_wall.get(s.request.req_id,
+                                                      now),
+                        first_token_wall=s.first_token_wall,
+                        finish_wall=now,
+                        tokens=list(s.tokens)))
+                if self.n_moe:
+                    f.bal_sum += float(bal) / self.n_moe
+                    f.bal_steps += 1
+                    f.overflow += float(ovf)
+                    load = np.asarray(eload, np.float64)
+                    tick_load = (load if tick_load is None
+                                 else tick_load + load)
+                    if f.replacement is not None:
+                        new_table = f.replacement.observe(load, step=step)
+                        if new_table is not None:
+                            self._migrate_fleet(f, new_table)
+            if self.recorder is not None and tick_load is not None:
+                self.recorder.record(step, tick_load)
+            # send side: stage completed prefills while the buffer has
+            # space, then free their prefill slots
+            for s in pf.bm.take_handoff_ready():
+                if buf.full:
+                    break
+                payload = dec.extract_decode_slot(pf.state, s.slot)
+                staged = buf.push(HandoffItem(seq=s, payload=payload,
+                                              kv_bytes=slot_bytes,
+                                              push_step=step))
+                assert staged
+                pf.bm.release(s)
+            stalls += len(pf.bm.take_handoff_ready())
+            step += 1
+
+        wall = time.perf_counter() - t0
+        if self.recorder is not None and self.telemetry is not None \
+                and self.telemetry.trace_path:
+            self.recorder.save(self.telemetry.trace_path)
+        migrations = migrated = 0
+        events: List[dict] = []
+        for f in (pf, dc):
+            if f.replacement is None:
+                continue
+            migrations += f.replacement.migrations - mig0[f.name]
+            migrated += f.replacement.migrated_bytes - bytes0[f.name]
+            events.extend(e for e in f.replacement.events[ev0[f.name]:]
+                          if e.get("fired"))
+        events.sort(key=lambda e: e.get("step", 0))
+        bal_steps = pf.bal_steps + dc.bal_steps
+        return ServeReport(
+            records=sorted(records, key=lambda r: r.req_id),
+            steps=step,
+            wall_s=wall,
+            gen_tokens=sum(r.n_generated for r in records),
+            processed_tokens=processed,
+            mean_balance=((pf.bal_sum + dc.bal_sum) / bal_steps
+                          if bal_steps else None),
+            overflow=pf.overflow + dc.overflow,
+            migrations=migrations,
+            migrated_bytes=migrated,
+            rejected=len(pf.bm.rejected),
+            migration_events=events,
+            disagg={
+                "prefill_slots": dg.prefill_slots,
+                "decode_slots": dg.decode_slots,
+                "handoff_depth": dg.handoff_depth,
+                "transferred": buf.transferred,
+                "handoff_peak": buf.peak,
+                "handoff_bytes": buf.bytes_total,
+                "prefill_stall_seq_steps": stalls,
+                "prefill_balance": (None if pf.balance is None
+                                    else round(pf.balance, 4)),
+                "decode_balance": (None if dc.balance is None
+                                   else round(dc.balance, 4)),
+            })

@@ -59,7 +59,12 @@ class ServeReplacement:
                  bytes_per_expert: int, seed: int = 0,
                  telemetry: Optional[TelemetryConfig] = None,
                  weights=None, slot_budgets=None,
-                 replication: Optional[ReplicationConfig] = None):
+                 replication: Optional[ReplicationConfig] = None,
+                 fleet: Optional[str] = None):
+        # disaggregated serving (DESIGN.md §13) runs one hook per fleet;
+        # ``fleet`` tags every decision record with which fleet fired.
+        # None (co-located) leaves records untouched.
+        self.fleet = fleet
         self.topology = bool(replication is not None and replication.enabled)
         self.forecast = self.topology or bool(
             telemetry is not None and telemetry.forecast_replacement)
@@ -135,6 +140,8 @@ class ServeReplacement:
                                      or self.events[-1] is not decision):
             if step is not None:
                 decision["step"] = int(step)
+            if self.fleet is not None:
+                decision["fleet"] = self.fleet
             self.events.append(decision)
         if not fired:
             return None

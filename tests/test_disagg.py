@@ -1,0 +1,409 @@
+"""Disaggregated prefill/decode serving tests (DESIGN.md §13, SERVING.md).
+
+The core is a manager-level simulation harness (`_simulate`) that drives a
+prefill :class:`BatchManager`, the bounded :class:`HandoffBuffer` and a
+decode :class:`BatchManager` in exactly the per-tick order of
+``ServingSession._run_disagg``, checking the boundary invariants at every
+phase:
+
+  * admission into the prefill fleet is strict FIFO;
+  * neither fleet ever exceeds its slot count or KV token budget;
+  * the handoff buffer never exceeds its depth (back-pressure stalls a
+    completed prefill in its slot — it is never dropped);
+  * no request decodes past its first token before its KV handoff
+    completed (first token in prefill, push <= pop <= second token);
+  * conservation — every submitted request either finishes or is
+    rejected, exactly once.
+
+The harness runs twice: under hypothesis (random traces/geometries; skips
+cleanly when the library is absent via tests/hypothesis_compat.py) and
+over a deterministic adversarial grid (burst > slots, depth-1 buffer,
+single decode slot, oversize requests, finish-in-prefill) so the
+invariants stay exercised in minimal environments too.
+
+End-to-end tests then run the real two-fleet :class:`ServingSession` loop
+(dense + MoE smoke), the per-fleet replacement tagging, and the
+:class:`DisaggConfig` round-trips.
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.engine import ConfigError, DeviceProfile, DisaggConfig, ServeConfig
+from repro.serve import (BatchManager, HandoffBuffer, HandoffItem, Request,
+                         ServingSession, replay_trace)
+
+# ------------------------------------------------- simulation harness
+
+
+def _req(i, arrival, p, g, vocab=64):
+    rng = np.random.default_rng(i)
+    return Request(req_id=i, arrival_step=arrival,
+                   prompt=rng.integers(0, vocab, p), max_new=g)
+
+
+def _check_budgets(bm: BatchManager):
+    assert bm.n_active <= bm.cfg.max_batch
+    assert 0 <= bm.reserved_tokens <= bm.cfg.budget_tokens
+
+
+def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
+              eos_token=None, max_steps=2000):
+    """Drive the two fleets + buffer through a whole trace in the exact
+    per-tick order of ``ServingSession._run_disagg`` (sampled token is a
+    constant 7), asserting every boundary invariant along the way.
+    Returns per-request lifecycle stats for the caller's own asserts."""
+    pf_cfg = ServeConfig(max_batch=pf_slots, max_seq=max_seq,
+                         eos_token=eos_token)
+    dc_cfg = ServeConfig(max_batch=dc_slots, max_seq=max_seq,
+                         eos_token=eos_token)
+    pf = BatchManager(pf_cfg, role="prefill")
+    dc = BatchManager(dc_cfg, role="decode")
+    buf = HandoffBuffer(depth)
+    reqs = [_req(i, a, p, g) for i, (a, p, g) in enumerate(arrivals)]
+    submitted = {r.req_id for r in reqs}
+    for r in sorted(reqs, key=lambda r: (r.arrival_step, r.req_id)):
+        pf.submit(r)
+    rejected = {r.req_id for r in pf.rejected}
+
+    admit_order = []                   # req ids in prefill-admission order
+    finished = {}                      # req_id -> ActiveSeq
+    push_step = {}
+    pop_step = {}
+    token_steps = {}                   # req_id -> step of each token
+    stalls = 0
+    step = 0
+    while (pf.has_work() or dc.has_work() or len(buf)) \
+            and step < max_steps:
+        if pf.n_active == 0 and dc.n_active == 0 and not len(buf):
+            nxt = pf.next_arrival_step()
+            if nxt is not None and nxt > step:
+                step = nxt
+        # 1. drain staged transfers into free decode slots
+        while True:
+            item = buf.peek()
+            if item is None:
+                break
+            slot = dc.admit_transfer(item.seq, step)
+            if slot is None:
+                break
+            buf.pop()
+            # no decode before the handoff completed
+            assert item.seq.request.req_id in push_step
+            pop_step[item.seq.request.req_id] = step
+            _check_budgets(dc)
+        # 2. admit arrivals into prefill slots, strict FIFO
+        before = {id(s) for s in pf.active}
+        pf.admit_ready(step)
+        admit_order += sorted(
+            (s for s in pf.active if id(s) not in before),
+            key=lambda s: s.request.req_id)
+        admit_order_ids = [s.request.req_id for s in admit_order]
+        assert admit_order_ids == sorted(admit_order_ids)
+        _check_budgets(pf)
+        # 3. step both fleets (constant sampled token)
+        for bm in (pf, dc):
+            toks, active = bm.next_tokens()
+            if not active.any():
+                continue
+            pre = {s.request.req_id: len(s.tokens) for s in bm.active}
+            sampled = np.full(bm.cfg.max_batch, 7)
+            fins = bm.observe(sampled, step, 0.0)
+            for s in fins:
+                assert s.request.req_id not in finished   # no duplicates
+                finished[s.request.req_id] = s
+            for s in list(bm.active) + fins:
+                if len(s.tokens) > pre.get(s.request.req_id, 0):
+                    token_steps.setdefault(
+                        s.request.req_id, []).append(step)
+            _check_budgets(bm)
+        # a parked sequence never grows past its first token in prefill
+        for s in pf.active:
+            assert len(s.tokens) <= 1
+        # 4. stage completed prefills while the buffer has space
+        for s in pf.take_handoff_ready():
+            if buf.full:
+                break
+            assert buf.push(HandoffItem(seq=s, push_step=step))
+            push_step[s.request.req_id] = step
+            pf.release(s)
+        assert len(buf) <= depth
+        stalls += len(pf.take_handoff_ready())
+        step += 1
+
+    assert step < max_steps, "two-fleet loop failed to drain"
+    assert set(finished) | rejected == submitted
+    assert not (set(finished) & rejected)
+    for r in reqs:
+        if r.req_id in rejected:
+            continue
+        s = finished[r.req_id]
+        n = len(s.tokens)
+        assert n == r.max_new or (eos_token is not None
+                                  and s.tokens[-1] == eos_token)
+        if r.req_id in pop_step:
+            # first token in prefill, then push <= pop, decode after
+            assert s.first_token_step <= push_step[r.req_id] \
+                <= pop_step[r.req_id]
+            if n > 1:
+                steps_after = [t for t in token_steps.get(r.req_id, [])
+                               if t >= pop_step[r.req_id]]
+                assert len(steps_after) == n - 1
+        else:
+            # never transferred: must have finished inside prefill
+            assert n == 1
+    assert buf.transferred == len(pop_step)
+    assert buf.peak <= depth
+    return {"finished": finished, "rejected": rejected,
+            "admit_order": [s.request.req_id for s in admit_order],
+            "stalls": stalls, "buffer": buf, "steps": step}
+
+
+# ------------------------------------------------- property-based suite
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                               st.integers(1, 6)),
+                     min_size=0, max_size=16),
+       pf_slots=st.integers(1, 4),
+       dc_slots=st.integers(1, 3),
+       depth=st.integers(1, 3),
+       max_seq=st.integers(4, 12))
+def test_disagg_invariants_property(gaps, pf_slots, dc_slots, depth,
+                                    max_seq):
+    """Random traces x geometries: every boundary invariant holds and the
+    loop always drains (the _simulate harness asserts them all)."""
+    t = 0
+    arrivals = []
+    for gap, p, g in gaps:
+        t += gap
+        arrivals.append((t, p, g))
+    _simulate(arrivals, pf_slots, dc_slots, depth, max_seq)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                               st.integers(1, 6)),
+                     min_size=1, max_size=16),
+       slots=st.integers(1, 4),
+       kv_budget=st.integers(8, 40))
+def test_unified_manager_invariants_property(gaps, slots, kv_budget):
+    """Co-located manager under random traffic: FIFO admission, budgets
+    respected, conservation."""
+    cfg = ServeConfig(max_batch=slots, max_seq=8,
+                      kv_budget=max(kv_budget, 8))
+    bm = BatchManager(cfg)
+    t = 0
+    reqs = []
+    for i, (gap, p, g) in enumerate(gaps):
+        t += gap
+        reqs.append(_req(i, t, p, g))
+    for r in reqs:
+        bm.submit(r)
+    finished = set()
+    admit_order = []
+    step = 0
+    while bm.has_work() and step < 2000:
+        if bm.n_active == 0:
+            nxt = bm.next_arrival_step()
+            if nxt is not None and nxt > step:
+                step = nxt
+        before = {id(s) for s in bm.active}
+        bm.admit_ready(step)
+        admit_order += sorted((s.request.req_id for s in bm.active
+                               if id(s) not in before))
+        _check_budgets(bm)
+        bm.next_tokens()
+        for s in bm.observe(np.full(cfg.max_batch, 7), step, 0.0):
+            assert s.request.req_id not in finished
+            finished.add(s.request.req_id)
+        step += 1
+    assert step < 2000
+    assert admit_order == sorted(admit_order)              # strict FIFO
+    assert finished | {r.req_id for r in bm.rejected} == \
+        {r.req_id for r in reqs}
+
+
+# ------------------------------------- deterministic adversarial grid
+
+_GRID = [
+    # (arrivals [(step, prompt, gen)], pf, dc, depth, max_seq, eos)
+    ([], 2, 2, 2, 8, None),                       # empty trace
+    ([(0, 3, 2)], 1, 1, 1, 8, None),              # single request
+    ([(0, 3, 3)] * 8, 2, 1, 1, 8, None),          # burst > total slots
+    ([(0, 2, 1)] * 4, 2, 1, 1, 8, None),          # finish inside prefill
+    ([(0, 2, 4)] * 6, 3, 1, 1, 8, None),          # depth-1 back-pressure
+    ([(0, 9, 4), (0, 3, 2)], 2, 2, 2, 8, None),   # oversize -> rejected
+    ([(i, 4, 3) for i in range(10)], 2, 2, 1, 8, None),   # steady stream
+    ([(0, 3, 5)] * 5, 4, 1, 2, 10, 7),            # EOS (= sampled token)
+]
+
+
+@pytest.mark.parametrize("arrivals,pf,dc,depth,max_seq,eos",
+                         _GRID, ids=range(len(_GRID)))
+def test_disagg_invariants_deterministic(arrivals, pf, dc, depth,
+                                         max_seq, eos):
+    """The same invariant harness over an adversarial grid — runs even
+    without hypothesis installed."""
+    out = _simulate(arrivals, pf, dc, depth, max_seq, eos_token=eos)
+    n_fit = sum(1 for _, p, g in arrivals if p + g <= max_seq)
+    assert len(out["finished"]) == n_fit
+    assert len(out["rejected"]) == len(arrivals) - n_fit
+
+
+def test_disagg_backpressure_stalls_never_drops():
+    """Depth-1 buffer + 1 decode slot under a burst: completed prefills
+    stall in their slots (counted), every request still finishes."""
+    out = _simulate([(0, 2, 4)] * 6, 3, 1, 1, 8)
+    assert out["stalls"] > 0
+    assert out["buffer"].peak == 1
+    assert len(out["finished"]) == 6
+
+
+def test_handoff_buffer_bounds_and_counters():
+    buf = HandoffBuffer(2)
+    with pytest.raises(ValueError):
+        HandoffBuffer(0)
+    items = [HandoffItem(seq=None, kv_bytes=10, push_step=s)
+             for s in range(3)]
+    assert buf.push(items[0]) and buf.push(items[1])
+    assert buf.full and not buf.push(items[2])             # back-pressure
+    assert len(buf) == buf.peak == 2
+    assert buf.bytes_total == 20                           # staged only
+    assert buf.pop() is items[0] and buf.pop() is items[1]  # FIFO
+    assert buf.transferred == 2 and len(buf) == 0
+
+
+def test_decode_manager_refuses_raw_submit():
+    bm = BatchManager(ServeConfig(max_batch=2, max_seq=8), role="decode")
+    with pytest.raises(ValueError):
+        bm.submit(_req(0, 0, 2, 2))
+    with pytest.raises(ValueError):
+        BatchManager(ServeConfig(), role="verify")
+
+
+# ---------------------------------------------------- end-to-end loop
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "paper-gpt-32x1.3b"])
+def test_disagg_serving_loop_end_to_end(arch):
+    """The real two-fleet ServingSession: all requests served, per-request
+    budgets honored, handoff stats reported, deterministic re-runs."""
+    cfg = get_config(arch).smoke()
+    arrivals = [(0, 6, 5), (0, 4, 3), (2, 5, 4), (7, 6, 6), (9, 3, 1)]
+    dg = DisaggConfig(enabled=True, prefill_slots=3, decode_slots=2,
+                      handoff_depth=2)
+    make = lambda: ServingSession(
+        cfg, ServeConfig(max_batch=3, max_seq=24), seed=0, disagg=dg)
+    rep = make().run(replay_trace(arrivals, vocab=cfg.vocab, seed=11))
+    assert len(rep.records) == 5 and rep.rejected == 0
+    for r, (_, _, g) in zip(sorted(rep.records, key=lambda r: r.req_id),
+                            arrivals):
+        assert r.n_generated == g
+        assert r.arrival_step <= r.admit_step <= r.first_token_step \
+            <= r.finish_step
+    d = rep.to_dict()
+    assert d["disagg"]["prefill_slots"] == 3
+    assert d["disagg"]["decode_slots"] == 2
+    # the max_new=1 request finishes inside prefill, never transfers
+    assert d["disagg"]["transferred"] == 4
+    assert d["disagg"]["handoff_peak"] <= 2
+    assert d["disagg"]["handoff_bytes"] > 0
+    assert "disagg:" in rep.summary()
+    if cfg.moe:
+        assert d["disagg"]["prefill_balance"] >= 1.0
+        assert d["disagg"]["decode_balance"] >= 1.0
+    else:
+        assert rep.mean_balance is None
+    rep2 = make().run(replay_trace(arrivals, vocab=cfg.vocab, seed=11))
+    assert [r.tokens for r in rep.records] == \
+        [r.tokens for r in rep2.records]
+
+
+def test_disagg_fleet_tagged_replacement_records():
+    """Satellite fix: per-fleet replacement hooks tag their decision
+    records with the fleet that fired; co-located records stay untagged."""
+    from repro.serve.replacement import ServeReplacement
+    from repro.core.placement import vanilla_placement
+
+    sc = ServeConfig(max_batch=2, max_seq=16, replacement=True,
+                     repl_check_every=1, repl_threshold=1.0)
+    skew = np.array([30.0, 1.0, 1.0, 1.0])
+
+    def hook(fleet):
+        return ServeReplacement(vanilla_placement(1, 1, 4), sc, 128,
+                                fleet=fleet)
+
+    for fleet in ("prefill", "decode"):
+        h = hook(fleet)
+        for _ in range(4):
+            h.observe(skew, step=0)
+        assert h.events, "skewed loads must leave decision records"
+        assert all(e["fleet"] == fleet for e in h.events)
+    h = hook(None)
+    for _ in range(4):
+        h.observe(skew, step=0)
+    assert h.events and all("fleet" not in e for e in h.events)
+
+
+def test_disagg_session_builds_per_fleet_hooks():
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    sc = ServeConfig(max_batch=2, max_seq=16, replacement=True,
+                     repl_check_every=2, repl_threshold=1.05)
+    dg = DisaggConfig(enabled=True, prefill_slots=2, decode_slots=1,
+                      handoff_depth=2)
+    sess = ServingSession(cfg, sc, seed=0, disagg=dg)
+    assert sess.replacement is None                   # no co-located hook
+    assert sess.fleets["prefill"].replacement.fleet == "prefill"
+    assert sess.fleets["decode"].replacement.fleet == "decode"
+    rep = sess.run(replay_trace([(0, 5, 4), (1, 4, 3), (2, 5, 3)],
+                                vocab=cfg.vocab, seed=7))
+    assert len(rep.records) == 3
+    for e in rep.to_dict()["migration_events"]:
+        assert e["fleet"] in ("prefill", "decode")
+
+
+# -------------------------------------------------------- DisaggConfig
+
+
+def test_disagg_config_validation():
+    with pytest.raises(ConfigError):
+        DisaggConfig(prefill_slots=0)
+    with pytest.raises(ConfigError):
+        DisaggConfig(decode_slots=-1)
+    with pytest.raises(ConfigError):
+        DisaggConfig(handoff_depth=0)
+    assert DisaggConfig().enabled is False
+
+
+def test_disagg_config_dict_roundtrip():
+    dg = DisaggConfig(enabled=True, prefill_slots=4, decode_slots=2,
+                      handoff_depth=3,
+                      prefill_profiles=(DeviceProfile(weight=2.0),
+                                        DeviceProfile(weight=1.0)),
+                      decode_profiles=[{"weight": 1.0, "slots": 8}])
+    back = DisaggConfig.from_dict(dg.to_dict())
+    assert back == dg
+    assert back.decode_profiles[0].slots == 8
+    assert DisaggConfig.from_dict(DisaggConfig().to_dict()) == \
+        DisaggConfig()
+
+
+def test_disagg_config_cli_roundtrip():
+    dg = DisaggConfig(enabled=True, prefill_slots=4, decode_slots=2,
+                      handoff_depth=3,
+                      prefill_profiles=(DeviceProfile(weight=2.0),
+                                        DeviceProfile(weight=1.0)))
+    ap = argparse.ArgumentParser()
+    DisaggConfig.add_cli_args(ap)
+    args = ap.parse_args(dg.to_cli_args())
+    assert DisaggConfig.from_cli_args(args) == dg
+    # defaults parse back to the default config
+    assert DisaggConfig.from_cli_args(ap.parse_args([])) == DisaggConfig()

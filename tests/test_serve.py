@@ -1,16 +1,21 @@
 """Serving subsystem tests (SERVING.md): batch-manager invariants, the
-per-slot decode-cache machinery, and CPU smoke tests of the full
-continuous-batching loop (dense + MoE)."""
+per-slot decode-cache machinery, CPU smoke tests of the full
+continuous-batching loop (dense + MoE), the byte-identical golden pin of
+the co-located ServeReport, and traffic edge cases."""
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.engine import ConfigError, ServeConfig
+from repro.engine import ConfigError, DisaggConfig, ServeConfig
 from repro.models import decoder as dec
 from repro.serve import (BatchManager, Request, ServingSession,
-                         poisson_trace, replay_trace)
+                         poisson_trace, replay_trace, trace_requests)
+from repro.telemetry import LoadTrace
 
 # ---------------------------------------------------------------- manager
 
@@ -200,3 +205,116 @@ def test_serving_loop_smoke_moe_poisson():
     assert rep.overflow == 0.0
     assert rep.migrations >= 0                           # shadow mode runs
     assert rep.processed_tokens >= rep.gen_tokens > 0
+
+
+# ------------------------------------------------- golden determinism
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / \
+    "serve_report_colocated.json"
+_GOLDEN_ARRIVALS = [(0, 6, 5), (0, 4, 3), (2, 5, 4), (7, 6, 6), (9, 3, 3)]
+
+
+def _canonical_report(rep) -> dict:
+    """ServeReport.to_dict() minus every wall-clock-derived field — the
+    remainder is a pure function of (arch, serve config, seeds)."""
+    d = rep.to_dict()
+    for k in ("wall_s", "gen_tokens_per_s", "tokens_per_s",
+              "latency_ms", "ttft_ms"):
+        d.pop(k)
+    for r in d["per_request"]:
+        r.pop("latency_ms")
+        r.pop("ttft_ms")
+    return d
+
+
+@pytest.mark.parametrize("disagg", [None, DisaggConfig(enabled=False)],
+                         ids=["absent", "disabled"])
+def test_serve_report_golden_colocated(disagg):
+    """The co-located path is byte-identical to the pre-disaggregation
+    fixture, with disaggregation absent AND explicitly disabled — the
+    regression pin for the two-fleet refactor (DESIGN.md §13)."""
+    out = {}
+    for name, arch in (("dense", "qwen1.5-0.5b"),
+                       ("moe", "paper-gpt-32x1.3b")):
+        cfg = get_config(arch).smoke()
+        sess = ServingSession(cfg, ServeConfig(max_batch=3, max_seq=24),
+                              seed=0, disagg=disagg)
+        rep = sess.run(replay_trace(_GOLDEN_ARRIVALS, vocab=cfg.vocab,
+                                    seed=11))
+        assert "disagg" not in rep.to_dict()
+        out[name] = _canonical_report(rep)
+    blob = json.dumps(out, sort_keys=True, indent=1) + "\n"
+    assert blob == GOLDEN.read_text(), \
+        "co-located ServeReport diverged from the golden fixture"
+
+
+# ------------------------------------------------- traffic edge cases
+
+
+def test_traffic_empty_trace():
+    assert replay_trace([], vocab=64) == []
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    rep = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16)).run([])
+    assert rep.steps == 0 and not rep.records and rep.rejected == 0
+    d = rep.to_dict()
+    assert d["latency_ms"]["p50"] is None
+    assert d["ttft_ms"]["p99"] is None
+
+
+def test_traffic_single_request():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    rep = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16)).run(
+        replay_trace([(3, 4, 2)], vocab=cfg.vocab, seed=1))
+    (r,) = rep.records
+    assert r.n_generated == 2
+    assert r.arrival_step == r.admit_step == 3       # idle fast-forward
+    # 4 prompt feeds (first token samples on the last) + 1 more generated
+    assert rep.steps == 3 + 4 + 2 - 1
+    assert r.first_token_step == 3 + 4 - 1
+
+
+def test_traffic_burst_exceeds_total_slots():
+    """8 simultaneous arrivals into 2 slots: head-of-line FIFO admission,
+    nothing lost, admit order follows req_id order."""
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    arrivals = [(0, 4, 2)] * 8
+    rep = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16)).run(
+        replay_trace(arrivals, vocab=cfg.vocab, seed=2))
+    assert len(rep.records) == 8 and rep.rejected == 0
+    recs = sorted(rep.records, key=lambda r: r.req_id)
+    admits = [r.admit_step for r in recs]
+    assert admits == sorted(admits)                  # FIFO, in waves
+    assert admits[0] == 0 and admits[-1] > 0         # queue drained late
+
+
+def test_trace_requests_zero_load_raises():
+    empty = LoadTrace(steps=np.zeros((0,), np.int64),
+                      loads=np.zeros((0, 1, 4)))
+    with pytest.raises(ValueError):
+        trace_requests(empty, vocab=64)
+    silent = LoadTrace(steps=np.arange(4), loads=np.zeros((4, 1, 4)))
+    with pytest.raises(ValueError):
+        trace_requests(silent, vocab=64)
+
+
+def test_trace_requests_straddle_disagg_boundary():
+    """Non-stationary trace-shaped arrivals keep landing while earlier
+    requests are already across the KV-handoff boundary: the disaggregated
+    loop must conserve and finish every one."""
+    rng = np.random.default_rng(0)
+    trace = LoadTrace(steps=np.arange(10),
+                      loads=rng.uniform(1.0, 4.0, (10, 1, 4)))
+    reqs = trace_requests(trace, vocab=64, rate=0.8,
+                          prompt_len=4, gen_len=3, seed=3)
+    assert len(reqs) > 2                             # deterministic: seed 3
+    assert len({r.arrival_step for r in reqs}) > 1   # straddles steps
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    dg = DisaggConfig(enabled=True, prefill_slots=2, decode_slots=1,
+                      handoff_depth=1)
+    rep = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16),
+                         seed=0, disagg=dg).run(reqs)
+    assert len(rep.records) == len(reqs) and rep.rejected == 0
+    assert sorted(r.req_id for r in rep.records) == \
+        [r.req_id for r in reqs]
+    for rec, req in zip(sorted(rep.records, key=lambda r: r.req_id), reqs):
+        assert rec.n_generated == req.max_new
