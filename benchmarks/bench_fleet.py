@@ -1,0 +1,183 @@
+"""Fleet benchmark: elastic group scaling vs the static peak fleet on a
+diurnal workload (FLEET.md, DESIGN.md §14).
+
+Workload: an open-loop request stream whose Poisson arrival rate follows
+a sinusoidal *diurnal* envelope — peak demand needs the full fleet, the
+valley needs a fraction of it.  Both arms run the real serving admission
+machinery (``serve.BatchManager``: slots, KV budget, strict FIFO) at the
+manager level (no model step — the step clock is the time base, as in the
+tests/test_disagg.py harness):
+
+  * **static peak** — ``max_groups`` groups all day: the capacity any
+    fixed fleet must provision to meet the SLO at peak.
+  * **elastic** — the same physical width, admission-masked by a live
+    :class:`repro.fleet.FleetController` (``queue_depth`` policy):
+    groups admit under the peak, drain in the valley; a draining group's
+    in-flight sequences finish in place (drain grace).
+
+Asserted, aggregated over ``--n-seeds`` independent workloads (the
+ISSUE 8 acceptance bar):
+
+  * both arms serve every submitted request exactly once, in FIFO
+    admission order — drains lose and duplicate nothing;
+  * the elastic arm meets the same p99 queueing-wait SLO the static peak
+    fleet meets;
+  * the elastic arm's device-step cost is *strictly* lower.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet
+  PYTHONPATH=src python -m benchmarks.bench_fleet --smoke --out fleet.json
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.engine import FleetConfig, ServeConfig
+from repro.fleet import FleetController, FleetSignals
+from repro.serve import BatchManager, Request
+
+from .common import emit, make_main, register_bench
+
+MAX_GROUPS = 4
+SLOTS_PER_GROUP = 2
+PROMPT, GEN = 4, 8
+SLO_P99_WAIT_STEPS = 40.0
+
+
+def diurnal_requests(steps: int, peak_rate: float, seed: int,
+                     vocab: int = 64):
+    """Poisson arrivals under a sinusoidal day/night envelope: rate(t)
+    sweeps [0.1, 1.0] x peak_rate over one period of ``steps`` steps."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for t in range(steps):
+        rate = peak_rate * (0.55 + 0.45 * np.sin(2 * np.pi * t / steps))
+        for _ in range(rng.poisson(rate)):
+            reqs.append(Request(
+                req_id=len(reqs), arrival_step=t,
+                prompt=rng.integers(0, vocab, PROMPT), max_new=GEN))
+    return reqs
+
+
+def _simulate(requests, *, elastic: bool, seed: int,
+              scale_check_every: int = 8, drain_grace: int = 4,
+              max_steps: int = 20000) -> dict:
+    """Manager-level serve loop: admission, token accounting and (for the
+    elastic arm) live fleet control — no model step."""
+    width = MAX_GROUPS * SLOTS_PER_GROUP
+    bm = BatchManager(ServeConfig(max_batch=width, max_seq=PROMPT + GEN))
+    ctl = None
+    if elastic:
+        ctl = FleetController(
+            FleetConfig(enabled=True, scaling_policy="queue_depth",
+                        min_groups=1, max_groups=MAX_GROUPS,
+                        slots_per_group=SLOTS_PER_GROUP,
+                        scale_check_every=scale_check_every,
+                        drain_grace_steps=drain_grace,
+                        scale_up_threshold=0.9, scale_down_threshold=0.35),
+            num_experts=1, seed=seed)
+        bm.set_slot_limit(ctl.capacity)
+    for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
+        bm.submit(r)
+    finished, admit_order = [], []
+    step = 0
+    while bm.has_work() and step < max_steps:
+        before = {id(s) for s in bm.slots if s is not None}
+        bm.admit_ready(step)
+        for s in bm.slots:
+            if s is not None and id(s) not in before:
+                admit_order.append(s.request.req_id)
+        finished.extend(bm.observe(np.full(width, 3), step, 0.0))
+        if ctl is not None:
+            cap = ctl.capacity
+            ctl.observe(FleetSignals(
+                step=step,
+                utilization=bm.n_active / max(cap, 1),
+                queue_depth=sum(1 for r in bm.queue
+                                if r.arrival_step <= step),
+                active_slots=bm.n_active,
+                capacity=cap,
+                busy_above_capacity=bm.n_active_above(cap)), step)
+            bm.set_slot_limit(ctl.capacity)
+        step += 1
+    assert not bm.has_work(), "simulation hit max_steps with work left"
+    waits = [s.admit_step - s.request.arrival_step for s in finished]
+    device_steps = (ctl.summary()["device_steps"] if ctl is not None
+                    else MAX_GROUPS * step)
+    return {
+        "served": sorted(s.request.req_id for s in finished),
+        "admit_order": admit_order,
+        "steps": step,
+        "p99_wait": float(np.percentile(waits, 99)) if waits else 0.0,
+        "device_steps": int(device_steps),
+        "resizes": (ctl.summary()["admits"] + ctl.summary()["drains"]
+                    if ctl is not None else 0),
+        "peak_groups": (ctl.summary()["peak_groups"]
+                        if ctl is not None else MAX_GROUPS),
+    }
+
+
+def run(smoke: bool = False, n_seeds: int = 3, steps: int = 256,
+        peak_rate: float = 0.75, out: str = None):
+    if smoke:
+        n_seeds, steps = 2, 128
+    rows, agg = [], {"static_cost": 0, "elastic_cost": 0}
+    for seed in range(n_seeds):
+        reqs = diurnal_requests(steps, peak_rate, seed)
+        ids = sorted(r.req_id for r in reqs)
+        static = _simulate(reqs, elastic=False, seed=seed)
+        elastic = _simulate(reqs, elastic=True, seed=seed)
+        for arm, res in (("static", static), ("elastic", elastic)):
+            # conservation: every request served exactly once, FIFO —
+            # drains lose and duplicate nothing
+            assert res["served"] == ids, \
+                f"{arm} seed {seed}: served != submitted"
+            assert res["admit_order"] == sorted(res["admit_order"]), \
+                f"{arm} seed {seed}: admission violated FIFO"
+            emit("fleet", arm=arm, seed=seed, requests=len(ids),
+                 steps=res["steps"], p99_wait=round(res["p99_wait"], 2),
+                 device_steps=res["device_steps"],
+                 resizes=res["resizes"], peak_groups=res["peak_groups"])
+        rows.append({"seed": seed, "requests": len(ids),
+                     "static": static, "elastic": elastic})
+        agg["static_cost"] += static["device_steps"]
+        agg["elastic_cost"] += elastic["device_steps"]
+
+    # aggregate acceptance: elastic meets the SLO the static peak fleet
+    # meets, at strictly lower device-step cost
+    static_p99 = max(r["static"]["p99_wait"] for r in rows)
+    elastic_p99 = max(r["elastic"]["p99_wait"] for r in rows)
+    assert static_p99 <= SLO_P99_WAIT_STEPS, \
+        f"static peak fleet misses its own SLO ({static_p99})"
+    assert elastic_p99 <= SLO_P99_WAIT_STEPS, \
+        f"elastic fleet misses the SLO ({elastic_p99} steps p99 wait)"
+    assert agg["elastic_cost"] < agg["static_cost"], \
+        (f"elastic cost {agg['elastic_cost']} not below static "
+         f"{agg['static_cost']}")
+    saving = 1.0 - agg["elastic_cost"] / agg["static_cost"]
+    emit("fleet", arm="aggregate", n_seeds=n_seeds,
+         static_device_steps=agg["static_cost"],
+         elastic_device_steps=agg["elastic_cost"],
+         saving=round(saving, 4), slo_p99_wait=SLO_P99_WAIT_STEPS,
+         static_p99=round(static_p99, 2), elastic_p99=round(elastic_p99, 2))
+    doc = {"bench": "fleet", "n_seeds": n_seeds, "steps": steps,
+           "peak_rate": peak_rate, "slo_p99_wait": SLO_P99_WAIT_STEPS,
+           "aggregate": {**agg, "saving": round(saving, 4),
+                         "static_p99": static_p99,
+                         "elastic_p99": elastic_p99},
+           "rows": [{k: (v if not isinstance(v, dict)
+                         else {kk: vv for kk, vv in v.items()
+                               if kk not in ("served", "admit_order")})
+                     for k, v in r.items()} for r in rows]}
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print("wrote", out)
+    return doc
+
+
+main = make_main(register_bench("fleet", run))
+
+if __name__ == "__main__":
+    raise SystemExit(main())

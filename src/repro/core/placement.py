@@ -272,25 +272,32 @@ def asymmetric_placement(
     search optimizes the weighted makespan the scheduler will actually
     see.
     """
-    k = _check_sizes(rows, cols, num_experts)
     loads = np.asarray(loads, dtype=np.float64)
     assert loads.shape == (num_experts,)
     num_devices = rows * cols
+    max_hosts = num_devices
     if slot_budgets is not None:
         slot_budgets = np.asarray(slot_budgets, dtype=np.int64).ravel()
         if slot_budgets.shape != (num_devices,):
             raise ValueError(
                 f"slot_budgets must have one entry per device "
                 f"({num_devices}), got shape {slot_budgets.shape}")
-        if (slot_budgets < 1).any():
-            raise ValueError("slot_budgets must all be >= 1")
+        if (slot_budgets < 0).any():
+            raise ValueError("slot_budgets must all be >= 0")
+        if not (slot_budgets > 0).any():
+            raise ValueError("slot_budgets must have a positive entry")
+        # A zero budget marks a device that hosts nothing — e.g. a fleet
+        # group being drained (FLEET.md): its slots stay -1 and an expert
+        # can replicate across at most the positive-budget devices.
+        max_hosts = int((slot_budgets > 0).sum())
         k = int(slot_budgets.max())
         total_slots = int(slot_budgets.sum())
     else:
+        k = _check_sizes(rows, cols, num_experts)
         total_slots = rows * cols * k
 
     # -- Step 1: greedy replica counts (capped at one replica per device) ---
-    counts = greedy_replica_counts(loads, total_slots, num_devices)
+    counts = greedy_replica_counts(loads, total_slots, max_hosts)
 
     # -- Step 2: Monte-Carlo slot assignment (collision-free greedy) -------
     rng = np.random.default_rng(seed)

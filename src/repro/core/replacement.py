@@ -74,14 +74,24 @@ class ReplacementManager:
                  else float(self.weights.sum()))
         return float(np.sum(loads)) / denom
 
-    def observe(self, loads: np.ndarray) -> bool:
+    def observe(self, loads: np.ndarray,
+                step: Optional[int] = None) -> bool:
         """Feed one micro-batch's expert loads; returns True if the placement
-        was regenerated (caller must re-materialize params via redistribute)."""
+        was regenerated (caller must re-materialize params via redistribute).
+
+        ``step`` stamps the decision record with the caller's shared step
+        clock (the serving loop's step counter) instead of the manager's
+        internal observation count, so placement decisions interleave
+        deterministically with other step-stamped events (fleet resizes,
+        FLEET.md) in a ``ServeReport``.  The cadence check always runs on
+        the internal count — a manager observing every Nth serve step
+        still re-evaluates every ``check_every`` *observations*."""
         loads = np.asarray(loads, dtype=np.float64)
         self.ema = loads if self.ema is None else (
             self.cfg.ema_decay * self.ema + (1 - self.cfg.ema_decay) * loads
         )
         self.step += 1
+        clock = self.step if step is None else int(step)
         if self.step % self.cfg.check_every:
             return False
         predicted = self.ema
@@ -93,7 +103,7 @@ class ReplacementManager:
         # decision inputs, surfaced so serving stats can say *why* a
         # migration fired (TELEMETRY.md; consumed by serve.ServeReplacement)
         self.last_decision = {
-            "step": self.step,
+            "step": clock,
             "observed": [round(float(v), 4) for v in loads],
             "predicted": [round(float(v), 4) for v in predicted],
             "score": round(m / ideal, 4),

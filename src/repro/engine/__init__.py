@@ -30,10 +30,10 @@ from .registry import (
     get_placement_strategy,
     get_baseline_system,
 )
-from .config import (ConfigError, DeviceProfile, DisaggConfig, PlacementSpec,
-                     ReplicationConfig, RuntimeConfig, SchedulePolicy,
-                     ServeConfig, TelemetryConfig, profile_slot_budgets,
-                     profile_weights)
+from .config import (ConfigError, DeviceProfile, DisaggConfig, FleetConfig,
+                     PlacementSpec, ReplicationConfig, RuntimeConfig,
+                     SchedulePolicy, ServeConfig, TelemetryConfig,
+                     profile_slot_budgets, profile_weights)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -41,8 +41,8 @@ __all__ = [
     "placement_strategies", "baseline_systems",
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
-    "ConfigError", "DeviceProfile", "DisaggConfig", "PlacementSpec",
-    "SchedulePolicy",
+    "ConfigError", "DeviceProfile", "DisaggConfig", "FleetConfig",
+    "PlacementSpec", "SchedulePolicy",
     "ReplicationConfig", "RuntimeConfig", "ServeConfig", "TelemetryConfig",
     "MicroEPEngine", "profile_weights", "profile_slot_budgets",
 ]

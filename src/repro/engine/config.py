@@ -25,8 +25,8 @@ from typing import Any, Mapping, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ConfigError", "DeviceProfile", "DisaggConfig", "PlacementSpec",
-           "SchedulePolicy", "RuntimeConfig", "ServeConfig",
+__all__ = ["ConfigError", "DeviceProfile", "DisaggConfig", "FleetConfig",
+           "PlacementSpec", "SchedulePolicy", "RuntimeConfig", "ServeConfig",
            "TelemetryConfig", "ReplicationConfig", "profile_weights",
            "profile_slot_budgets"]
 
@@ -167,6 +167,18 @@ class DeviceProfile:
             raise ConfigError(
                 f"device profile {text!r}: weight part {w_str!r} is not a "
                 f"number (expected 'weight' or 'weight@slots')") from None
+        # reject malformed specs here, naming the offending entry — a
+        # zero/negative weight or slot count otherwise surfaces much later
+        # as an opaque LP/placement error
+        if not weight > 0 or not np.isfinite(weight):
+            raise ConfigError(
+                f"device profile {text!r}: weight must be a positive finite "
+                f"number, got {w_str!r}")
+        if slots is not None and slots < 1:
+            raise ConfigError(
+                f"device profile {text!r}: slots must be >= 1 — a zero-slot "
+                f"device cannot host any expert replica (omit '@slots' for "
+                f"an uncapped device)")
         return cls(weight=weight, slots=slots)
 
     @classmethod
@@ -930,6 +942,178 @@ class DisaggConfig:
         if self.decode_profiles is not None:
             flags += ["--decode-profiles",
                       ",".join(p.to_cli() for p in self.decode_profiles)]
+        return flags
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Elastic fleet control configuration (FLEET.md, DESIGN.md §14).
+
+    enabled              — admit/drain device groups at runtime on the
+                           serving step clock via the ``repro.fleet``
+                           controller.  False (default): the fleet is
+                           static and serving runs bit-identically to the
+                           pre-fleet path.
+    scaling_policy       — key of ``repro.fleet.scaling_policies``
+                           (built-ins: target_utilization, queue_depth,
+                           step_latency_slo).
+    min_groups           — floor on concurrently active device groups;
+                           drains never go below it.
+    max_groups           — ceiling on device groups; also sizes the fixed
+                           physical batch width (max_groups *
+                           slots_per_group decode slots) so elastic
+                           capacity changes never recompile the step.
+    scale_check_every    — serving steps between scaling-policy checks.
+    drain_grace_steps    — minimum steps between marking a group departing
+                           and removing it; a drain additionally waits for
+                           the group's decode slots to empty (sequences
+                           finish in place, never dropped).
+    slots_per_group      — decode slots each group contributes to the
+                           serving batch.
+    group_profiles       — :class:`DeviceProfile` tuple of *one* group's
+                           devices (every group is built from this mix;
+                           same forms as ``RuntimeConfig.device_profiles``).
+                           None = one weight-1 device per group.
+    scale_up_threshold   — policy pressure (utilization fraction, queue
+                           per-slot pressure, or latency/SLO ratio) above
+                           which a group is admitted.
+    scale_down_threshold — pressure below which a group is drained.
+    latency_slo_ms       — step-latency SLO for the step_latency_slo
+                           policy (required by it; pressure = observed
+                           step latency / SLO).
+    """
+
+    enabled: bool = False
+    scaling_policy: str = "target_utilization"
+    min_groups: int = 1
+    max_groups: int = 4
+    scale_check_every: int = 16
+    drain_grace_steps: int = 8
+    slots_per_group: int = 2
+    group_profiles: Optional[Tuple[DeviceProfile, ...]] = None
+    scale_up_threshold: float = 0.9
+    scale_down_threshold: float = 0.35
+    latency_slo_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if not isinstance(self.scaling_policy, str) or not self.scaling_policy:
+            raise ConfigError(
+                f"FleetConfig.scaling_policy must be a non-empty registry "
+                f"key, got {self.scaling_policy!r}")
+        for name in ("min_groups", "max_groups", "scale_check_every",
+                     "slots_per_group"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ConfigError(
+                    f"FleetConfig.{name} must be a positive int, got {v!r}")
+        if not isinstance(self.drain_grace_steps, (int, np.integer)) or \
+                self.drain_grace_steps < 0:
+            raise ConfigError(
+                f"FleetConfig.drain_grace_steps must be an int >= 0, "
+                f"got {self.drain_grace_steps!r}")
+        if self.max_groups < self.min_groups:
+            raise ConfigError(
+                f"FleetConfig.max_groups={self.max_groups} cannot be below "
+                f"min_groups={self.min_groups}")
+        if not 0 < self.scale_down_threshold < self.scale_up_threshold:
+            raise ConfigError(
+                f"FleetConfig thresholds must satisfy 0 < "
+                f"scale_down_threshold < scale_up_threshold, got "
+                f"{self.scale_down_threshold!r} / "
+                f"{self.scale_up_threshold!r}")
+        if self.latency_slo_ms is not None and not self.latency_slo_ms > 0:
+            raise ConfigError(
+                f"FleetConfig.latency_slo_ms must be > 0 (or None), "
+                f"got {self.latency_slo_ms!r}")
+        object.__setattr__(self, "group_profiles",
+                           _canonical_profiles(self.group_profiles))
+
+    @property
+    def devices_per_group(self) -> int:
+        return 1 if self.group_profiles is None else len(self.group_profiles)
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.group_profiles is not None:
+            d["group_profiles"] = [p.to_dict() for p in self.group_profiles]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FleetConfig":
+        return cls(**_known_fields(cls, d))
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "FleetConfig" = None) -> None:
+        d = defaults if defaults is not None else FleetConfig()
+        b = argparse.BooleanOptionalAction
+        g = parser.add_argument_group("fleet")
+        g.add_argument("--fleet", action=b, default=d.enabled,
+                       help="elastic fleet control: admit/drain device "
+                            "groups on the serving step clock (FLEET.md)")
+        g.add_argument("--scaling-policy", default=d.scaling_policy,
+                       help="scaling policy (registry key; built-ins: "
+                            "target_utilization, queue_depth, "
+                            "step_latency_slo)")
+        g.add_argument("--min-groups", type=int, default=d.min_groups)
+        g.add_argument("--max-groups", type=int, default=d.max_groups)
+        g.add_argument("--scale-check-every", type=int,
+                       default=d.scale_check_every)
+        g.add_argument("--drain-grace-steps", type=int,
+                       default=d.drain_grace_steps)
+        g.add_argument("--slots-per-group", type=int,
+                       default=d.slots_per_group)
+        g.add_argument("--group-profiles",
+                       default=(",".join(p.to_cli()
+                                         for p in d.group_profiles)
+                                if d.group_profiles else None),
+                       help="'weight[@slots]' device list of one fleet "
+                            "group (DESIGN.md §11 form); every group uses "
+                            "this mix")
+        g.add_argument("--scale-up-threshold", type=float,
+                       default=d.scale_up_threshold)
+        g.add_argument("--scale-down-threshold", type=float,
+                       default=d.scale_down_threshold)
+        g.add_argument("--latency-slo-ms", type=float,
+                       default=d.latency_slo_ms,
+                       help="step-latency SLO for the step_latency_slo "
+                            "scaling policy")
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "FleetConfig":
+        return cls(enabled=args.fleet,
+                   scaling_policy=args.scaling_policy,
+                   min_groups=args.min_groups,
+                   max_groups=args.max_groups,
+                   scale_check_every=args.scale_check_every,
+                   drain_grace_steps=args.drain_grace_steps,
+                   slots_per_group=args.slots_per_group,
+                   group_profiles=args.group_profiles,
+                   scale_up_threshold=args.scale_up_threshold,
+                   scale_down_threshold=args.scale_down_threshold,
+                   latency_slo_ms=args.latency_slo_ms)
+
+    def to_cli_args(self) -> list:
+        """Flag list such that ``from_cli_args(parser.parse_args(...))``
+        reproduces this config."""
+        flags = [
+            "--fleet" if self.enabled else "--no-fleet",
+            "--scaling-policy", self.scaling_policy,
+            "--min-groups", str(self.min_groups),
+            "--max-groups", str(self.max_groups),
+            "--scale-check-every", str(self.scale_check_every),
+            "--drain-grace-steps", str(self.drain_grace_steps),
+            "--slots-per-group", str(self.slots_per_group),
+            "--scale-up-threshold", str(self.scale_up_threshold),
+            "--scale-down-threshold", str(self.scale_down_threshold),
+        ]
+        if self.group_profiles is not None:
+            flags += ["--group-profiles",
+                      ",".join(p.to_cli() for p in self.group_profiles)]
+        if self.latency_slo_ms is not None:
+            flags += ["--latency-slo-ms", str(self.latency_slo_ms)]
         return flags
 
 

@@ -21,6 +21,13 @@ Disaggregation flags (``--disagg``, ``--prefill-slots``,
 ``--decode-profiles`` — DESIGN.md §13) split the session into a prefill
 fleet and a decode fleet joined by a bounded KV-handoff buffer.
 
+Elastic fleet flags (``--fleet``, ``--scaling-policy``, ``--min-groups`` /
+``--max-groups``, ``--scale-check-every``, ``--drain-grace-steps`` —
+FLEET.md, DESIGN.md §14) let the session admit and drain device groups at
+runtime; resize events surface in the report (``--json``).  Multi-host
+flags (``--coordinator``, ``--num-hosts``, ``--host-id``) initialize the
+JAX distributed runtime before any device work; the default is a no-op.
+
 Engine flags (``--placement``, ``--mode``, ``--sweeps``, ``--dtype``,
 ``--capacity-factor``, ...), serving flags (``--max-batch``, ``--max-seq``,
 ``--kv-budget``, ``--replacement``, ...) and telemetry flags
@@ -36,11 +43,12 @@ import argparse
 import json
 
 from ..configs import get_config
-from ..engine import (DisaggConfig, ReplicationConfig, RuntimeConfig,
-                      ServeConfig, TelemetryConfig)
+from ..engine import (DisaggConfig, FleetConfig, ReplicationConfig,
+                      RuntimeConfig, ServeConfig, TelemetryConfig)
 from ..serve import (ServingSession, load_trace, poisson_trace, replay_trace,
                      trace_requests)
-from .mesh import make_local_mesh
+from .mesh import (add_distributed_cli_args, make_local_mesh,
+                   maybe_initialize_distributed)
 
 
 def main(argv=None):
@@ -75,15 +83,25 @@ def main(argv=None):
     TelemetryConfig.add_cli_args(ap)
     ReplicationConfig.add_cli_args(ap)
     DisaggConfig.add_cli_args(ap)
+    FleetConfig.add_cli_args(ap)
+    add_distributed_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     serve_cfg = ServeConfig.from_cli_args(args)
     telemetry = TelemetryConfig.from_cli_args(args)
     replication = ReplicationConfig.from_cli_args(args)
     disagg = DisaggConfig.from_cli_args(args)
+    fleet = FleetConfig.from_cli_args(args)
     if telemetry.forecast_replacement and not serve_cfg.replacement:
         ap.error("--forecast-replacement selects the trigger policy of the "
                  "replacement hook; enable the hook with --replacement")
+    if fleet.enabled and disagg.enabled:
+        ap.error("--fleet and --disagg cannot be combined")
+    try:
+        # multi-host init must precede any other jax API (no-op on one host)
+        maybe_initialize_distributed(args)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -125,12 +143,19 @@ def main(argv=None):
                           telemetry=telemetry if telemetry.enabled else None,
                           replication=(replication if replication.enabled
                                        else None),
-                          disagg=disagg if disagg.enabled else None)
+                          disagg=disagg if disagg.enabled else None,
+                          fleet=fleet if fleet.enabled else None)
     report = sess.run(requests)
     if disagg.enabled:
         print(f"arch={cfg.name} disagg: prefill={disagg.prefill_slots} "
               f"decode={disagg.decode_slots} "
               f"handoff_depth={disagg.handoff_depth} "
+              f"max_seq={serve_cfg.max_seq} traffic={args.traffic}")
+    elif fleet.enabled:
+        print(f"arch={cfg.name} fleet: groups in "
+              f"[{fleet.min_groups}, {fleet.max_groups}] x "
+              f"{fleet.slots_per_group} slots, "
+              f"policy={fleet.scaling_policy} "
               f"max_seq={serve_cfg.max_seq} traffic={args.traffic}")
     else:
         print(f"arch={cfg.name} slots={serve_cfg.max_batch} "

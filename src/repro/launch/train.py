@@ -12,6 +12,9 @@ MicroEP scheduling per micro-batch.
 
 Engine flags (--placement, --mode, --sweeps, --dtype, --capacity-factor,
 --remat/--no-remat, ...) are the shared RuntimeConfig surface (ENGINE.md).
+Multi-host flags (--coordinator, --num-hosts, --host-id) call
+``jax.distributed.initialize`` before any device work; the single-host
+default is a no-op.
 """
 from __future__ import annotations
 
@@ -34,7 +37,8 @@ from ..telemetry import (LoadTraceRecorder, ReplacementPlanner,
 from ..train.loop import TrainState, make_train_step
 from ..train.metrics import MetricLogger
 from . import runtime as R
-from .mesh import make_local_mesh, make_production_mesh
+from .mesh import (add_distributed_cli_args, make_local_mesh,
+                   make_production_mesh, maybe_initialize_distributed)
 
 
 def main(argv=None):
@@ -60,10 +64,16 @@ def main(argv=None):
         ap, defaults=RuntimeConfig(dtype="float32", impl="ref", remat=False))
     TelemetryConfig.add_cli_args(ap)
     ReplicationConfig.add_cli_args(ap)
+    add_distributed_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
     telemetry = TelemetryConfig.from_cli_args(args)
     replication = ReplicationConfig.from_cli_args(args)
+    try:
+        # multi-host init must precede any other jax API (no-op on one host)
+        maybe_initialize_distributed(args)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -92,7 +92,7 @@ class TopologyController(ReplacementPlanner):
         score = lp_balance_ratio(self.placement, predicted,
                                  weights=self.weights)
         decision = {
-            "step": self.step,
+            "step": self.step if self.clock is None else self.clock,
             "observed": [round(float(v), 4) for v in observed],
             "predicted": [round(float(v), 4) for v in predicted],
             "score": round(score, 4),

@@ -124,12 +124,17 @@ def plan_topology(
             raise ValueError(
                 f"slot_budgets must have one entry per device "
                 f"({g_count}), got shape {budgets.shape}")
-        if (budgets < 1).any():
-            raise ValueError("slot_budgets must all be >= 1")
+        if (budgets < 0).any():
+            raise ValueError("slot_budgets must all be >= 0")
+        if not (budgets > 0).any():
+            raise ValueError("slot_budgets must have a positive entry")
     # budgets are capacities, not demands: with more slots than E distinct
-    # replicas can fill (small expert counts), the surplus stays empty
-    total = min(int(budgets.sum()), incumbent.num_experts * g_count)
-    counts = greedy_replica_counts(loads, total, g_count)
+    # replicas can fill (small expert counts), the surplus stays empty.
+    # Zero-budget devices (fleet drains, FLEET.md) host nothing, so an
+    # expert replicates across at most the positive-budget devices.
+    hosts_cap = int((budgets > 0).sum())
+    total = min(int(budgets.sum()), incumbent.num_experts * hosts_cap)
+    counts = greedy_replica_counts(loads, total, hosts_cap)
 
     # -- keep phase: anchor incumbent replicas, hot experts first ----------
     flat = incumbent.flat()
@@ -218,11 +223,14 @@ def replicated_placement(
             raise ValueError(
                 f"slot_budgets must have one entry per device "
                 f"({g_count}), got shape {budgets.shape}")
-        if (budgets < 1).any():
-            raise ValueError("slot_budgets must all be >= 1")
-    # capacities, not demands (same clamp as plan_topology)
-    total = min(int(budgets.sum()), num_experts * g_count)
-    counts = greedy_replica_counts(loads, total, g_count)
+        if (budgets < 0).any():
+            raise ValueError("slot_budgets must all be >= 0")
+        if not (budgets > 0).any():
+            raise ValueError("slot_budgets must have a positive entry")
+    # capacities, not demands (same clamp + zero-budget rule as plan_topology)
+    hosts_cap = int((budgets > 0).sum())
+    total = min(int(budgets.sum()), num_experts * hosts_cap)
+    counts = greedy_replica_counts(loads, total, hosts_cap)
     hosted = [[] for _ in range(g_count)]
     dev_load = np.zeros(g_count, np.float64)
     _pack_remaining(loads, counts, budgets, weights, hosted, dev_load)

@@ -88,6 +88,12 @@ class BatchManager:
         self.queue: Deque[Request] = deque()
         self.reserved_tokens = 0
         self.rejected: List[Request] = []
+        # elastic fleets (FLEET.md): admission restricted to the slot
+        # prefix [0, slot_limit).  None = every slot.  Shrinking the limit
+        # never evicts — sequences already above it finish in place (the
+        # drain-grace contract); the physical batch width (and compiled
+        # step shape) never changes.
+        self.slot_limit: Optional[int] = None
 
     # ------------------------------------------------------------ intake
     def submit(self, request: Request) -> bool:
@@ -116,6 +122,26 @@ class BatchManager:
         """Tokens actually resident in the KV caches right now."""
         return sum(s.fed for s in self.slots if s is not None)
 
+    @property
+    def admit_capacity(self) -> int:
+        """Slots admission may use right now (elastic fleets shrink this
+        below ``max_batch`` while a group is draining)."""
+        return (len(self.slots) if self.slot_limit is None
+                else self.slot_limit)
+
+    def set_slot_limit(self, limit: Optional[int]) -> None:
+        """Restrict admission to slots [0, limit) — the elastic fleet's
+        capacity mask (FLEET.md).  Never touches in-flight sequences."""
+        if limit is not None and not 0 <= limit <= len(self.slots):
+            raise ValueError(
+                f"slot_limit={limit} outside [0, {len(self.slots)}]")
+        self.slot_limit = limit
+
+    def n_active_above(self, limit: int) -> int:
+        """In-flight sequences occupying slots >= ``limit`` — a draining
+        group's stragglers; 0 means the drain may complete."""
+        return sum(1 for s in self.slots[limit:] if s is not None)
+
     def has_work(self) -> bool:
         return bool(self.queue) or self.n_active > 0
 
@@ -131,8 +157,9 @@ class BatchManager:
         mask = np.zeros(self.cfg.max_batch, bool)
         while self.queue and self.queue[0].arrival_step <= step:
             req = self.queue[0]
-            free = next((i for i, s in enumerate(self.slots) if s is None),
-                        None)
+            free = next((i for i, s in
+                         enumerate(self.slots[:self.admit_capacity])
+                         if s is None), None)
             if free is None:
                 break
             if self.reserved_tokens + req.kv_tokens > self.cfg.budget_tokens:
@@ -214,8 +241,9 @@ class BatchManager:
         reservation would exceed the budget (the sequence stays staged in
         the handoff buffer)."""
         assert self.role == "decode", "admit_transfer is decode-fleet only"
-        free = next((i for i, s in enumerate(self.slots) if s is None),
-                    None)
+        free = next((i for i, s in
+                     enumerate(self.slots[:self.admit_capacity])
+                     if s is None), None)
         if free is None:
             return None
         if self.reserved_tokens + seq.request.kv_tokens > \

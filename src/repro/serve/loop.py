@@ -46,8 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..engine import (DisaggConfig, ReplicationConfig, RuntimeConfig,
-                      ServeConfig, TelemetryConfig)
+from ..engine import (DisaggConfig, FleetConfig, ReplicationConfig,
+                      RuntimeConfig, ServeConfig, TelemetryConfig)
 from ..models import decoder as dec
 from ..telemetry import LoadTraceRecorder
 from .batching import BatchManager, HandoffBuffer, HandoffItem
@@ -79,6 +79,10 @@ class ServeReport:
     # transfer/occupancy/bytes stats, per-fleet balance.  None co-located —
     # the co-located to_dict() stays bit-identical to pre-disaggregation.
     disagg: Optional[dict] = None
+    # elastic-fleet runs only (FLEET.md, DESIGN.md §14): group counts,
+    # admit/drain events, moved slots + migration bytes, device-step cost.
+    # None on fixed-fleet runs — to_dict() stays bit-identical without it.
+    fleet: Optional[dict] = None
 
     def _ms(self, attr: str, q: float) -> Optional[float]:
         vals = [getattr(r, attr) * 1e3 for r in self.records]
@@ -112,6 +116,8 @@ class ServeReport:
         }
         if self.disagg is not None:
             out["disagg"] = self.disagg
+        if self.fleet is not None:
+            out["fleet"] = self.fleet
         return out
 
     def summary(self) -> str:
@@ -143,7 +149,14 @@ class ServeReport:
                 f"{self.disagg['handoff_depth']}, "
                 f"{self.disagg['handoff_bytes']} B staged, "
                 f"{self.disagg['prefill_stall_seq_steps']} stall seq-steps)"
-                if self.disagg is not None else ""))
+                if self.disagg is not None else "") + (
+                f"\nfleet: {self.fleet['active_groups']}/"
+                f"{self.fleet['max_groups']} groups active "
+                f"(peak {self.fleet['peak_groups']}), "
+                f"{self.fleet['admits']} admits / {self.fleet['drains']} "
+                f"drains, {self.fleet['migration_bytes']} B moved, "
+                f"{self.fleet['device_steps']} device-steps"
+                if self.fleet is not None else ""))
 
 
 @dataclasses.dataclass
@@ -189,7 +202,8 @@ class ServingSession:
                  mesh=None, seed: int = 0,
                  telemetry: Optional[TelemetryConfig] = None,
                  replication: Optional[ReplicationConfig] = None,
-                 disagg: Optional[DisaggConfig] = None):
+                 disagg: Optional[DisaggConfig] = None,
+                 fleet: Optional[FleetConfig] = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.telemetry = telemetry
@@ -199,6 +213,22 @@ class ServingSession:
         # as passing no DisaggConfig at all (golden-pinned bit-identity)
         self.disagg = disagg if (disagg is not None
                                  and disagg.enabled) else None
+        # elastic fleet (FLEET.md): same enabled=False convention.  The
+        # compiled batch width is pinned at the fleet's *maximum* capacity
+        # (max_groups x slots_per_group) and admission is masked down to
+        # the live capacity (BatchManager.slot_limit) — resizes never
+        # recompile the step.
+        self.fleet_cfg = fleet if (fleet is not None
+                                   and fleet.enabled) else None
+        if self.fleet_cfg is not None and self.disagg is not None:
+            raise ValueError(
+                "elastic fleet serving (--fleet) and disaggregated serving "
+                "(--disagg) cannot be combined in one session")
+        if self.fleet_cfg is not None:
+            width = (self.fleet_cfg.max_groups
+                     * self.fleet_cfg.slots_per_group)
+            self.serve_cfg = serve_cfg = dataclasses.replace(
+                serve_cfg, max_batch=width)
         self.run_cfg = run_cfg if run_cfg is not None else RuntimeConfig(
             dtype="float32", impl="ref", remat=False)
         self.mesh = mesh
@@ -290,6 +320,21 @@ class ServingSession:
                                 slot_budgets=budgets,
                                 replication=self.replication,
                                 fleet=fleet)
+
+    # --------------------------------------------------- elastic fleet
+    def _make_fleet_controller(self):
+        """One :class:`repro.fleet.FleetController` per run (FLEET.md):
+        group state and device-step accounting restart with the clock.
+        On an in-process mesh the regenerated placements run shadow (the
+        mesh cannot physically shrink), the same convention as shadow
+        replacement — migration pricing is still exact."""
+        from ..fleet import FleetController
+        n_exp = (self.cfg.num_experts * max(self.cfg.etp, 1)
+                 if self.cfg.moe else 1)
+        bpe = (3 * self.cfg.d_model * max(self.cfg.moe_d_ff, 1)
+               * jnp.dtype(self.dtype).itemsize) if self.cfg.moe else 0
+        return FleetController(self.fleet_cfg, n_exp,
+                               bytes_per_expert=bpe, seed=self.seed)
 
     # ------------------------------------------------------------ fleets
     def _fleet_serve_cfg(self, slots: int) -> ServeConfig:
@@ -420,6 +465,11 @@ class ServingSession:
         if self.disagg is not None:
             return self._run_disagg(requests, max_steps, warmup)
         bm = BatchManager(self.serve_cfg)
+        fleet_ctl = None
+        if self.fleet_cfg is not None:
+            from ..fleet import FleetSignals      # lazy: co-located runs
+            fleet_ctl = self._make_fleet_controller()
+            bm.set_slot_limit(fleet_ctl.capacity)
         for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
             bm.submit(r)
         if self.recorder is not None and len(self.recorder):
@@ -441,6 +491,7 @@ class ServingSession:
         bal_steps = 0
         overflow = 0.0
         processed = 0
+        lat_ema = 0.0                        # per-step wall EMA (fleet SLO)
         t0 = time.perf_counter()
 
         while bm.has_work() and (max_steps is None or step < max_steps):
@@ -449,6 +500,7 @@ class ServingSession:
                 if nxt_arr is not None and nxt_arr > step:
                     step = nxt_arr           # idle fast-forward (step clock)
             now = time.perf_counter() - t0
+            tick_wall = now
             for req in bm.queue:             # stamp wall arrival lazily
                 if req.arrival_step <= step and req.req_id not in arrival_wall:
                     arrival_wall[req.req_id] = now
@@ -484,6 +536,25 @@ class ServingSession:
                                                          step=step)
                     if new_table is not None:
                         state = self._migrate(new_table, state)
+            if fleet_ctl is not None:
+                step_ms = max(now - tick_wall, 0.0) * 1e3
+                lat_ema = (step_ms if lat_ema == 0.0
+                           else 0.8 * lat_ema + 0.2 * step_ms)
+                cap = fleet_ctl.capacity
+                if fleet_ctl.observe(FleetSignals(
+                        step=step,
+                        utilization=bm.n_active / max(cap, 1),
+                        queue_depth=sum(1 for r in bm.queue
+                                        if r.arrival_step <= step),
+                        step_latency_ms=lat_ema,
+                        active_slots=bm.n_active,
+                        capacity=cap,
+                        busy_above_capacity=bm.n_active_above(cap),
+                        expert_load=(np.asarray(eload, np.float64)
+                                     if self.n_moe else None)), step):
+                    # a resize fired: admission follows the new capacity
+                    # immediately; in-flight slots above it finish in place
+                    bm.set_slot_limit(fleet_ctl.capacity)
             step += 1
 
         wall = time.perf_counter() - t0
@@ -505,7 +576,8 @@ class ServingSession:
             rejected=len(bm.rejected),
             migration_events=([e for e in self.replacement.events[ev0:]
                                if e.get("fired")]
-                              if self.replacement else []))
+                              if self.replacement else []),
+            fleet=(fleet_ctl.summary() if fleet_ctl is not None else None))
 
     # ------------------------------------------------ disaggregated run
     def _run_disagg(self, requests: List[Request],

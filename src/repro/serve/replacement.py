@@ -122,18 +122,20 @@ class ServeReplacement:
                 step: Optional[int] = None) -> Optional[Placement]:
         """Feed one decode step's per-expert loads.  Returns the regenerated
         placement when the trigger fired (the caller must migrate), else
-        None.  ``step`` (the serving loop's step clock) re-stamps the
-        decision record; without it the manager's internal observe counter
-        is reported, which lags the clock across idle steps."""
+        None.  ``step`` (the serving loop's step clock) is threaded into
+        the manager so decision records carry the shared clock — fleet
+        resize events (FLEET.md) interleave deterministically with
+        migration decisions; without it the manager's internal observe
+        counter is reported, which lags the clock across idle steps."""
         load = np.asarray(expert_load, np.float64).ravel()
         if load.sum() <= 0:
             return None                     # idle step: nothing routed
         if self.forecast:
-            new = self.manager.observe(load)
+            new = self.manager.observe(load, step=step)
             decision = self.manager.last_decision
             fired = new is not None
         else:
-            fired = self.manager.observe(load)
+            fired = self.manager.observe(load, step=step)
             decision = self.manager.last_decision
             new = self.manager.placement if fired else None
         if decision is not None and (not self.events

@@ -87,6 +87,9 @@ class ReplacementPlanner:
         self.improve_margin = float(improve_margin)
         self.history_cap = int(history_cap)
         self.step = 0
+        # external step clock (serving loop steps) stamped by observe();
+        # None = stamp decisions with the internal observation count
+        self.clock: Optional[int] = None
         self.replacements = 0
         self.decisions: List[dict] = []
         self._history: List[np.ndarray] = []
@@ -101,10 +104,19 @@ class ReplacementPlanner:
     def history_size(self) -> int:
         return len(self._history)
 
-    def observe(self, loads: np.ndarray) -> Optional[Placement]:
+    def observe(self, loads: np.ndarray,
+                step: Optional[int] = None) -> Optional[Placement]:
         """Feed one step's layer-summed expert loads; returns the new
-        placement when a migration fires (caller re-materializes params)."""
+        placement when a migration fires (caller re-materializes params).
+
+        ``step`` stamps subsequent decision records with the caller's
+        shared step clock (the serving loop's step counter) so placement
+        decisions interleave deterministically with other step-stamped
+        events (fleet resizes, FLEET.md); the check cadence still runs on
+        the internal observation count."""
         loads = np.asarray(loads, np.float64).ravel()
+        if step is not None:
+            self.clock = int(step)
         self._history.append(loads)
         if len(self._history) > self.history_cap:
             del self._history[:-self.history_cap]
@@ -127,7 +139,7 @@ class ReplacementPlanner:
         score = lp_balance_ratio(self.placement, predicted,
                                  weights=self.weights)
         decision = {
-            "step": self.step,
+            "step": self.step if self.clock is None else self.clock,
             "observed": [round(float(v), 4) for v in observed],
             "predicted": [round(float(v), 4) for v in predicted],
             "score": round(score, 4),

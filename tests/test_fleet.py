@@ -1,0 +1,449 @@
+"""Elastic fleet control + capacity planning tests (FLEET.md,
+DESIGN.md §14).
+
+Covers the full subsystem stack:
+
+  * ``FleetConfig`` dict/CLI round-trips and validation;
+  * the scaling-policy registry (built-ins, custom registration, the
+    unknown-key error listing options);
+  * ``FleetController`` lifecycle — admit under pressure, LIFO drain,
+    drain-grace completion, the capacity floor, and event-step
+    monotonicity on the shared step clock (the ReplacementManager /
+    TopologyController decision records ride the same clock —
+    regression-tested here);
+  * zero-budget placement relaxation (a drained device hosts nothing);
+  * the capacity planner — golden sweep pin on the committed mini trace,
+    determinism, and the budget-monotonicity property (growing token
+    budgets never turns a feasible window infeasible, hypothesis-driven
+    via tests/hypothesis_compat.py);
+  * drain-under-load at the manager level: no request lost or
+    duplicated, FIFO admission (the tests/test_disagg.py harness
+    pattern);
+  * the serve-loop wiring (``ServingSession(fleet=)``) and the
+    multi-host launch scaffolding flags.
+"""
+import argparse
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core.lp import budget_feasible, replica_devices
+from repro.core.placement import asymmetric_placement
+from repro.core.replacement import ReplacementManager
+from repro.engine import (ConfigError, DeviceProfile, DisaggConfig,
+                          FleetConfig, RegistryError, ServeConfig)
+from repro.fleet import (FleetController, FleetCostModel, FleetSignals,
+                         StepTimeModel, plan_capacity, register_scaling_policy,
+                         scaling_policies, trace_windows)
+from repro.launch.mesh import (add_distributed_cli_args,
+                               maybe_initialize_distributed)
+from repro.serve import BatchManager, Request, ServingSession
+from repro.telemetry import LoadTrace
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+
+def _req(i, arrival, p=3, g=4, vocab=64):
+    rng = np.random.default_rng(i)
+    return Request(req_id=i, arrival_step=arrival,
+                   prompt=rng.integers(0, vocab, p), max_new=g)
+
+
+def _signals(step, ctl, *, utilization=0.0, queue=0, busy_above=0):
+    return FleetSignals(step=step, utilization=utilization,
+                        queue_depth=queue, capacity=ctl.capacity,
+                        active_slots=int(utilization * ctl.capacity),
+                        busy_above_capacity=busy_above)
+
+
+# ----------------------------------------------------------- FleetConfig
+
+
+def test_fleet_config_roundtrips():
+    fc = FleetConfig(enabled=True, scaling_policy="queue_depth",
+                     min_groups=2, max_groups=5, scale_check_every=8,
+                     drain_grace_steps=3, slots_per_group=4,
+                     group_profiles=(DeviceProfile(weight=2.0, slots=4),),
+                     scale_up_threshold=0.8, scale_down_threshold=0.3,
+                     latency_slo_ms=25.0)
+    assert FleetConfig.from_dict(fc.to_dict()) == fc
+    # CLI round-trip: to_cli_args -> argparse -> from_cli_args
+    ap = argparse.ArgumentParser()
+    FleetConfig.add_cli_args(ap)
+    assert FleetConfig.from_cli_args(ap.parse_args(fc.to_cli_args())) == fc
+    # defaults parse to the default config
+    assert FleetConfig.from_cli_args(ap.parse_args([])) == FleetConfig()
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ConfigError):
+        FleetConfig(min_groups=0)
+    with pytest.raises(ConfigError):
+        FleetConfig(min_groups=3, max_groups=2)
+    with pytest.raises(ConfigError):
+        FleetConfig(scale_up_threshold=0.3, scale_down_threshold=0.5)
+    with pytest.raises(ConfigError):
+        FleetConfig(latency_slo_ms=0.0)
+    with pytest.raises(ConfigError):
+        FleetConfig.from_dict({"enabled": True, "no_such_knob": 1})
+
+
+def test_device_profile_rejects_bad_entries():
+    # satellite: zero/negative weights and zero-slot fleets must be
+    # rejected with an error naming the bad entry
+    with pytest.raises(ConfigError, match=r"0@4"):
+        DeviceProfile.parse("0@4")
+    with pytest.raises(ConfigError, match=r"-2"):
+        DeviceProfile.parse("-2")
+    with pytest.raises(ConfigError, match=r"1@0"):
+        DeviceProfile.parse("1@0")
+    with pytest.raises(ConfigError):
+        DeviceProfile.parse("nan")
+
+
+# ------------------------------------------------------ policy registry
+
+
+def test_scaling_policy_registry():
+    assert set(scaling_policies.names()) >= {
+        "target_utilization", "queue_depth", "step_latency_slo"}
+    with pytest.raises(RegistryError, match="target_utilization"):
+        scaling_policies["no_such_policy"]
+    with pytest.raises(RegistryError):
+        FleetController(FleetConfig(enabled=True,
+                                    scaling_policy="no_such_policy"),
+                        num_experts=2)
+
+    @register_scaling_policy("always_up_test", override=True)
+    def always_up(signals, cfg):
+        return 2.0
+
+    ctl = FleetController(
+        FleetConfig(enabled=True, scaling_policy="always_up_test",
+                    min_groups=1, max_groups=2, scale_check_every=1),
+        num_experts=2)
+    events = ctl.observe(_signals(1, ctl), 1)
+    assert [e["kind"] for e in events] == ["admit"]
+
+
+def test_step_latency_policy_needs_slo():
+    ctl = FleetController(
+        FleetConfig(enabled=True, scaling_policy="step_latency_slo",
+                    min_groups=1, max_groups=2, scale_check_every=1),
+        num_experts=2)
+    with pytest.raises(ValueError, match="latency_slo_ms"):
+        ctl.observe(_signals(1, ctl), 1)
+
+
+# -------------------------------------------------------- controller
+
+
+def _controller(**kw):
+    cfg = FleetConfig(enabled=True, scaling_policy="queue_depth",
+                      min_groups=kw.pop("min_groups", 1),
+                      max_groups=kw.pop("max_groups", 3),
+                      slots_per_group=kw.pop("slots_per_group", 2),
+                      scale_check_every=kw.pop("scale_check_every", 4),
+                      drain_grace_steps=kw.pop("drain_grace_steps", 2),
+                      scale_up_threshold=0.9, scale_down_threshold=0.35,
+                      **kw)
+    return FleetController(cfg, num_experts=4, bytes_per_expert=8)
+
+
+def test_controller_admit_drain_lifecycle():
+    ctl = _controller()
+    assert (ctl.num_groups, ctl.capacity) == (1, 2)
+    # pressure above threshold on a check step: admit
+    ev = ctl.observe(_signals(4, ctl, utilization=1.0, queue=5), 4)
+    assert [e["kind"] for e in ev] == ["admit"] and ctl.num_groups == 2
+    assert ev[0]["moved_slots"] > 0          # water-filled onto new device
+    assert ev[0]["migration_bytes"] == ev[0]["moved_slots"] * 8
+    ev = ctl.observe(_signals(8, ctl, utilization=1.0, queue=5), 8)
+    assert ctl.num_groups == 3 == ctl.cfg.max_groups
+    # at max: pressure is ignored
+    assert ctl.observe(_signals(12, ctl, utilization=1.0, queue=9), 12) == []
+    # idle: drain starts (LIFO — the last-admitted group departs) but
+    # completes only after the grace period with no straggler sequences
+    ev = ctl.observe(_signals(16, ctl, utilization=0.1), 16)
+    assert [e["kind"] for e in ev] == ["drain"]
+    assert ev[0]["group"] == ctl.draining is not None
+    assert ctl.active_groups == 2            # admission capacity shrank
+    assert ctl.observe(_signals(17, ctl, busy_above=1), 17) == []
+    ev = ctl.observe(_signals(19, ctl, busy_above=0), 19)
+    assert [e["kind"] for e in ev] == ["drain_complete"]
+    assert ctl.num_groups == 2
+    s = ctl.summary()
+    assert (s["admits"], s["drains"], s["peak_groups"]) == (2, 1, 3)
+    steps = [e["step"] for e in s["events"]]
+    assert steps == sorted(steps)
+
+
+def test_controller_capacity_floor_refuses_drain():
+    ctl = _controller(min_groups=1, max_groups=2, slots_per_group=2)
+    # a 1-group fleet never drains below min_groups
+    assert ctl.observe(_signals(4, ctl, utilization=0.0), 4) == []
+    assert ctl.num_groups == 1
+
+
+def test_controller_min_fleet_must_host_experts():
+    cfg = FleetConfig(enabled=True, min_groups=1, max_groups=2,
+                      group_profiles=(DeviceProfile(slots=2),))
+    with pytest.raises(ValueError, match="cannot host"):
+        FleetController(cfg, num_experts=8)
+
+
+def test_controller_event_steps_monotone_with_replacement_clock():
+    # regression (satellite 3): fleet events and replacement decision
+    # records share one step clock and stay ordered when interleaved
+    ctl = _controller(scale_check_every=2)
+    from repro.core.placement import vanilla_placement
+    from repro.core.replacement import ReplacementConfig
+    mgr = ReplacementManager(vanilla_placement(1, 4, 4),
+                             ReplacementConfig(check_every=3,
+                                               threshold=1.01, seed=0))
+    merged, seen = [], None
+    rng = np.random.default_rng(0)
+    for step in range(24):
+        load = rng.uniform(0.1, 10.0, 4)
+        merged.extend(ctl.observe(
+            _signals(step, ctl, utilization=(1.0 if step < 12 else 0.0),
+                     queue=(6 if step < 12 else 0),
+                     busy_above=(0 if step % 5 else 1)), step))
+        mgr.observe(load, step=step)
+        if mgr.last_decision is not None and mgr.last_decision is not seen:
+            # a fresh decision record carries the *external* shared step
+            assert mgr.last_decision["step"] == step
+            seen = mgr.last_decision
+    steps = [e["step"] for e in merged]
+    assert len(merged) >= 3 and steps == sorted(steps)
+
+
+# ------------------------------------------- zero-budget placement
+
+
+def test_asymmetric_placement_zero_budgets():
+    loads = np.asarray([5.0, 3.0, 2.0, 1.0])
+    budgets = np.asarray([2, 2, 0, 2])        # device 2 drained
+    p = asymmetric_placement(1, 4, 4, loads, slot_budgets=budgets)
+    table = np.asarray(p.table).reshape(4, -1)
+    assert (table[2] < 0).all()               # drained device hosts nothing
+    hosted = set(int(x) for x in table[table >= 0])
+    assert hosted == {0, 1, 2, 3}             # every expert still placed
+    with pytest.raises(ValueError, match=">= 0"):
+        asymmetric_placement(1, 4, 4, loads,
+                             slot_budgets=np.asarray([2, 2, -1, 2]))
+    with pytest.raises(ValueError, match="positive"):
+        asymmetric_placement(1, 4, 4, loads,
+                             slot_budgets=np.zeros(4, np.int64))
+
+
+# ------------------------------------------------------------ planner
+
+
+def test_plan_capacity_golden_and_deterministic():
+    tr = LoadTrace.load(str(GOLDEN / "fleet_mini_trace.jsonl"))
+    kw = dict(slo_us=10_000.0,
+              time_model=StepTimeModel(us_per_token=394.65),
+              cost_model=FleetCostModel(), min_groups=1, max_groups=6,
+              window=16)
+    plan = plan_capacity(tr, **kw)
+    golden = json.loads((GOLDEN / "fleet_plan.json").read_text())
+    assert json.loads(json.dumps(plan.to_dict(), sort_keys=True)) == golden
+    # deterministic given (trace, cost model, SLO)
+    assert plan_capacity(tr, **kw).to_dict() == plan.to_dict()
+    # the recommendation is cheaper elastic than static and SLO-feasible
+    assert plan.best is not None and plan.best["feasible"]
+    assert plan.elastic_cost <= plan.static_cost
+
+
+def test_plan_capacity_infeasible_slo():
+    loads = np.full((8, 4), 1e9)
+    plan = plan_capacity(loads, slo_us=1.0,
+                         time_model=StepTimeModel(us_per_token=100.0),
+                         max_groups=2, window=4)
+    assert plan.best is None and plan.schedule == []
+    assert all(not c["feasible"] for c in plan.sweep)
+
+
+def test_step_time_model_calibration(tmp_path):
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({"rows": [
+        {"bench": "pipeline", "us": 1000.0, "tokens_per_device": 10},
+        {"bench": "pipeline", "us": 3000.0, "tokens_per_device": 10},
+        {"bench": "other", "us": 1.0, "tokens_per_device": 1},
+    ]}))
+    tm = StepTimeModel.from_bench(str(p))
+    assert tm.us_per_token == pytest.approx(200.0)   # median of 100, 300
+    with pytest.raises(ValueError):
+        StepTimeModel.from_bench(str(p), bench="missing")
+    with pytest.raises(ValueError):
+        StepTimeModel(us_per_token=200.0, fixed_us=50.0).token_budget(40.0)
+
+
+def test_cost_model_parse():
+    cm = FleetCostModel.parse("2@4=3.0,1=0.5", default_rate=1.0)
+    assert cm.rate(DeviceProfile(weight=2.0, slots=4)) == 3.0
+    assert cm.rate(DeviceProfile()) == 0.5
+    assert cm.rate(DeviceProfile(weight=7.0)) == 1.0   # default
+    with pytest.raises(ValueError, match="profile=rate"):
+        FleetCostModel.parse("2@4")
+    with pytest.raises(ConfigError, match="0@4"):
+        FleetCostModel.parse("0@4=1.0")
+
+
+@settings(deadline=None, max_examples=30,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8), st.integers(2, 5))
+def test_budget_feasibility_monotone_in_budgets(seed, e, g):
+    """Growing per-device token budgets never turns a feasible window
+    infeasible, and never increases utilization — the property the
+    elastic planner's admit schedule relies on."""
+    rng = np.random.default_rng(seed)
+    loads = rng.uniform(0.0, 100.0, e)
+    from repro.replication import replicated_placement
+    p = replicated_placement(1, g, e, loads=loads)
+    dev = replica_devices(p)
+    base = rng.uniform(10.0, 200.0, g)
+    ok0, util0 = budget_feasible(loads, dev, g, base)
+    grown = base * rng.uniform(1.0, 3.0, g)
+    ok1, util1 = budget_feasible(loads, dev, g, grown)
+    if ok0:
+        assert ok1, "growing budgets broke feasibility"
+    if np.isfinite(util0):
+        assert util1 <= util0 + 1e-6
+
+
+def test_trace_windows_shapes():
+    w = trace_windows(np.ones((10, 3)), 4)
+    assert [(s, n) for s, n, _ in w] == [(0, 4), (4, 4), (8, 2)]
+    w3 = trace_windows(np.ones((6, 2, 3)), 3)     # [T, L, E] layer-summed
+    assert np.allclose(w3[0][2], 2.0)
+    with pytest.raises(ValueError):
+        trace_windows(np.ones(5), 2)
+
+
+# ----------------------------------------- drain under load (manager)
+
+
+def test_drain_under_load_no_loss_fifo():
+    """The tests/test_disagg.py harness pattern: a burst admits onto 3
+    groups, the controller drains down under falling load, and every
+    request still finishes exactly once, admitted in FIFO order."""
+    ctl = _controller(min_groups=1, max_groups=3, slots_per_group=2,
+                      scale_check_every=2, drain_grace_steps=2)
+    width = 3 * 2
+    bm = BatchManager(ServeConfig(max_batch=width, max_seq=8))
+    bm.set_slot_limit(ctl.capacity)
+    reqs = [_req(i, arrival=0) for i in range(9)]
+    for r in reqs:
+        bm.submit(r)
+    finished, admit_order, drained_evs = [], [], []
+    for step in range(200):
+        if not bm.has_work():
+            break
+        before = {id(s) for s in bm.slots if s is not None}
+        bm.admit_ready(step)
+        for s in bm.slots:
+            if s is not None and id(s) not in before:
+                admit_order.append(s.request.req_id)
+        assert bm.n_active <= bm.cfg.max_batch
+        finished.extend(bm.observe(np.full(width, 7), step, 0.0))
+        queued = sum(1 for r in bm.queue if r.arrival_step <= step)
+        evs = ctl.observe(FleetSignals(
+            step=step, utilization=bm.n_active / max(ctl.capacity, 1),
+            queue_depth=queued, active_slots=bm.n_active,
+            capacity=ctl.capacity,
+            busy_above_capacity=bm.n_active_above(ctl.capacity)), step)
+        drained_evs.extend(evs)
+        bm.set_slot_limit(ctl.capacity)
+        # shrunk capacity never evicts: stragglers finish in place
+        assert bm.n_active_above(ctl.capacity) <= width
+    assert not bm.has_work()
+    assert sorted(s.request.req_id for s in finished) == list(range(9))
+    assert admit_order == sorted(admit_order)       # strict FIFO
+    kinds = [e["kind"] for e in drained_evs]
+    assert "drain" in kinds and "drain_complete" in kinds
+
+
+# ------------------------------------------------------ serve wiring
+
+
+def test_serving_session_fleet_smoke():
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    fc = FleetConfig(enabled=True, min_groups=1, max_groups=3,
+                     slots_per_group=2, scale_check_every=4,
+                     drain_grace_steps=2, scaling_policy="queue_depth")
+    sess = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16),
+                          fleet=fc)
+    # compiled width is pinned at the fleet maximum
+    assert sess.serve_cfg.max_batch == 6
+    reqs = [_req(i, arrival=0) for i in range(8)] \
+        + [_req(100 + i, arrival=60 + 4 * i) for i in range(3)]
+    rep = sess.run(reqs, max_steps=200)
+    ids = sorted(r.req_id for r in rep.records)
+    assert ids == sorted(r.req_id for r in reqs)     # no loss, no dupes
+    fl = rep.to_dict()["fleet"]
+    assert fl["admits"] >= 1 and fl["drains"] >= 1
+    steps = [e["step"] for e in fl["events"]]
+    assert steps == sorted(steps)
+    assert "fleet:" in rep.summary()
+
+
+def test_serving_session_fleet_disagg_exclusive():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    with pytest.raises(ValueError, match="cannot be combined"):
+        ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16),
+                       disagg=DisaggConfig(enabled=True),
+                       fleet=FleetConfig(enabled=True))
+
+
+def test_serve_report_fleet_absent_by_default():
+    # fixed-fleet reports must not grow a "fleet" key (golden bit-identity)
+    from repro.serve.loop import ServeReport
+    rep = ServeReport(records=[], steps=0, wall_s=0.0, gen_tokens=0,
+                      processed_tokens=0, mean_balance=None, overflow=0.0,
+                      migrations=0, migrated_bytes=0, rejected=0)
+    assert "fleet" not in rep.to_dict()
+
+
+# ------------------------------------------------------ multi-host
+
+
+def _dist_args(argv):
+    ap = argparse.ArgumentParser()
+    add_distributed_cli_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_distributed_flags_default_noop():
+    args = _dist_args([])
+    assert (args.num_hosts, args.host_id, args.coordinator) == (1, 0, None)
+    assert maybe_initialize_distributed(args) is False
+
+
+def test_distributed_flags_validation():
+    with pytest.raises(ValueError, match="--num-hosts"):
+        maybe_initialize_distributed(_dist_args(["--num-hosts", "0"]))
+    with pytest.raises(ValueError, match="--host-id"):
+        maybe_initialize_distributed(_dist_args(
+            ["--num-hosts", "2", "--host-id", "2",
+             "--coordinator", "h:1234"]))
+    with pytest.raises(ValueError, match="--coordinator"):
+        maybe_initialize_distributed(_dist_args(
+            ["--num-hosts", "2", "--host-id", "0"]))
+    with pytest.raises(ValueError, match="--num-hosts > 1"):
+        maybe_initialize_distributed(_dist_args(
+            ["--coordinator", "h:1234"]))
+
+
+def test_launch_serve_rejects_fleet_plus_disagg(capsys):
+    from repro.launch import serve as serve_cli
+    with pytest.raises(SystemExit):
+        serve_cli.main(["--arch", "qwen1.5-0.5b", "--smoke",
+                        "--fleet", "--disagg"])
+    assert "cannot be combined" in capsys.readouterr().err
