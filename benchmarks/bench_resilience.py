@@ -1,0 +1,240 @@
+"""Resilience benchmark: a mid-trace group crash + a straggler window on
+a replay workload, recovered live (RESILIENCE.md, DESIGN.md §15).
+
+Workload: steady Poisson arrivals served by the real admission machinery
+(``serve.BatchManager``) under a fixed fleet of a live
+:class:`repro.fleet.FleetController` (no model step — the step clock is
+the time base, as in bench_fleet / tests/test_disagg.py), with drifting
+Zipf expert loads feeding the controller's forecast.  A scripted
+:class:`repro.resilience.FaultPlan` opens a straggler window mid-trace
+and then crashes the newest group; recovery runs the real path —
+:func:`recover_from_crash` (evict, zero-budget emergency re-placement,
+FIFO-head re-enqueue) and :class:`StragglerMitigator` (latency-EWMA LP
+weight deflation + restore).
+
+Asserted per seed (the ISSUE 9 acceptance bar):
+
+  * **zero lost / duplicated requests** — every submitted request is
+    served exactly once, crash victims included (retry accounting);
+  * **FIFO admission preserved across recovery** — the *final*
+    admission per request id is in arrival order: re-prefills go to the
+    head of the queue, never behind later arrivals;
+  * **post-recovery mean balance <= 1.1x the survivor-fleet exact LPP-1
+    optimum** — the emergency placement (built once at crash time from
+    the load forecast) stays within 10% of an oracle that re-solves the
+    budgeted placement on every step's true loads;
+  * the straggler's weight was deflated during its window and restored
+    after it — degraded-mode scheduling is transient, not sticky.
+
+  PYTHONPATH=src python -m benchmarks.bench_resilience
+  PYTHONPATH=src python -m benchmarks.bench_resilience --smoke --out r.json
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.placement import asymmetric_placement
+from repro.engine import DeviceProfile, FleetConfig, ResilienceConfig, \
+    ServeConfig
+from repro.fleet import FleetController, FleetSignals
+from repro.resilience import (FaultInjector, FaultPlan, RetryTracker,
+                              StragglerMitigator, recover_from_crash)
+from repro.serve import BatchManager, Request
+from repro.telemetry import lp_balance_ratio
+
+from .common import emit, make_main, register_bench
+
+GROUPS = 3
+SLOTS_PER_GROUP = 2
+NUM_EXPERTS = 8
+PROMPT, GEN = 4, 8
+BASE_STEP_MS = 10.0
+BALANCE_BOUND = 1.1         # achieved <= 1.1x survivor-fleet LPP-1 optimum
+
+
+def steady_requests(steps: int, rate: float, seed: int, vocab: int = 64):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for t in range(steps):
+        for _ in range(rng.poisson(rate)):
+            reqs.append(Request(
+                req_id=len(reqs), arrival_step=t,
+                prompt=rng.integers(0, vocab, PROMPT), max_new=GEN))
+    return reqs
+
+
+def drifting_loads(steps: int, seed: int) -> np.ndarray:
+    """float64[steps, E]: Zipf-skewed expert loads whose hot expert
+    rotates slowly — the forecastable drift regime (TELEMETRY.md)."""
+    rng = np.random.default_rng(seed + 100)
+    base = 1.0 / (1.0 + np.arange(NUM_EXPERTS))
+    out = np.empty((steps, NUM_EXPERTS))
+    for t in range(steps):
+        rot = np.roll(base, (t // 40) % NUM_EXPERTS)
+        out[t] = 1000.0 * rot * rng.uniform(0.8, 1.25, NUM_EXPERTS)
+    return out
+
+
+def _simulate(requests, loads, *, crash_step: int, straggler_step: int,
+              straggler_window: int, seed: int,
+              max_steps: int = 20000) -> dict:
+    """Manager-level serve loop with live fault injection + recovery."""
+    width = GROUPS * SLOTS_PER_GROUP
+    # enough slot headroom that the survivor fleet stays feasible after
+    # a crash (the capacity floor is tested elsewhere), but tight enough
+    # (5 < E per device) that survivors cannot fully replicate — the
+    # post-crash balance genuinely depends on the emergency placement
+    ctl = FleetController(
+        FleetConfig(enabled=True, min_groups=2, max_groups=GROUPS,
+                    slots_per_group=SLOTS_PER_GROUP,
+                    scale_check_every=10 ** 6,
+                    group_profiles=(DeviceProfile(weight=1.0,
+                                                  slots=5),)),
+        num_experts=NUM_EXPERTS, initial_groups=GROUPS, seed=seed,
+        loads=loads[0])
+    rc = ResilienceConfig(enabled=True, seed=seed,
+                          crash_steps=(crash_step,),
+                          straggler_steps=(straggler_step,),
+                          straggler_window=straggler_window,
+                          max_retries=3)
+    injector = FaultInjector(FaultPlan.from_config(rc))
+    tracker = RetryTracker(rc.max_retries)
+    mitigator = StragglerMitigator(rc.straggler_threshold)
+    bm = BatchManager(ServeConfig(max_batch=width, max_seq=PROMPT + GEN))
+    bm.set_slot_limit(ctl.capacity)
+    for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
+        bm.submit(r)
+
+    finished = []
+    deflated_steps, achieved, oracle = [], [], []
+    crashes = requeues = 0
+    fifo_ok = True
+    step = 0
+    while bm.has_work() and step < max_steps:
+        sf = injector.tick(step, [g.gid for g in ctl.groups])
+        for _ in range(sf.crashes):
+            rec = recover_from_crash(bm, ctl, tracker, step)
+            crashes += 1
+            requeues += len(rec.requeued)
+        # FIFO across recovery: head-of-queue requeue keeps the queue in
+        # global (arrival, id) order at all times, and BatchManager only
+        # ever admits from the head — so admission order follows arrival
+        # order among the requests actually waiting
+        q = [(r.arrival_step, r.req_id) for r in bm.queue]
+        fifo_ok = fifo_ok and q == sorted(q)
+        bm.admit_ready(step)
+        finished.extend(bm.observe(np.full(width, 3), step, 0.0))
+        # degraded-mode scheduling: per-group latency EWMA -> LP weight
+        mult = mitigator.observe(
+            {g.gid: BASE_STEP_MS * sf.straggler_factors.get(g.gid, 1.0)
+             for g in ctl.groups})
+        for gid, m in mult.items():
+            ctl.set_weight_override(gid, m)
+        if any(m < 1.0 for m in mult.values()):
+            deflated_steps.append(step)
+        load_t = loads[min(step, len(loads) - 1)]
+        cap = ctl.capacity
+        ctl.observe(FleetSignals(
+            step=step, utilization=bm.n_active / max(cap, 1),
+            queue_depth=sum(1 for r in bm.queue if r.arrival_step <= step),
+            active_slots=bm.n_active, capacity=cap,
+            busy_above_capacity=bm.n_active_above(cap),
+            expert_load=load_t), step)
+        bm.set_slot_limit(ctl.capacity)
+        # post-recovery balance: the emergency placement (fixed at crash
+        # time) vs an oracle re-solving the survivor placement per step
+        if crashes and step > crash_step and not sf.straggler_factors:
+            achieved.append(lp_balance_ratio(ctl.placement, load_t,
+                                             weights=ctl._weights()))
+            ora = asymmetric_placement(
+                1, ctl.placement.num_devices, NUM_EXPERTS, load_t,
+                seed=seed + step, num_samples=64,
+                slot_budgets=ctl._budgets(), weights=ctl._weights())
+            oracle.append(lp_balance_ratio(ora, load_t,
+                                           weights=ctl._weights()))
+        step += 1
+    assert not bm.has_work(), "simulation hit max_steps with work left"
+    return {
+        "served": sorted(s.request.req_id for s in finished),
+        "failed": sorted(r.req_id for r in tracker.failed),
+        "fifo_ok": fifo_ok,
+        "steps": step,
+        "crashes": crashes,
+        "requeues": requeues,
+        "deflated_steps": deflated_steps,
+        "mean_balance_post": float(np.mean(achieved)) if achieved else None,
+        "oracle_balance_post": float(np.mean(oracle)) if oracle else None,
+        "capacity_end": ctl.capacity,
+        "overrides_end": dict(ctl.weight_overrides),
+    }
+
+
+def run(smoke: bool = False, n_seeds: int = 3, steps: int = 200,
+        rate: float = 0.4, out: str = None):
+    if smoke:
+        n_seeds, steps = 2, 120
+    crash_step = steps // 2
+    straggler_step = steps // 5
+    straggler_window = max(steps // 8, 8)
+    rows = []
+    for seed in range(n_seeds):
+        reqs = steady_requests(steps, rate, seed)
+        loads = drifting_loads(steps * 4, seed)
+        ids = sorted(r.req_id for r in reqs)
+        res = _simulate(reqs, loads, crash_step=crash_step,
+                        straggler_step=straggler_step,
+                        straggler_window=straggler_window, seed=seed)
+        # zero lost / duplicated: served + failed partitions the submitted
+        # set, and nothing appears twice
+        assert sorted(res["served"] + res["failed"]) == ids, \
+            f"seed {seed}: served+failed != submitted (loss or duplicate)"
+        assert res["crashes"] == 1 and res["requeues"] >= 0
+        assert res["fifo_ok"], \
+            f"seed {seed}: admission violated FIFO across recovery"
+        # straggler deflated inside its window, restored by the end
+        assert res["deflated_steps"], f"seed {seed}: straggler not deflated"
+        assert res["deflated_steps"][0] >= straggler_step
+        assert not res["overrides_end"], \
+            f"seed {seed}: weight overrides not restored"
+        # post-recovery balance within the bound of the per-step oracle
+        ach, ora = res["mean_balance_post"], res["oracle_balance_post"]
+        assert ach is not None and ora is not None
+        assert ach <= BALANCE_BOUND * ora, \
+            (f"seed {seed}: post-recovery balance {ach:.4f} above "
+             f"{BALANCE_BOUND}x survivor-fleet optimum {ora:.4f}")
+        emit("resilience", seed=seed, requests=len(ids),
+             steps=res["steps"], crashes=res["crashes"],
+             requeues=res["requeues"], failed=len(res["failed"]),
+             deflated_steps=len(res["deflated_steps"]),
+             balance_post=round(ach, 4), oracle_post=round(ora, 4),
+             capacity_end=res["capacity_end"])
+        rows.append({"seed": seed, "requests": len(ids),
+                     **{k: v for k, v in res.items()
+                        if k not in ("served", "failed",
+                                     "deflated_steps")},
+                     "deflated_steps": len(res["deflated_steps"])})
+    gap = max(r["mean_balance_post"] / r["oracle_balance_post"]
+              for r in rows)
+    emit("resilience", seed="aggregate", n_seeds=n_seeds,
+         crash_step=crash_step, straggler_step=straggler_step,
+         worst_balance_gap=round(gap, 4), bound=BALANCE_BOUND)
+    doc = {"bench": "resilience", "n_seeds": n_seeds, "steps": steps,
+           "rate": rate, "crash_step": crash_step,
+           "straggler_step": straggler_step,
+           "straggler_window": straggler_window,
+           "bound": BALANCE_BOUND,
+           "aggregate": {"worst_balance_gap": round(gap, 4)},
+           "rows": rows}
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print("wrote", out)
+    return doc
+
+
+main = make_main(register_bench("resilience", run))
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,6 @@
-"""Checkpointing."""
-from .ckpt import save_checkpoint, restore_checkpoint, latest_checkpoint
+"""Checkpointing (hardened restore path: RESILIENCE.md)."""
+from .ckpt import (CheckpointError, latest_checkpoint, restore_checkpoint,
+                   restore_latest, save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]
+__all__ = ["CheckpointError", "save_checkpoint", "restore_checkpoint",
+           "restore_latest", "latest_checkpoint"]

@@ -6,18 +6,31 @@ pickling differences.  Sharded arrays are gathered to host before writing —
 appropriate at the scales this repo trains for real (examples ~100M); a
 production deployment on real pods would plug an async, per-shard writer
 behind the same interface.
+
+Hardening (RESILIENCE.md): a corrupt or truncated npz raises
+:class:`CheckpointError` naming the file instead of an opaque zip error;
+``latest_checkpoint(valid_only=True)`` skips unreadable steps; and
+:func:`restore_latest` walks backwards to the newest checkpoint that both
+opens and restores — the fallback-to-previous-valid-step recovery path.
+Restoring across a placement/fleet change composes with
+``repro.resilience.reshard.restore_resharded``.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]
+__all__ = ["CheckpointError", "save_checkpoint", "restore_checkpoint",
+           "restore_latest", "latest_checkpoint"]
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file is corrupt, truncated, or schema-incompatible."""
 
 
 def _path_str(path) -> str:
@@ -48,17 +61,39 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     return base + ".npz"
 
 
-def restore_checkpoint(path: str, template: Any) -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
-    with np.load(path) as data:
-        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+def _open_payload(path: str):
+    """np.load with corrupt/truncated files mapped to CheckpointError
+    naming the file (a truncated zip fails at the central directory; a
+    damaged member fails when its array is read)."""
+    try:
+        return np.load(path)
+    except Exception as e:                    # BadZipFile/OSError/ValueError
+        raise CheckpointError(
+            f"checkpoint {path!r} is corrupt or truncated: {e}") from e
+
+
+def restore_checkpoint(path: str, template: Any, *,
+                       validate_shapes: bool = True) -> Any:
+    """Restore into the structure of ``template``.
+
+    ``validate_shapes=False`` skips the per-leaf shape check (dtypes are
+    still cast) — for callers that reshard the result across a placement
+    change (``resilience.reshard.restore_resharded``) before shapes can
+    match."""
+    with _open_payload(path) as data:
+        flat, _ = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for p, leaf in flat:
             key = _path_str(p)
             if key not in data:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
-            arr = data[key]
-            if arr.shape != tuple(np.shape(leaf)):
+            try:
+                arr = data[key]
+            except Exception as e:
+                raise CheckpointError(
+                    f"checkpoint {path!r} is corrupt or truncated "
+                    f"(leaf {key!r}): {e}") from e
+            if validate_shapes and arr.shape != tuple(np.shape(leaf)):
                 raise ValueError(
                     f"shape mismatch at {key}: ckpt {arr.shape} vs "
                     f"template {np.shape(leaf)}")
@@ -67,14 +102,50 @@ def restore_checkpoint(path: str, template: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
+def _checkpoint_steps(directory: str) -> List[Tuple[int, str]]:
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    out = []
     for name in os.listdir(directory):
         m = re.fullmatch(r"ckpt_(\d+)\.npz", name)
         if m:
-            step = int(m.group(1))
-            if best is None or step > best[0]:
-                best = (step, os.path.join(directory, name))
-    return best[1] if best else None
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    return sorted(out)
+
+
+def _readable(path: str) -> bool:
+    try:
+        with _open_payload(path) as data:
+            for key in data.files:
+                data[key]                     # force every member through
+        return True
+    except CheckpointError:
+        return False
+
+
+def latest_checkpoint(directory: str,
+                      valid_only: bool = False) -> Optional[str]:
+    """Newest checkpoint path in ``directory`` (None if there is none).
+    ``valid_only=True`` additionally requires the file to be readable,
+    skipping corrupt/truncated steps (RESILIENCE.md)."""
+    for _step, path in reversed(_checkpoint_steps(directory)):
+        if not valid_only or _readable(path):
+            return path
+    return None
+
+
+def restore_latest(directory: str, template: Any) -> Tuple[Any, str]:
+    """Restore the newest checkpoint that actually restores, walking
+    backwards over corrupt/truncated steps (the fallback-to-previous-
+    valid-step path).  Returns ``(tree, path)``; raises
+    :class:`CheckpointError` when no step in ``directory`` is usable."""
+    steps = _checkpoint_steps(directory)
+    skipped = []
+    for _step, path in reversed(steps):
+        try:
+            return restore_checkpoint(path, template), path
+        except CheckpointError:
+            skipped.append(path)
+    raise CheckpointError(
+        f"no restorable checkpoint in {directory!r} "
+        f"({len(steps)} candidate(s), corrupt: {skipped})")

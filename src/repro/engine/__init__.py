@@ -31,9 +31,9 @@ from .registry import (
     get_baseline_system,
 )
 from .config import (ConfigError, DeviceProfile, DisaggConfig, FleetConfig,
-                     PlacementSpec, ReplicationConfig, RuntimeConfig,
-                     SchedulePolicy, ServeConfig, TelemetryConfig,
-                     profile_slot_budgets, profile_weights)
+                     PlacementSpec, ReplicationConfig, ResilienceConfig,
+                     RuntimeConfig, SchedulePolicy, ServeConfig,
+                     TelemetryConfig, profile_slot_budgets, profile_weights)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -43,6 +43,7 @@ __all__ = [
     "get_placement_strategy", "get_baseline_system",
     "ConfigError", "DeviceProfile", "DisaggConfig", "FleetConfig",
     "PlacementSpec", "SchedulePolicy",
-    "ReplicationConfig", "RuntimeConfig", "ServeConfig", "TelemetryConfig",
+    "ReplicationConfig", "ResilienceConfig", "RuntimeConfig", "ServeConfig",
+    "TelemetryConfig",
     "MicroEPEngine", "profile_weights", "profile_slot_budgets",
 ]

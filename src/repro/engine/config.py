@@ -1117,6 +1117,216 @@ class FleetConfig:
         return flags
 
 
+def _canonical_steps(value, name: str) -> Tuple[int, ...]:
+    """Canonicalise a step list: tuple/list of ints or a 'a,b,c' CSV
+    string (CLI form) -> sorted tuple of distinct non-negative ints."""
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        value = [s for s in value.split(",") if s.strip()]
+    try:
+        steps = sorted({int(v) for v in value})
+    except (TypeError, ValueError):
+        raise ConfigError(
+            f"{name} must be ints or a comma-separated int list, "
+            f"got {value!r}")
+    if steps and steps[0] < 0:
+        raise ConfigError(f"{name} entries must be >= 0, got {steps[0]}")
+    return tuple(steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Fault injection + recovery configuration (RESILIENCE.md,
+    DESIGN.md §15).
+
+    enabled              — arm the fault injector and recovery machinery
+                           on the serving step clock.  False (default):
+                           serving runs bit-identically to the
+                           pre-resilience path (golden fixture pin).
+    seed                 — RNG seed for the random-rate fault draws
+                           (scripted ``*_steps`` events are exact and
+                           need no seed).
+    crash_steps          — serving steps at which the newest live device
+                           group crashes unplanned: its capacity vanishes
+                           *now* and in-flight requests on it lose their
+                           KV (contrast FLEET.md graceful drains).
+    crash_rate           — per-step probability of such a crash.
+    straggler_steps      — steps at which a straggler window opens on one
+                           live group: its step latency inflates by
+                           ``straggler_factor`` for ``straggler_window``
+                           steps, then recovers.
+    straggler_rate       — per-step probability of a straggler onset.
+    straggler_factor     — step-latency inflation of a straggling group.
+    straggler_window     — straggler duration in serving steps.
+    straggler_threshold  — a group whose step-latency EWMA exceeds this
+                           multiple of the fleet median has its LP weight
+                           deflated (degraded-mode scheduling, DESIGN.md
+                           §11 weighted LP); restored on recovery.
+    max_retries          — crash victims re-enqueue at the FIFO head for
+                           re-prefill at most this many times before the
+                           explicit ``failed`` terminal state (never
+                           silent loss).
+    transfer_fail_steps  — steps on which every disagg handoff-transfer
+                           attempt fails (SERVING.md handoff buffer).
+    transfer_fail_rate   — per-attempt probability of a transfer failure.
+    retry_backoff_steps  — base of the capped exponential backoff between
+                           transfer retries (backoff = base * 2^(n-1)).
+    max_transfer_retries — cap on the backoff *exponent*; retries
+                           themselves never stop — back-pressure, not
+                           drop.
+    """
+
+    enabled: bool = False
+    seed: int = 0
+    crash_steps: Tuple[int, ...] = ()
+    crash_rate: float = 0.0
+    straggler_steps: Tuple[int, ...] = ()
+    straggler_rate: float = 0.0
+    straggler_factor: float = 4.0
+    straggler_window: int = 16
+    straggler_threshold: float = 2.0
+    max_retries: int = 3
+    transfer_fail_steps: Tuple[int, ...] = ()
+    transfer_fail_rate: float = 0.0
+    retry_backoff_steps: int = 2
+    max_transfer_retries: int = 5
+
+    def __post_init__(self):
+        for name in ("crash_steps", "straggler_steps", "transfer_fail_steps"):
+            object.__setattr__(self, name, _canonical_steps(
+                getattr(self, name), f"ResilienceConfig.{name}"))
+        for name in ("crash_rate", "straggler_rate", "transfer_fail_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ConfigError(
+                    f"ResilienceConfig.{name} must be in [0, 1], got {v!r}")
+        if not self.straggler_factor > 1.0:
+            raise ConfigError(
+                f"ResilienceConfig.straggler_factor must be > 1, "
+                f"got {self.straggler_factor!r}")
+        if not self.straggler_threshold > 1.0:
+            raise ConfigError(
+                f"ResilienceConfig.straggler_threshold must be > 1, "
+                f"got {self.straggler_threshold!r}")
+        for name, lo in (("straggler_window", 1), ("max_retries", 0),
+                         ("retry_backoff_steps", 1),
+                         ("max_transfer_retries", 0), ("seed", 0)):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < lo:
+                raise ConfigError(
+                    f"ResilienceConfig.{name} must be an int >= {lo}, "
+                    f"got {v!r}")
+
+    @property
+    def has_group_faults(self) -> bool:
+        """Crash/straggler faults configured — these need a fleet."""
+        return bool(self.crash_steps or self.crash_rate > 0 or
+                    self.straggler_steps or self.straggler_rate > 0)
+
+    @property
+    def has_transfer_faults(self) -> bool:
+        """Handoff-transfer faults configured — these need disagg."""
+        return bool(self.transfer_fail_steps or self.transfer_fail_rate > 0)
+
+    # --------------------------------------------------- dict round-trip
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for name in ("crash_steps", "straggler_steps", "transfer_fail_steps"):
+            d[name] = list(d[name])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ResilienceConfig":
+        return cls(**_known_fields(cls, d))
+
+    # ---------------------------------------------------- CLI round-trip
+    @staticmethod
+    def add_cli_args(parser: argparse.ArgumentParser,
+                     defaults: "ResilienceConfig" = None) -> None:
+        d = defaults if defaults is not None else ResilienceConfig()
+        b = argparse.BooleanOptionalAction
+
+        def csv(steps):
+            return ",".join(str(s) for s in steps) if steps else None
+
+        g = parser.add_argument_group("resilience")
+        g.add_argument("--resilience", action=b, default=d.enabled,
+                       help="fault injection + recovery on the serving "
+                            "step clock (RESILIENCE.md)")
+        g.add_argument("--fault-seed", type=int, default=d.seed,
+                       help="seed for random-rate fault draws")
+        g.add_argument("--crash-at-steps", default=csv(d.crash_steps),
+                       help="comma list of steps at which the newest live "
+                            "group crashes unplanned")
+        g.add_argument("--crash-rate", type=float, default=d.crash_rate)
+        g.add_argument("--straggler-at-steps",
+                       default=csv(d.straggler_steps),
+                       help="comma list of straggler-onset steps")
+        g.add_argument("--straggler-rate", type=float,
+                       default=d.straggler_rate)
+        g.add_argument("--straggler-factor", type=float,
+                       default=d.straggler_factor)
+        g.add_argument("--straggler-window", type=int,
+                       default=d.straggler_window)
+        g.add_argument("--straggler-threshold", type=float,
+                       default=d.straggler_threshold)
+        g.add_argument("--max-retries", type=int, default=d.max_retries,
+                       help="crash-victim re-prefill retries before the "
+                            "explicit failed terminal state")
+        g.add_argument("--transfer-fail-at-steps",
+                       default=csv(d.transfer_fail_steps),
+                       help="comma list of steps on which handoff "
+                            "transfers fail")
+        g.add_argument("--transfer-fail-rate", type=float,
+                       default=d.transfer_fail_rate)
+        g.add_argument("--retry-backoff-steps", type=int,
+                       default=d.retry_backoff_steps)
+        g.add_argument("--max-transfer-retries", type=int,
+                       default=d.max_transfer_retries)
+
+    @classmethod
+    def from_cli_args(cls, args: argparse.Namespace) -> "ResilienceConfig":
+        return cls(enabled=args.resilience,
+                   seed=args.fault_seed,
+                   crash_steps=args.crash_at_steps,
+                   crash_rate=args.crash_rate,
+                   straggler_steps=args.straggler_at_steps,
+                   straggler_rate=args.straggler_rate,
+                   straggler_factor=args.straggler_factor,
+                   straggler_window=args.straggler_window,
+                   straggler_threshold=args.straggler_threshold,
+                   max_retries=args.max_retries,
+                   transfer_fail_steps=args.transfer_fail_at_steps,
+                   transfer_fail_rate=args.transfer_fail_rate,
+                   retry_backoff_steps=args.retry_backoff_steps,
+                   max_transfer_retries=args.max_transfer_retries)
+
+    def to_cli_args(self) -> list:
+        """Flag list such that ``from_cli_args(parser.parse_args(...))``
+        reproduces this config."""
+        flags = [
+            "--resilience" if self.enabled else "--no-resilience",
+            "--fault-seed", str(self.seed),
+            "--crash-rate", str(self.crash_rate),
+            "--straggler-rate", str(self.straggler_rate),
+            "--straggler-factor", str(self.straggler_factor),
+            "--straggler-window", str(self.straggler_window),
+            "--straggler-threshold", str(self.straggler_threshold),
+            "--max-retries", str(self.max_retries),
+            "--transfer-fail-rate", str(self.transfer_fail_rate),
+            "--retry-backoff-steps", str(self.retry_backoff_steps),
+            "--max-transfer-retries", str(self.max_transfer_retries),
+        ]
+        for flag, steps in (("--crash-at-steps", self.crash_steps),
+                            ("--straggler-at-steps", self.straggler_steps),
+                            ("--transfer-fail-at-steps",
+                             self.transfer_fail_steps)):
+            if steps:
+                flags += [flag, ",".join(str(s) for s in steps)]
+        return flags
+
+
 def _known_fields(cls, d: Mapping[str, Any]) -> dict:
     names = {f.name for f in dataclasses.fields(cls)}
     unknown = set(d) - names

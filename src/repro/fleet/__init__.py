@@ -17,14 +17,14 @@ Two layers on top of the LP scheduler's fixed-fleet machinery:
 CLI: ``python -m repro.launch.fleet {plan,sweep,replay}``; serving wires
 through ``FleetConfig`` / ``ServingSession(fleet=)`` (SERVING.md).
 """
-from .elastic import (FleetController, FleetSignals, register_scaling_policy,
-                      scaling_policies)
+from .elastic import (FleetController, FleetInfeasibleError, FleetSignals,
+                      register_scaling_policy, scaling_policies)
 from .planner import (CapacityPlan, FleetCostModel, StepTimeModel,
                       plan_capacity, trace_windows)
 
 __all__ = [
-    "FleetController", "FleetSignals", "scaling_policies",
-    "register_scaling_policy",
+    "FleetController", "FleetInfeasibleError", "FleetSignals",
+    "scaling_policies", "register_scaling_policy",
     "CapacityPlan", "FleetCostModel", "StepTimeModel", "plan_capacity",
     "trace_windows",
 ]

@@ -58,8 +58,13 @@ from ..engine import DeviceProfile, FleetConfig
 from ..engine.registry import Registry
 from ..replication.topology import plan_topology, replicated_placement
 
-__all__ = ["FleetController", "FleetSignals", "scaling_policies",
-           "register_scaling_policy"]
+__all__ = ["FleetController", "FleetInfeasibleError", "FleetSignals",
+           "scaling_policies", "register_scaling_policy"]
+
+
+class FleetInfeasibleError(RuntimeError):
+    """An unplanned group loss left the survivors unable to host every
+    expert — the fleet is below its feasibility floor (RESILIENCE.md)."""
 
 
 @dataclasses.dataclass
@@ -185,6 +190,8 @@ class FleetController:
             None if loads is None
             else np.asarray(loads, np.float64).ravel())
         self._rng = np.random.default_rng(seed)
+        # gid -> LP weight multiplier (<1 = degraded straggler, DESIGN.md §15)
+        self.weight_overrides: dict = {}
         self.placement = replicated_placement(
             1, len(self.groups) * self.devices_per_group, self.num_experts,
             loads=self._forecast(), slot_budgets=self._budgets(),
@@ -192,6 +199,7 @@ class FleetController:
         self.events: List[dict] = []
         self.admits = 0
         self.drains = 0
+        self.crashes = 0
         self.moved_slots = 0
         self.migrated_bytes = 0
         self.device_steps = 0
@@ -244,9 +252,28 @@ class FleetController:
         return np.asarray(out, np.int64)
 
     def _weights(self) -> Optional[np.ndarray]:
-        w = np.asarray([p.weight for g in self.groups for p in g.profiles],
-                       np.float64)
+        w = np.asarray(
+            [p.weight * self.weight_overrides.get(g.gid, 1.0)
+             for g in self.groups for p in g.profiles], np.float64)
         return None if np.all(w == w[0]) else w / w.mean()
+
+    # ------------------------------------------------- degraded schedule
+    def set_weight_override(self, gid: int, factor: float) -> bool:
+        """Multiply group ``gid``'s devices' LP weights by ``factor``
+        (< 1 deflates a straggler so the weighted LP routes tokens away;
+        >= 1 clears the override — full restore on recovery).  No
+        recompile: only the scheduler's weight vector changes.  Returns
+        True iff the effective override changed."""
+        if not factor > 0:
+            raise ValueError(f"weight override must be > 0, got {factor!r}")
+        if not any(g.gid == gid for g in self.groups):
+            raise ValueError(f"set_weight_override: no group {gid}")
+        prev = self.weight_overrides.get(gid, 1.0)
+        if factor >= 1.0:
+            self.weight_overrides.pop(gid, None)
+            return prev != 1.0
+        self.weight_overrides[gid] = float(factor)
+        return prev != float(factor)
 
     def _forecast(self) -> np.ndarray:
         if self.loads_ema is None or self.loads_ema.sum() <= 0:
@@ -352,6 +379,67 @@ class FleetController:
                 "migration_bytes": bytes_, "active_groups": self.active_groups,
                 "capacity": self.capacity}
 
+    # ------------------------------------------------------------- crash
+    def fail_group(self, gid: int, step: int) -> dict:
+        """Unplanned loss of group ``gid`` (RESILIENCE.md, DESIGN.md §15).
+
+        Unlike :meth:`_drain` this is involuntary and immediate: no grace
+        window, no waiting for slots to empty — the group's capacity and
+        its replicas are gone *now*.  An emergency re-placement packs
+        every expert onto the survivors via the zero-budget
+        ``asymmetric_placement`` path, the move is priced like any
+        resize, and the dead group's (all ``-1``) rows drop from the grid
+        in the same call.  A crash may take the fleet below
+        ``min_groups`` (that floor binds voluntary drains only); the hard
+        floor is expert hostability — if the survivors cannot host every
+        expert, a terminal ``infeasible`` event is recorded and
+        :class:`FleetInfeasibleError` is raised with the fleet state
+        untouched.  Also sound mid-drain: failing the draining group
+        skips the (already zero-budget) repack and drops it at once.
+        """
+        step = int(step)
+        g = next((g for g in self.groups if g.gid == gid), None)
+        if g is None:
+            raise ValueError(f"fail_group: no group {gid} in the fleet")
+        survivors = self._budgets(zero_gids=(gid,))
+        if survivors.sum() < self.num_experts:
+            ev = {"step": step, "kind": "infeasible", "group": gid,
+                  "survivor_slots": int(survivors.sum()),
+                  "active_groups": self.active_groups,
+                  "capacity": self.capacity}
+            self.events.append(ev)
+            raise FleetInfeasibleError(
+                f"group {gid} crash at step {step} leaves "
+                f"{int(survivors.sum())} replica slots on the survivors — "
+                f"cannot host {self.num_experts} experts; fleet below its "
+                f"feasibility floor")
+        if g.state == "draining":
+            # drain start already zeroed its budget: placement excludes it
+            new, moved, bytes_ = self.placement, 0, 0
+        else:
+            new = asymmetric_placement(
+                1, self.placement.num_devices, self.num_experts,
+                self._forecast(), seed=int(self._rng.integers(2 ** 31)),
+                num_samples=32, slot_budgets=survivors,
+                weights=self._weights())
+            moved, bytes_ = self._price(self.placement, new)
+        idx = self.groups.index(g)
+        lo = idx * self.devices_per_group
+        hi = lo + self.devices_per_group
+        flat = new.flat()
+        assert (flat[lo:hi] < 0).all(), "crashed group still hosts replicas"
+        keep = np.concatenate([flat[:lo], flat[hi:]], axis=0)
+        self.placement = Placement(keep[None, :, :], self.num_experts)
+        self.groups.remove(g)
+        self.weight_overrides.pop(gid, None)
+        self.crashes += 1
+        ev = {"step": step, "kind": "crash", "group": gid,
+              "moved_slots": moved, "migration_bytes": bytes_,
+              "active_groups": self.active_groups,
+              "capacity": self.capacity}
+        self.events.append(ev)
+        return ev
+
     # ------------------------------------------------------------ report
     def summary(self) -> dict:
         """The ``ServeReport.fleet`` block (SERVING.md JSON schema)."""
@@ -366,6 +454,7 @@ class FleetController:
             "scaling_policy": self.cfg.scaling_policy,
             "admits": self.admits,
             "drains": self.drains,
+            "crashes": self.crashes,
             "moved_slots": self.moved_slots,
             "migration_bytes": self.migrated_bytes,
             "device_steps": self.device_steps,

@@ -24,7 +24,12 @@ fleet and a decode fleet joined by a bounded KV-handoff buffer.
 Elastic fleet flags (``--fleet``, ``--scaling-policy``, ``--min-groups`` /
 ``--max-groups``, ``--scale-check-every``, ``--drain-grace-steps`` —
 FLEET.md, DESIGN.md §14) let the session admit and drain device groups at
-runtime; resize events surface in the report (``--json``).  Multi-host
+runtime; resize events surface in the report (``--json``).  Resilience
+flags (``--resilience``, ``--crash-at-steps``, ``--straggler-at-steps``,
+``--transfer-fail-at-steps``, ``--max-retries`` — RESILIENCE.md,
+DESIGN.md §15) arm fault injection + recovery on the same step clock:
+crashes and stragglers need ``--fleet``, transfer failures need
+``--disagg``.  Multi-host
 flags (``--coordinator``, ``--num-hosts``, ``--host-id``) initialize the
 JAX distributed runtime before any device work; the default is a no-op.
 
@@ -44,7 +49,8 @@ import json
 
 from ..configs import get_config
 from ..engine import (DisaggConfig, FleetConfig, ReplicationConfig,
-                      RuntimeConfig, ServeConfig, TelemetryConfig)
+                      ResilienceConfig, RuntimeConfig, ServeConfig,
+                      TelemetryConfig)
 from ..serve import (ServingSession, load_trace, poisson_trace, replay_trace,
                      trace_requests)
 from .mesh import (add_distributed_cli_args, make_local_mesh,
@@ -84,6 +90,7 @@ def main(argv=None):
     ReplicationConfig.add_cli_args(ap)
     DisaggConfig.add_cli_args(ap)
     FleetConfig.add_cli_args(ap)
+    ResilienceConfig.add_cli_args(ap)
     add_distributed_cli_args(ap)
     args = ap.parse_args(argv)
     run_cfg = RuntimeConfig.from_cli_args(args)
@@ -92,11 +99,21 @@ def main(argv=None):
     replication = ReplicationConfig.from_cli_args(args)
     disagg = DisaggConfig.from_cli_args(args)
     fleet = FleetConfig.from_cli_args(args)
+    resilience = ResilienceConfig.from_cli_args(args)
     if telemetry.forecast_replacement and not serve_cfg.replacement:
         ap.error("--forecast-replacement selects the trigger policy of the "
                  "replacement hook; enable the hook with --replacement")
     if fleet.enabled and disagg.enabled:
         ap.error("--fleet and --disagg cannot be combined")
+    if resilience.enabled and not (fleet.enabled or disagg.enabled):
+        ap.error("--resilience needs --fleet (group crashes/stragglers) "
+                 "or --disagg (transfer failures)")
+    if resilience.enabled and resilience.has_group_faults \
+            and not fleet.enabled:
+        ap.error("crash/straggler faults need --fleet")
+    if resilience.enabled and resilience.has_transfer_faults \
+            and not disagg.enabled:
+        ap.error("transfer faults need --disagg")
     try:
         # multi-host init must precede any other jax API (no-op on one host)
         maybe_initialize_distributed(args)
@@ -144,7 +161,9 @@ def main(argv=None):
                           replication=(replication if replication.enabled
                                        else None),
                           disagg=disagg if disagg.enabled else None,
-                          fleet=fleet if fleet.enabled else None)
+                          fleet=fleet if fleet.enabled else None,
+                          resilience=(resilience if resilience.enabled
+                                      else None))
     report = sess.run(requests)
     if disagg.enabled:
         print(f"arch={cfg.name} disagg: prefill={disagg.prefill_slots} "

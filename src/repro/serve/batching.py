@@ -142,6 +142,39 @@ class BatchManager:
         group's stragglers; 0 means the drain may complete."""
         return sum(1 for s in self.slots[limit:] if s is not None)
 
+    # --------------------------------------------------- crash recovery
+    def evict_range(self, lo: int, hi: int) -> List[ActiveSeq]:
+        """Forcibly evict every in-flight sequence in slots [lo, hi) — an
+        unplanned group crash (RESILIENCE.md): their KV is *lost*, slots
+        and reservations are freed now.  Contrast the drain path, which
+        only masks admission and lets sequences finish in place.  Returns
+        the victims in slot order; the caller owns retry accounting and
+        re-enqueue (:meth:`requeue_front`)."""
+        if not 0 <= lo <= hi <= len(self.slots):
+            raise ValueError(f"evict_range [{lo}, {hi}) outside "
+                             f"[0, {len(self.slots)}]")
+        victims: List[ActiveSeq] = []
+        for i in range(lo, hi):
+            s = self.slots[i]
+            if s is None:
+                continue
+            self.slots[i] = None
+            self.reserved_tokens -= s.request.kv_tokens
+            victims.append(s)
+        assert self.reserved_tokens >= 0
+        return victims
+
+    def requeue_front(self, requests: List[Request]) -> None:
+        """Re-enqueue crash victims at the *head* of the FIFO, preserving
+        their relative order — recovered requests re-prefill before any
+        later arrival, so global FIFO admission order survives the crash
+        (every queued request arrived no earlier than any evicted one)."""
+        if self.role == "decode":
+            raise ValueError("decode-fleet managers admit only transferred "
+                             "sequences; requeue on the prefill side")
+        for req in reversed(requests):
+            self.queue.appendleft(req)
+
     def has_work(self) -> bool:
         return bool(self.queue) or self.n_active > 0
 
@@ -235,6 +268,15 @@ class BatchManager:
         self.reserved_tokens -= seq.request.kv_tokens
         assert self.reserved_tokens >= 0
 
+    def can_admit_transfer(self, seq: ActiveSeq) -> bool:
+        """Whether :meth:`admit_transfer` would succeed right now — lets
+        the loop decide a transfer *attempt* occurs (and e.g. draw a
+        fault verdict for it) before binding the slot."""
+        if not any(s is None for s in self.slots[:self.admit_capacity]):
+            return False
+        return (self.reserved_tokens + seq.request.kv_tokens
+                <= self.cfg.budget_tokens)
+
     def admit_transfer(self, seq: ActiveSeq, step: int) -> Optional[int]:
         """Bind a transferred sequence to a free decode slot (decode
         fleet).  Returns the slot, or None when no slot is free or the KV
@@ -267,6 +309,11 @@ class HandoffItem:
     payload: Any = None
     kv_bytes: int = 0
     push_step: int = -1
+    # transfer-failure retry state (RESILIENCE.md): attempts failed so
+    # far, and the step before which no retry may be attempted (capped
+    # exponential backoff — the item stays staged, never dropped)
+    retries: int = 0
+    next_attempt_step: int = 0
 
 
 class HandoffBuffer:

@@ -47,7 +47,8 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..engine import (DisaggConfig, FleetConfig, ReplicationConfig,
-                      RuntimeConfig, ServeConfig, TelemetryConfig)
+                      ResilienceConfig, RuntimeConfig, ServeConfig,
+                      TelemetryConfig)
 from ..models import decoder as dec
 from ..telemetry import LoadTraceRecorder
 from .batching import BatchManager, HandoffBuffer, HandoffItem
@@ -83,6 +84,12 @@ class ServeReport:
     # admit/drain events, moved slots + migration bytes, device-step cost.
     # None on fixed-fleet runs — to_dict() stays bit-identical without it.
     fleet: Optional[dict] = None
+    # resilience-armed runs only (RESILIENCE.md, DESIGN.md §15): injected
+    # crashes/stragglers/transfer failures and every recovery action
+    # (victims, requeues, terminal failures, weight deflations).  None
+    # when ResilienceConfig is absent or disabled — to_dict() stays
+    # bit-identical without it (golden fixture pin).
+    resilience: Optional[dict] = None
 
     def _ms(self, attr: str, q: float) -> Optional[float]:
         vals = [getattr(r, attr) * 1e3 for r in self.records]
@@ -118,6 +125,8 @@ class ServeReport:
             out["disagg"] = self.disagg
         if self.fleet is not None:
             out["fleet"] = self.fleet
+        if self.resilience is not None:
+            out["resilience"] = self.resilience
         return out
 
     def summary(self) -> str:
@@ -156,7 +165,14 @@ class ServeReport:
                 f"{self.fleet['admits']} admits / {self.fleet['drains']} "
                 f"drains, {self.fleet['migration_bytes']} B moved, "
                 f"{self.fleet['device_steps']} device-steps"
-                if self.fleet is not None else ""))
+                if self.fleet is not None else "") + (
+                f"\nresilience: {self.resilience['crashes']} crash(es), "
+                f"{self.resilience['requeues']} requeue(s), "
+                f"{len(self.resilience['failed_requests'])} failed, "
+                f"{self.resilience['straggler_deflations']} straggler "
+                f"deflation(s), {self.resilience['transfer_failures']} "
+                f"transfer failure(s)"
+                if self.resilience is not None else ""))
 
 
 @dataclasses.dataclass
@@ -203,7 +219,8 @@ class ServingSession:
                  telemetry: Optional[TelemetryConfig] = None,
                  replication: Optional[ReplicationConfig] = None,
                  disagg: Optional[DisaggConfig] = None,
-                 fleet: Optional[FleetConfig] = None):
+                 fleet: Optional[FleetConfig] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.telemetry = telemetry
@@ -224,6 +241,25 @@ class ServingSession:
             raise ValueError(
                 "elastic fleet serving (--fleet) and disaggregated serving "
                 "(--disagg) cannot be combined in one session")
+        # fault injection + recovery (RESILIENCE.md): same enabled=False
+        # convention — disabled, the loop below is bit-identical to the
+        # pre-resilience path (golden-pinned)
+        self.resilience = resilience if (resilience is not None
+                                         and resilience.enabled) else None
+        if self.resilience is not None:
+            if self.fleet_cfg is None and self.disagg is None:
+                raise ValueError(
+                    "resilience fault injection needs a fleet to fault: "
+                    "combine --resilience with --fleet (group crashes / "
+                    "stragglers) or --disagg (transfer failures)")
+            if self.resilience.has_group_faults and self.fleet_cfg is None:
+                raise ValueError(
+                    "crash/straggler faults need elastic fleet serving "
+                    "(--fleet): there is no device group to fail")
+            if self.resilience.has_transfer_faults and self.disagg is None:
+                raise ValueError(
+                    "handoff-transfer faults need disaggregated serving "
+                    "(--disagg): there is no transfer boundary to fail")
         if self.fleet_cfg is not None:
             width = (self.fleet_cfg.max_groups
                      * self.fleet_cfg.slots_per_group)
@@ -470,6 +506,20 @@ class ServingSession:
             from ..fleet import FleetSignals      # lazy: co-located runs
             fleet_ctl = self._make_fleet_controller()
             bm.set_slot_limit(fleet_ctl.capacity)
+        # fault injection + recovery (RESILIENCE.md): injector and retry
+        # accounting restart with the step clock, like the controller
+        injector = tracker = mitigator = None
+        res_events: List[dict] = []
+        requeues = deflations = 0
+        prev_mult: Dict[int, float] = {}
+        if self.resilience is not None and fleet_ctl is not None:
+            from ..resilience import (FaultInjector, FaultPlan,
+                                      RetryTracker, StragglerMitigator,
+                                      recover_from_crash)
+            injector = FaultInjector(FaultPlan.from_config(self.resilience))
+            tracker = RetryTracker(self.resilience.max_retries)
+            mitigator = StragglerMitigator(
+                self.resilience.straggler_threshold)
         for r in sorted(requests, key=lambda r: (r.arrival_step, r.req_id)):
             bm.submit(r)
         if self.recorder is not None and len(self.recorder):
@@ -499,6 +549,18 @@ class ServingSession:
                 nxt_arr = bm.next_arrival_step()
                 if nxt_arr is not None and nxt_arr > step:
                     step = nxt_arr           # idle fast-forward (step clock)
+            step_faults = None
+            if injector is not None:
+                step_faults = injector.tick(
+                    step, [g.gid for g in fleet_ctl.groups])
+                for _ in range(step_faults.crashes):
+                    # unplanned loss of the newest group: evict its
+                    # in-flight sequences (KV gone), emergency re-pack on
+                    # the survivors, re-enqueue victims at the FIFO head
+                    # (FleetInfeasibleError propagates at the floor)
+                    rec = recover_from_crash(bm, fleet_ctl, tracker, step)
+                    requeues += len(rec.requeued)
+                    res_events.append(rec.to_event())
             now = time.perf_counter() - t0
             tick_wall = now
             for req in bm.queue:             # stamp wall arrival lazily
@@ -555,6 +617,29 @@ class ServingSession:
                     # a resize fired: admission follows the new capacity
                     # immediately; in-flight slots above it finish in place
                     bm.set_slot_limit(fleet_ctl.capacity)
+                if mitigator is not None:
+                    # per-group step latency: the shared measured step,
+                    # inflated for groups inside an injected straggler
+                    # window; EWMA -> weight deflation -> weighted LP
+                    base = max(step_ms, 1e-3)
+                    factors = (step_faults.straggler_factors
+                               if step_faults is not None else {})
+                    mult = mitigator.observe(
+                        {g.gid: base * factors.get(g.gid, 1.0)
+                         for g in fleet_ctl.groups})
+                    for gid, m in mult.items():
+                        was = prev_mult.get(gid, 1.0)
+                        fleet_ctl.set_weight_override(gid, m)
+                        if m < 1.0 and was >= 1.0:
+                            deflations += 1
+                            res_events.append(
+                                {"step": step, "kind": "straggler_deflate",
+                                 "group": gid, "multiplier": round(m, 4)})
+                        elif m >= 1.0 > was:
+                            res_events.append(
+                                {"step": step, "kind": "straggler_restore",
+                                 "group": gid})
+                    prev_mult = mult
             step += 1
 
         wall = time.perf_counter() - t0
@@ -577,7 +662,19 @@ class ServingSession:
             migration_events=([e for e in self.replacement.events[ev0:]
                                if e.get("fired")]
                               if self.replacement else []),
-            fleet=(fleet_ctl.summary() if fleet_ctl is not None else None))
+            fleet=(fleet_ctl.summary() if fleet_ctl is not None else None),
+            resilience=(None if injector is None else {
+                "enabled": True,
+                "crashes": fleet_ctl.crashes,
+                "requeues": requeues,
+                "failed_requests": sorted(r.req_id
+                                          for r in tracker.failed),
+                "straggler_deflations": deflations,
+                "transfer_failures": 0,
+                "transfer_retries": 0,
+                "injected": list(injector.events_log),
+                "events": res_events,
+            }))
 
     # ------------------------------------------------ disaggregated run
     def _run_disagg(self, requests: List[Request],
@@ -595,6 +692,15 @@ class ServingSession:
         dg = self.disagg
         pf, dc = self.fleets["prefill"], self.fleets["decode"]
         buf = HandoffBuffer(dg.handoff_depth)
+        # transfer-fault injection (RESILIENCE.md): failed handoffs stay
+        # staged and retry with capped exponential backoff, never drop
+        injector = None
+        res_events: List[dict] = []
+        transfer_failures = 0
+        if self.resilience is not None:
+            from ..resilience import (FaultInjector, FaultPlan,
+                                      transfer_backoff)
+            injector = FaultInjector(FaultPlan.from_config(self.resilience))
         for f in (pf, dc):
             f.bm = BatchManager(f.serve_cfg, role=f.name)
             f.state = self._init_fleet_state(f)
@@ -644,6 +750,27 @@ class ServingSession:
                 item = buf.peek()
                 if item is None:
                     break
+                if item.next_attempt_step > step:
+                    break           # backing off after a failed transfer:
+                                    # head-of-line blocks (back-pressure)
+                if injector is not None:
+                    if not dc.bm.can_admit_transfer(item.seq):
+                        break       # no attempt occurs: no fault verdict
+                    if injector.transfer_fails(step):
+                        # failed in flight: the staged KV is intact, retry
+                        # after capped exponential backoff — never dropped
+                        item.retries += 1
+                        transfer_failures += 1
+                        item.next_attempt_step = step + transfer_backoff(
+                            item.retries,
+                            self.resilience.retry_backoff_steps,
+                            self.resilience.max_transfer_retries)
+                        res_events.append(
+                            {"step": step, "kind": "transfer_fail",
+                             "req": item.seq.request.req_id,
+                             "retries": item.retries,
+                             "next_attempt_step": item.next_attempt_step})
+                        break
                 slot = dc.bm.admit_transfer(item.seq, step)
                 if slot is None:
                     break                   # decode fleet full: stay staged
@@ -748,4 +875,17 @@ class ServingSession:
                                     else round(pf.balance, 4)),
                 "decode_balance": (None if dc.balance is None
                                    else round(dc.balance, 4)),
-            })
+            },
+            resilience=(None if injector is None else {
+                "enabled": True,
+                "crashes": 0,
+                "requeues": 0,
+                "failed_requests": [],
+                "straggler_deflations": 0,
+                "transfer_failures": transfer_failures,
+                "transfer_retries": sum(1 for e in res_events
+                                        if e["kind"] == "transfer_fail"
+                                        and e["retries"] > 1),
+                "injected": list(injector.events_log),
+                "events": res_events,
+            }))

@@ -21,6 +21,14 @@ over a deterministic adversarial grid (burst > slots, depth-1 buffer,
 single decode slot, oversize requests, finish-in-prefill) so the
 invariants stay exercised in minimal environments too.
 
+Fault extensions (RESILIENCE.md): the same harness optionally injects
+handoff-transfer failures (the staged item stays in the buffer and
+retries after a capped exponential backoff — never dropped) and a
+prefill-fleet crash (every in-flight prefill evicted, KV lost, victims
+re-enqueued at the FIFO head with retry accounting), in the exact
+per-tick order of ``ServingSession._run_disagg`` — both hypothesis-
+driven and on a deterministic grid.
+
 End-to-end tests then run the real two-fleet :class:`ServingSession` loop
 (dense + MoE smoke), the per-fleet replacement tagging, and the
 :class:`DisaggConfig` round-trips.
@@ -34,6 +42,8 @@ from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.configs import get_config
 from repro.engine import ConfigError, DeviceProfile, DisaggConfig, ServeConfig
+from repro.resilience import (FaultEvent, FaultInjector, FaultPlan,
+                              RetryTracker, transfer_backoff)
 from repro.serve import (BatchManager, HandoffBuffer, HandoffItem, Request,
                          ServingSession, replay_trace)
 
@@ -52,11 +62,21 @@ def _check_budgets(bm: BatchManager):
 
 
 def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
-              eos_token=None, max_steps=2000):
+              eos_token=None, max_steps=2000, *,
+              transfer_fail_steps=(), transfer_fail_rate=0.0,
+              fault_seed=0, backoff=(2, 5), crash_step=None,
+              max_retries=10 ** 6):
     """Drive the two fleets + buffer through a whole trace in the exact
     per-tick order of ``ServingSession._run_disagg`` (sampled token is a
     constant 7), asserting every boundary invariant along the way.
-    Returns per-request lifecycle stats for the caller's own asserts."""
+    Returns per-request lifecycle stats for the caller's own asserts.
+
+    Fault knobs (RESILIENCE.md): ``transfer_fail_steps`` / ``_rate``
+    fail handoff-transfer attempts (the staged item backs off
+    ``transfer_backoff(retries, *backoff)`` steps and retries — never
+    dropped); ``crash_step`` evicts every in-flight prefill at that step
+    (KV lost) and re-enqueues the victims at the FIFO head with
+    ``RetryTracker(max_retries)`` accounting."""
     pf_cfg = ServeConfig(max_batch=pf_slots, max_seq=max_seq,
                          eos_token=eos_token)
     dc_cfg = ServeConfig(max_batch=dc_slots, max_seq=max_seq,
@@ -64,6 +84,13 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
     pf = BatchManager(pf_cfg, role="prefill")
     dc = BatchManager(dc_cfg, role="decode")
     buf = HandoffBuffer(depth)
+    injector = None
+    if transfer_fail_steps or transfer_fail_rate > 0:
+        injector = FaultInjector(FaultPlan(
+            events=tuple(FaultEvent(at_step=s, kind="transfer_fail")
+                         for s in transfer_fail_steps),
+            transfer_fail_rate=transfer_fail_rate, seed=fault_seed))
+    tracker = RetryTracker(max_retries)
     reqs = [_req(i, a, p, g) for i, (a, p, g) in enumerate(arrivals)]
     submitted = {r.req_id for r in reqs}
     for r in sorted(reqs, key=lambda r: (r.arrival_step, r.req_id)):
@@ -76,6 +103,8 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
     pop_step = {}
     token_steps = {}                   # req_id -> step of each token
     stalls = 0
+    transfer_failures = 0
+    crash_victims = []
     step = 0
     while (pf.has_work() or dc.has_work() or len(buf)) \
             and step < max_steps:
@@ -83,11 +112,34 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
             nxt = pf.next_arrival_step()
             if nxt is not None and nxt > step:
                 step = nxt
+        # 0. unplanned prefill-fleet crash: every in-flight prefill loses
+        # its KV; victims re-enqueue at the FIFO head in arrival order
+        if crash_step is not None and step == crash_step:
+            victims = pf.evict_range(0, pf_slots)
+            vr = sorted((v.request for v in victims),
+                        key=lambda r: (r.arrival_step, r.req_id))
+            retry, _failed = tracker.account(vr)
+            pf.requeue_front(retry)
+            crash_victims += [r.req_id for r in vr]
+            _check_budgets(pf)
         # 1. drain staged transfers into free decode slots
         while True:
             item = buf.peek()
             if item is None:
                 break
+            if item.next_attempt_step > step:
+                break                  # backing off after a failed attempt
+            if injector is not None:
+                if not dc.can_admit_transfer(item.seq):
+                    break              # no attempt: no fault verdict drawn
+                if injector.transfer_fails(step):
+                    # failed in flight: stays staged, capped exponential
+                    # backoff before the retry — never dropped
+                    item.retries += 1
+                    transfer_failures += 1
+                    item.next_attempt_step = step + transfer_backoff(
+                        item.retries, *backoff)
+                    break
             slot = dc.admit_transfer(item.seq, step)
             if slot is None:
                 break
@@ -96,14 +148,22 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
             assert item.seq.request.req_id in push_step
             pop_step[item.seq.request.req_id] = step
             _check_budgets(dc)
-        # 2. admit arrivals into prefill slots, strict FIFO
+        # 2. admit arrivals into prefill slots, strict FIFO.  The queue
+        # stays globally sorted by (arrival, id) even across a crash —
+        # head-of-queue requeue preserves it — so head-only admission is
+        # FIFO among the requests actually waiting.
+        q = [(r.arrival_step, r.req_id) for r in pf.queue]
+        assert q == sorted(q)
         before = {id(s) for s in pf.active}
         pf.admit_ready(step)
         admit_order += sorted(
             (s for s in pf.active if id(s) not in before),
             key=lambda s: s.request.req_id)
         admit_order_ids = [s.request.req_id for s in admit_order]
-        assert admit_order_ids == sorted(admit_order_ids)
+        if crash_step is None:
+            # (a re-admitted crash victim legitimately lands after later
+            # arrivals admitted pre-crash, so this only holds crash-free)
+            assert admit_order_ids == sorted(admit_order_ids)
         _check_budgets(pf)
         # 3. step both fleets (constant sampled token)
         for bm in (pf, dc):
@@ -136,10 +196,14 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
         step += 1
 
     assert step < max_steps, "two-fleet loop failed to drain"
-    assert set(finished) | rejected == submitted
+    failed = {r.req_id for r in tracker.failed}
+    # conservation: finished / rejected / explicitly-failed partition the
+    # submitted set — nothing lost, nothing duplicated
+    assert set(finished) | rejected | failed == submitted
     assert not (set(finished) & rejected)
+    assert not (set(finished) & failed) and not (rejected & failed)
     for r in reqs:
-        if r.req_id in rejected:
+        if r.req_id in rejected or r.req_id in failed:
             continue
         s = finished[r.req_id]
         n = len(s.tokens)
@@ -158,9 +222,11 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
             assert n == 1
     assert buf.transferred == len(pop_step)
     assert buf.peak <= depth
-    return {"finished": finished, "rejected": rejected,
+    return {"finished": finished, "rejected": rejected, "failed": failed,
             "admit_order": [s.request.req_id for s in admit_order],
-            "stalls": stalls, "buffer": buf, "steps": step}
+            "stalls": stalls, "buffer": buf, "steps": step,
+            "transfer_failures": transfer_failures,
+            "crash_victims": crash_victims}
 
 
 # ------------------------------------------------- property-based suite
@@ -256,6 +322,69 @@ def test_disagg_invariants_deterministic(arrivals, pf, dc, depth,
     n_fit = sum(1 for _, p, g in arrivals if p + g <= max_seq)
     assert len(out["finished"]) == n_fit
     assert len(out["rejected"]) == len(arrivals) - n_fit
+
+
+# ------------------------------------------------- fault extensions
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                               st.integers(1, 6)),
+                     min_size=1, max_size=12),
+       pf_slots=st.integers(1, 4),
+       dc_slots=st.integers(1, 3),
+       depth=st.integers(1, 3),
+       rate=st.floats(0.0, 0.5),
+       crash_step=st.one_of(st.none(), st.integers(0, 10)),
+       fault_seed=st.integers(0, 9))
+def test_disagg_fault_invariants_property(gaps, pf_slots, dc_slots, depth,
+                                          rate, crash_step, fault_seed):
+    """Random traces x geometries x faults (transfer-failure rates and a
+    prefill-fleet crash): every boundary invariant still holds, the loop
+    still drains, and conservation covers the explicit failed state."""
+    t = 0
+    arrivals = []
+    for gap, p, g in gaps:
+        t += gap
+        arrivals.append((t, p, g))
+    out = _simulate(arrivals, pf_slots, dc_slots, depth, max_seq=12,
+                    transfer_fail_rate=rate, fault_seed=fault_seed,
+                    backoff=(1, 3), crash_step=crash_step)
+    assert set(out["finished"]) | out["rejected"] | out["failed"] == \
+        set(range(len(arrivals)))
+
+
+def test_disagg_transfer_failures_retry_never_drop():
+    """Scripted transfer failures: the staged item backs off and retries,
+    every request still finishes exactly once."""
+    out = _simulate([(0, 3, 4)] * 6, 3, 1, 2, 8,
+                    transfer_fail_steps=(1, 2, 3), backoff=(1, 3))
+    assert out["transfer_failures"] >= 1
+    assert len(out["finished"]) == 6 and not out["failed"]
+    assert out["buffer"].peak <= 2
+
+
+def test_disagg_prefill_crash_preserves_invariants():
+    """A prefill-fleet crash mid-burst: victims lose their KV, re-enqueue
+    at the FIFO head, and every request still finishes exactly once
+    (conservation, ordering, and buffer-depth asserts run per-tick
+    inside the harness)."""
+    out = _simulate([(0, 4, 3)] * 6 + [(2, 3, 2)] * 2, 3, 2, 2, 8,
+                    crash_step=2)
+    assert out["crash_victims"], "crash must catch in-flight prefills"
+    assert len(out["finished"]) == 8 and not out["failed"]
+    assert not out["rejected"]
+
+
+def test_disagg_crash_retry_budget_exhausts_to_failed():
+    """max_retries=0: crash victims move to the explicit failed terminal
+    state instead of re-enqueueing — never silently lost."""
+    out = _simulate([(0, 4, 3)] * 4, 2, 1, 1, 8, crash_step=1,
+                    max_retries=0)
+    assert out["crash_victims"]
+    assert out["failed"] == set(out["crash_victims"])
+    assert set(out["finished"]) | out["failed"] == set(range(4))
 
 
 def test_disagg_backpressure_stalls_never_drops():

@@ -1,0 +1,644 @@
+"""Resilience tests: fault injection, failure recovery, degraded-mode
+scheduling, checkpoint hardening, and placement-aware resharding
+(RESILIENCE.md, DESIGN.md §15).
+
+Covers the full subsystem stack:
+
+  * ``ResilienceConfig`` dict/CLI round-trips and validation;
+  * ``FaultInjector`` determinism — scripted events fire exactly, seeded
+    random rates replay identically, straggler windows open/close;
+  * ``FleetController.fail_group`` lifecycle — emergency re-placement on
+    the survivors, the feasibility floor (crash-at-floor regression:
+    descriptive error, terminal ``infeasible`` event, state untouched),
+    and crash-during-graceful-drain interleavings;
+  * ``recover_from_crash`` at the manager level — victims evicted,
+    re-enqueued at the FIFO head, retry accounting to the explicit
+    ``failed`` terminal state, manager untouched when the fleet is at
+    its floor;
+  * ``StragglerMitigator`` deflate/restore and ``transfer_backoff``;
+  * checkpoint hardening — a truncated npz raises CheckpointError naming
+    the file, ``latest_checkpoint(valid_only=True)`` skips it, and
+    ``restore_latest`` falls back to the previous valid step;
+  * ``reshard_params`` — bit-exact round-trips across a grid/profile
+    change (the ISSUE 9 acceptance bar), scanned stacks, pass-through
+    leaves, and the guard rails;
+  * serve-loop wiring — constructor validation, the co-located golden
+    ServeReport staying byte-identical with ``enabled=False``, and
+    end-to-end crash/straggler and transfer-fault runs.
+"""
+import argparse
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, latest_checkpoint,
+                              restore_latest, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs import get_config
+from repro.core.placement import Placement, asymmetric_placement
+from repro.engine import (ConfigError, DeviceProfile, DisaggConfig,
+                          FleetConfig, ResilienceConfig, ServeConfig)
+from repro.fleet import FleetController, FleetInfeasibleError
+from repro.resilience import (FaultEvent, FaultInjector, FaultPlan,
+                              RetryTracker, StragglerMitigator,
+                              recover_from_crash, reshard_params,
+                              restore_resharded, transfer_backoff)
+from repro.serve import BatchManager, Request, ServingSession, replay_trace
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / \
+    "serve_report_colocated.json"
+
+
+def _req(i, arrival=0, p=3, g=4, vocab=64):
+    rng = np.random.default_rng(i)
+    return Request(req_id=i, arrival_step=arrival,
+                   prompt=rng.integers(0, vocab, p), max_new=g)
+
+
+def _ctl(groups=3, *, min_groups=2, spg=2, num_experts=8, slots=None,
+         seed=0, **kw):
+    prof = (DeviceProfile(weight=1.0, slots=slots),) if slots else None
+    kw.setdefault("scale_check_every", 10 ** 6)
+    return FleetController(
+        FleetConfig(enabled=True, min_groups=min_groups, max_groups=groups,
+                    slots_per_group=spg, group_profiles=prof, **kw),
+        num_experts=num_experts, initial_groups=groups, seed=seed)
+
+
+def _hosted(placement) -> set:
+    flat = np.asarray(placement.flat())
+    return set(flat[flat >= 0].tolist())
+
+
+# ------------------------------------------------------ ResilienceConfig
+
+
+def test_resilience_config_validation():
+    assert ResilienceConfig().enabled is False
+    with pytest.raises(ConfigError):
+        ResilienceConfig(crash_rate=1.5)
+    with pytest.raises(ConfigError):
+        ResilienceConfig(straggler_factor=1.0)
+    with pytest.raises(ConfigError):
+        ResilienceConfig(straggler_threshold=0.5)
+    with pytest.raises(ConfigError):
+        ResilienceConfig(straggler_window=0)
+    with pytest.raises(ConfigError):
+        ResilienceConfig(max_retries=-1)
+    with pytest.raises(ConfigError):
+        ResilienceConfig(crash_steps="a,b")
+    with pytest.raises(ConfigError):
+        ResilienceConfig(crash_steps=(-1,))
+    # CSV / list forms canonicalise to a sorted deduped tuple
+    assert ResilienceConfig(crash_steps="5,1,5").crash_steps == (1, 5)
+    assert ResilienceConfig(straggler_steps=[3, 3, 1]) \
+        .straggler_steps == (1, 3)
+
+
+def test_resilience_config_fault_kind_properties():
+    rc = ResilienceConfig()
+    assert not rc.has_group_faults and not rc.has_transfer_faults
+    assert ResilienceConfig(crash_steps=(3,)).has_group_faults
+    assert ResilienceConfig(straggler_rate=0.1).has_group_faults
+    assert ResilienceConfig(transfer_fail_steps=(2,)).has_transfer_faults
+    assert ResilienceConfig(transfer_fail_rate=0.2).has_transfer_faults
+    assert not ResilienceConfig(transfer_fail_rate=0.2).has_group_faults
+
+
+def test_resilience_config_dict_roundtrip():
+    rc = ResilienceConfig(enabled=True, seed=7, crash_steps=(4, 9),
+                          crash_rate=0.01, straggler_steps=(2,),
+                          straggler_rate=0.05, straggler_factor=3.0,
+                          straggler_window=8, straggler_threshold=1.5,
+                          max_retries=2, transfer_fail_steps=(1, 3),
+                          transfer_fail_rate=0.1, retry_backoff_steps=4,
+                          max_transfer_retries=3)
+    assert ResilienceConfig.from_dict(rc.to_dict()) == rc
+    assert ResilienceConfig.from_dict(ResilienceConfig().to_dict()) == \
+        ResilienceConfig()
+    assert json.loads(json.dumps(rc.to_dict())) == rc.to_dict()
+    with pytest.raises(ConfigError):
+        ResilienceConfig.from_dict({"no_such_knob": 1})
+
+
+def test_resilience_config_cli_roundtrip():
+    rc = ResilienceConfig(enabled=True, seed=3, crash_steps=(4, 9),
+                          straggler_steps=(2,), straggler_window=8,
+                          max_retries=2, transfer_fail_steps=(1, 3),
+                          transfer_fail_rate=0.1, retry_backoff_steps=4)
+    ap = argparse.ArgumentParser()
+    ResilienceConfig.add_cli_args(ap)
+    assert ResilienceConfig.from_cli_args(ap.parse_args(rc.to_cli_args())) \
+        == rc
+    # defaults parse back to the default config
+    assert ResilienceConfig.from_cli_args(ap.parse_args([])) == \
+        ResilienceConfig()
+
+
+# -------------------------------------------------------- FaultInjector
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(at_step=0, kind="meteor")
+    with pytest.raises(ValueError, match="at_step"):
+        FaultEvent(at_step=-1, kind="crash")
+
+
+def test_fault_injector_scripted_events_exact():
+    plan = FaultPlan(events=(FaultEvent(at_step=5, kind="crash"),
+                             FaultEvent(at_step=3, kind="straggler",
+                                        factor=2.5, duration=4)))
+    inj = FaultInjector(plan)
+    live = [0, 1, 2]
+    by_step = {s: inj.tick(s, live) for s in range(10)}
+    assert by_step[5].crashes == 1
+    assert sum(sf.crashes for sf in by_step.values()) == 1
+    # straggler window [3, 7) on the newest live group, then recovery
+    assert by_step[3].straggler_onsets == [(2, 2.5, 7)]
+    for s in range(3, 7):
+        assert by_step[s].straggler_factors == {2: 2.5}
+    assert by_step[7].recovered == [2]
+    assert by_step[7].straggler_factors == {}
+    assert by_step[8].any is False
+    kinds = [e["kind"] for e in inj.events_log]
+    assert kinds == ["straggler_onset", "crash", "straggler_recover"]
+
+
+def test_fault_injector_caps_and_monotonic_clock():
+    # crashes are capped at the live group count; a second onset on an
+    # already-straggling group is a no-op
+    plan = FaultPlan(events=(FaultEvent(at_step=0, kind="crash"),
+                             FaultEvent(at_step=0, kind="crash"),
+                             FaultEvent(at_step=1, kind="straggler"),
+                             FaultEvent(at_step=2, kind="straggler")))
+    inj = FaultInjector(plan)
+    assert inj.tick(0, [7]).crashes == 1
+    assert len(inj.tick(1, [7]).straggler_onsets) == 1
+    assert inj.tick(2, [7]).straggler_onsets == []
+    with pytest.raises(ValueError, match="strictly increasing"):
+        inj.tick(2, [7])
+    # a straggler window dies silently with its group (no recovery event)
+    sf = inj.tick(3, [9])
+    assert sf.recovered == [] and sf.straggler_factors == {}
+
+
+def test_fault_injector_seeded_rates_replay_identically():
+    plan = FaultPlan(crash_rate=0.3, straggler_rate=0.2,
+                     transfer_fail_rate=0.4, straggler_window=4, seed=5)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    for step in range(60):
+        sa, sb = a.tick(step, [0, 1, 2]), b.tick(step, [0, 1, 2])
+        assert (sa.crashes, sa.straggler_onsets, sa.recovered) == \
+            (sb.crashes, sb.straggler_onsets, sb.recovered)
+        assert [a.transfer_fails(step) for _ in range(3)] == \
+            [b.transfer_fails(step) for _ in range(3)]
+    assert a.events_log == b.events_log
+    assert any(e["kind"] == "crash" for e in a.events_log)
+    assert any(e["kind"] == "transfer_fail" for e in a.events_log)
+
+
+# ----------------------------------------------------- recovery pieces
+
+
+def test_retry_tracker_explicit_terminal_state():
+    with pytest.raises(ValueError):
+        RetryTracker(-1)
+    t = RetryTracker(1)
+    r4, r5 = _req(4), _req(5)
+    assert t.account([r4, r5]) == ([r4, r5], [])
+    retry, failed = t.account([r4])
+    assert retry == [] and failed == [r4]          # second crash: terminal
+    assert [r.req_id for r in t.failed] == [4]
+    # max_retries=0: victims fail on the first crash, never silently lost
+    t0 = RetryTracker(0)
+    assert t0.account([r5]) == ([], [r5])
+
+
+def test_transfer_backoff_capped_exponential():
+    assert [transfer_backoff(n, 2, 3) for n in range(1, 7)] == \
+        [2, 4, 8, 16, 16, 16]
+    assert transfer_backoff(1, 1, 0) == transfer_backoff(9, 1, 0) == 1
+    with pytest.raises(ValueError, match="1-based"):
+        transfer_backoff(0, 2, 3)
+
+
+def test_straggler_mitigator_deflates_and_restores():
+    with pytest.raises(ValueError):
+        StragglerMitigator(1.0)
+    with pytest.raises(ValueError):
+        StragglerMitigator(2.0, ema_decay=1.0)
+    with pytest.raises(ValueError):
+        StragglerMitigator(2.0, floor=0.0)
+    m = StragglerMitigator(2.0)
+    healthy = {0: 10.0, 1: 10.0, 2: 10.0}
+    assert m.observe(healthy) == {0: 1.0, 1: 1.0, 2: 1.0}
+    mult = m.observe({0: 10.0, 1: 10.0, 2: 80.0})
+    assert mult[0] == mult[1] == 1.0 and mult[2] < 1.0
+    # deflation ~ median/ewma, never below the floor
+    assert m.floor <= mult[2] <= 10.0 / (2.0 * 10.0) + 1e-9
+    for _ in range(10):
+        mult = m.observe(healthy)
+    assert mult == {0: 1.0, 1: 1.0, 2: 1.0}        # full restore
+    # a crashed group drops out of the EWMA state entirely
+    mult = m.observe({0: 10.0, 1: 10.0})
+    assert set(mult) == {0, 1} and 2 not in m.ema
+
+
+def test_straggler_mitigator_two_group_lower_median():
+    # regression: with 2 groups an interpolated median averages the
+    # straggler in and the threshold is unreachable — the lower order
+    # statistic must be used
+    m = StragglerMitigator(2.0)
+    mult = {}
+    for _ in range(6):
+        mult = m.observe({0: 10.0, 1: 40.0})
+    assert mult[0] == 1.0 and mult[1] < 1.0
+
+
+# ---------------------------------------------- fail_group lifecycle
+
+
+def test_fail_group_emergency_repack():
+    ctl = _ctl(3, slots=5)                    # survivors keep headroom
+    ctl.set_weight_override(2, 0.5)
+    ev = ctl.fail_group(2, step=4)
+    assert ev["kind"] == "crash" and ev["group"] == 2
+    assert ev["active_groups"] == 2 and ev["capacity"] == 4
+    assert ev["moved_slots"] > 0              # emergency re-placement
+    assert ctl.placement.num_devices == 2
+    assert _hosted(ctl.placement) == set(range(8))
+    assert ctl.crashes == 1 and ctl.summary()["crashes"] == 1
+    assert ctl.weight_overrides == {}         # override died with the group
+    with pytest.raises(ValueError, match="no group 2"):
+        ctl.fail_group(2, step=5)
+
+
+def test_fail_group_at_floor_raises_and_leaves_state_untouched():
+    # regression (satellite): 2 groups x 4 default slots host exactly
+    # E=8 — a crash is infeasible and must not corrupt the fleet
+    ctl = _ctl(2)
+    before = np.asarray(ctl.placement.flat()).copy()
+    with pytest.raises(FleetInfeasibleError, match="feasibility floor"):
+        ctl.fail_group(1, step=3)
+    assert ctl.num_groups == 2 and ctl.capacity == 4
+    assert np.array_equal(np.asarray(ctl.placement.flat()), before)
+    assert ctl.crashes == 0
+    ev = ctl.events[-1]
+    assert ev["kind"] == "infeasible" and ev["group"] == 1
+    assert ev["survivor_slots"] == 4
+
+
+def test_fail_group_during_graceful_drain():
+    # regression (satellite): crash interleaved with an in-flight drain
+    from repro.fleet import FleetSignals
+    ctl = _ctl(3, slots=4, num_experts=4, scale_check_every=2,
+               scale_up_threshold=0.9, scale_down_threshold=0.35,
+               drain_grace_steps=10)
+    ev = ctl.observe(FleetSignals(step=2, utilization=0.0, queue_depth=0,
+                                  active_slots=0, capacity=ctl.capacity,
+                                  busy_above_capacity=0), 2)
+    assert [e["kind"] for e in ev] == ["drain"] and ctl.draining == 2
+    # 1. the draining group itself dies: no repack (already zero-budget),
+    #    it just drops immediately
+    ev = ctl.fail_group(2, step=3)
+    assert ev["moved_slots"] == 0 and ctl.num_groups == 2
+    assert ctl.draining is None
+    assert _hosted(ctl.placement) == set(range(4))
+    # 2. an *active* group dies while another drains: survivors repack
+    ctl2 = _ctl(3, slots=4, num_experts=4, scale_check_every=2,
+                scale_up_threshold=0.9, scale_down_threshold=0.35,
+                drain_grace_steps=10)
+    ctl2.observe(FleetSignals(step=2, utilization=0.0, queue_depth=0,
+                              active_slots=0, capacity=ctl2.capacity,
+                              busy_above_capacity=0), 2)
+    ev = ctl2.fail_group(0, step=3)
+    assert ev["kind"] == "crash" and ctl2.num_groups == 2
+    assert ctl2.draining == 2                 # the drain is still pending
+    flat = np.asarray(ctl2.placement.flat())
+    assert (flat[1:] < 0).all()               # draining rows stay empty
+    assert _hosted(ctl2.placement) == set(range(4))
+
+
+# -------------------------------------------- recover_from_crash
+
+
+def _manager(ctl, n_reqs):
+    width = ctl.cfg.max_groups * ctl.cfg.slots_per_group
+    bm = BatchManager(ServeConfig(max_batch=width, max_seq=16))
+    bm.set_slot_limit(ctl.capacity)
+    for i in range(n_reqs):
+        bm.submit(_req(i))
+    return bm
+
+
+def test_recover_from_crash_requeues_at_fifo_head():
+    ctl = _ctl(3, slots=5)
+    bm = _manager(ctl, 7)
+    bm.admit_ready(0)
+    assert bm.n_active == 6 and [r.req_id for r in bm.queue] == [6]
+    tracker = RetryTracker(3)
+    rec = recover_from_crash(bm, ctl, tracker, step=1)
+    # the newest group's slots [4, 6) are evicted, re-enqueued at the head
+    assert [r.req_id for r in rec.victims] == [4, 5]
+    assert [r.req_id for r in rec.requeued] == [4, 5] and not rec.failed
+    assert [r.req_id for r in bm.queue] == [4, 5, 6]
+    assert bm.n_active == 4 and bm.slot_limit == ctl.capacity == 4
+    assert rec.event["kind"] == "crash"
+    assert tracker.counts == {4: 1, 5: 1}
+    d = rec.to_event()
+    assert d["victims"] == d["requeued"] == [4, 5] and d["failed"] == []
+
+
+def test_recover_from_crash_terminal_failed_state():
+    ctl = _ctl(3, slots=5)
+    bm = _manager(ctl, 6)
+    bm.admit_ready(0)
+    rec = recover_from_crash(bm, ctl, RetryTracker(0), step=1)
+    assert [r.req_id for r in rec.failed] == [4, 5] and not rec.requeued
+    assert not bm.queue                        # failed never re-enqueue
+
+
+def test_recover_from_crash_at_floor_leaves_manager_untouched():
+    ctl = _ctl(2)                              # exactly feasible fleet
+    bm = _manager(ctl, 5)
+    bm.admit_ready(0)
+    assert bm.n_active == 4
+    with pytest.raises(FleetInfeasibleError):
+        recover_from_crash(bm, ctl, RetryTracker(3), step=1)
+    assert bm.n_active == 4 and bm.slot_limit == 4
+    assert [r.req_id for r in bm.queue] == [4]
+
+
+def test_batch_manager_crash_primitives():
+    bm = BatchManager(ServeConfig(max_batch=4, max_seq=16))
+    for i in range(3):
+        bm.submit(_req(i))
+    bm.admit_ready(0)
+    reserved = bm.reserved_tokens
+    victims = bm.evict_range(1, 4)
+    assert [v.request.req_id for v in victims] == [1, 2]
+    assert bm.n_active == 1 and bm.reserved_tokens < reserved
+    with pytest.raises(ValueError):
+        bm.evict_range(2, 5)
+    bm.requeue_front([v.request for v in victims])
+    assert [r.req_id for r in bm.queue] == [1, 2]
+    with pytest.raises(ValueError, match="decode"):
+        BatchManager(ServeConfig(max_batch=2, max_seq=16),
+                     role="decode").requeue_front([])
+
+
+# ------------------------------------------------ checkpoint hardening
+
+
+def _ckpt_dir(tmp_path, steps=(1, 2, 3)):
+    d = str(tmp_path / "ckpts")
+    for s in steps:
+        save_checkpoint(d, s, {"w": np.full((4,), float(s)),
+                               "b": np.arange(3) * s})
+    return d
+
+
+def test_truncated_checkpoint_raises_naming_file(tmp_path):
+    d = _ckpt_dir(tmp_path)
+    bad = pathlib.Path(d) / "ckpt_00000003.npz"
+    bad.write_bytes(bad.read_bytes()[:50])     # truncate mid-archive
+    template = {"w": np.zeros(4), "b": np.zeros(3, np.int64)}
+    with pytest.raises(CheckpointError, match="ckpt_00000003.npz"):
+        restore_checkpoint(str(bad), template)
+    # the structural-mismatch contract is unchanged: KeyError, not
+    # CheckpointError, for a template leaf the payload never had
+    good = pathlib.Path(d) / "ckpt_00000002.npz"
+    with pytest.raises(KeyError, match="extra"):
+        restore_checkpoint(str(good), {**template, "extra": np.zeros(1)})
+
+
+def test_latest_checkpoint_valid_only_skips_unreadable(tmp_path):
+    d = _ckpt_dir(tmp_path)
+    bad = pathlib.Path(d) / "ckpt_00000003.npz"
+    bad.write_bytes(bad.read_bytes()[:50])
+    assert latest_checkpoint(d).endswith("ckpt_00000003.npz")
+    assert latest_checkpoint(d, valid_only=True) \
+        .endswith("ckpt_00000002.npz")
+    assert latest_checkpoint(str(tmp_path / "nowhere")) is None
+
+
+def test_restore_latest_falls_back_to_previous_valid_step(tmp_path):
+    d = _ckpt_dir(tmp_path)
+    bad = pathlib.Path(d) / "ckpt_00000003.npz"
+    bad.write_bytes(bad.read_bytes()[:50])
+    template = {"w": np.zeros(4), "b": np.zeros(3, np.int64)}
+    tree, path = restore_latest(d, template)
+    assert path.endswith("ckpt_00000002.npz")
+    assert np.array_equal(tree["w"], np.full((4,), 2.0))
+    # every step corrupt: a descriptive terminal error, never silence
+    for p in pathlib.Path(d).glob("ckpt_*.npz"):
+        p.write_bytes(p.read_bytes()[:50])
+    with pytest.raises(CheckpointError, match="no restorable"):
+        restore_latest(d, template)
+
+
+# ----------------------------------------------- checkpoint resharding
+
+
+def _placements():
+    rng = np.random.default_rng(0)
+    old = asymmetric_placement(1, 4, 8, rng.uniform(1, 9, 8), seed=1,
+                               num_samples=16,
+                               slot_budgets=np.full(4, 3, np.int64))
+    new = asymmetric_placement(1, 3, 8, rng.uniform(1, 9, 8), seed=2,
+                               num_samples=16,
+                               slot_budgets=np.full(3, 4, np.int64))
+    return old, new
+
+
+def _working(masters, placement):
+    """The runtime's working layout: canonical gathered by the table
+    (empty slots hold expert 0 — launch.runtime)."""
+    return np.asarray(masters)[np.maximum(
+        np.asarray(placement.table), 0)]
+
+
+def test_reshard_params_bit_exact_roundtrip():
+    old, new = _placements()
+    rng = np.random.default_rng(3)
+    masters = rng.standard_normal((8, 3, 5)).astype(np.float32)
+    scanned = rng.standard_normal((2, 8, 6)).astype(np.float32)
+    dense = rng.standard_normal((7, 5))
+    tree = {"moe": {"w": _working(masters, old),
+                    "stack": np.stack([_working(scanned[i], old)
+                                       for i in range(2)])},
+            "dense": dense}
+    out = reshard_params(tree, old, new)
+    assert np.array_equal(out["moe"]["w"], _working(masters, new))
+    assert np.array_equal(
+        out["moe"]["stack"],
+        np.stack([_working(scanned[i], new) for i in range(2)]))
+    assert out["dense"] is dense               # pass-through untouched
+    # round-trip back onto the old grid recovers the original bits
+    back = reshard_params(out, new, old)
+    assert np.array_equal(back["moe"]["w"], tree["moe"]["w"])
+    assert np.array_equal(back["moe"]["stack"], tree["moe"]["stack"])
+
+
+def test_reshard_params_profile_budget_guard():
+    old, new = _placements()
+    tree = {"w": _working(np.arange(8.0).reshape(8, 1), old)}
+    ok = [DeviceProfile(weight=1.0, slots=4)] * 3
+    reshard_params(tree, old, new, profiles=ok)        # fits: no raise
+    with pytest.raises(ValueError, match="slot budgets"):
+        reshard_params(tree, old, new,
+                       profiles=[DeviceProfile(weight=1.0, slots=1)] * 3)
+    with pytest.raises(ValueError, match="3-device"):
+        reshard_params(tree, old, new,
+                       profiles=[DeviceProfile(weight=1.0)] * 2)
+
+
+def test_reshard_params_guard_rails():
+    old, new = _placements()
+    seven = Placement(np.array([[[0, 1, 2, 3], [4, 5, 6, -1]]], np.int32),
+                      7)
+    with pytest.raises(ValueError, match="num_experts"):
+        reshard_params({}, old, seven)
+    # an old placement missing an expert cannot recover its weights —
+    # Placement itself forbids that state, so exercise the defensive
+    # check in _first_replica_index directly with a stand-in
+    from repro.resilience.reshard import _first_replica_index
+
+    class _Gappy:
+        num_experts = 8
+        table = np.array([[[0, 1, 2], [3, 4, 5]]], np.int32)
+
+        def flat(self):
+            return self.table[0]
+
+    with pytest.raises(ValueError, match=r"\[6, 7\]"):
+        _first_replica_index(_Gappy())
+
+
+def test_restore_resharded_end_to_end(tmp_path):
+    old, new = _placements()
+    rng = np.random.default_rng(4)
+    masters = rng.standard_normal((8, 4)).astype(np.float32)
+    path = save_checkpoint(str(tmp_path), 5,
+                           {"moe": _working(masters, old)})
+    template = {"moe": np.zeros_like(_working(masters, new))}
+    out = restore_resharded(path, template, old, new)
+    assert np.array_equal(out["moe"], _working(masters, new))
+    with pytest.raises(ValueError, match="resharded leaf"):
+        restore_resharded(path, {"moe": np.zeros((1, 9, 9, 4))}, old, new)
+
+
+# ----------------------------------------------------- serve wiring
+
+
+def test_serving_session_resilience_validation():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    sc = ServeConfig(max_batch=2, max_seq=16)
+    fc = FleetConfig(enabled=True, min_groups=1, max_groups=2,
+                     slots_per_group=2)
+    dg = DisaggConfig(enabled=True, prefill_slots=2, decode_slots=1,
+                      handoff_depth=1)
+    with pytest.raises(ValueError, match="needs a fleet"):
+        ServingSession(cfg, sc, resilience=ResilienceConfig(enabled=True))
+    with pytest.raises(ValueError, match="no device group"):
+        ServingSession(cfg, sc, disagg=dg,
+                       resilience=ResilienceConfig(enabled=True,
+                                                   crash_steps=(3,)))
+    with pytest.raises(ValueError, match="no transfer boundary"):
+        ServingSession(cfg, sc, fleet=fc,
+                       resilience=ResilienceConfig(
+                           enabled=True, transfer_fail_rate=0.1))
+    # disabled config: no machinery armed, no validation tripwires
+    sess = ServingSession(cfg, sc,
+                          resilience=ResilienceConfig(enabled=False))
+    assert sess.resilience is None
+
+
+def _canonical_report(rep) -> dict:
+    d = rep.to_dict()
+    for k in ("wall_s", "gen_tokens_per_s", "tokens_per_s",
+              "latency_ms", "ttft_ms"):
+        d.pop(k)
+    for r in d["per_request"]:
+        r.pop("latency_ms")
+        r.pop("ttft_ms")
+    return d
+
+
+def test_serve_report_golden_with_resilience_disabled():
+    """ISSUE 9 acceptance: ResilienceConfig(enabled=False) keeps the
+    co-located ServeReport byte-identical to the golden fixture."""
+    arrivals = [(0, 6, 5), (0, 4, 3), (2, 5, 4), (7, 6, 6), (9, 3, 3)]
+    out = {}
+    for name, arch in (("dense", "qwen1.5-0.5b"),
+                       ("moe", "paper-gpt-32x1.3b")):
+        cfg = get_config(arch).smoke()
+        sess = ServingSession(cfg, ServeConfig(max_batch=3, max_seq=24),
+                              seed=0,
+                              resilience=ResilienceConfig(enabled=False))
+        rep = sess.run(replay_trace(arrivals, vocab=cfg.vocab, seed=11))
+        assert "resilience" not in rep.to_dict()
+        out[name] = _canonical_report(rep)
+    blob = json.dumps(out, sort_keys=True, indent=1) + "\n"
+    assert blob == GOLDEN.read_text(), \
+        "disabled resilience changed the co-located ServeReport"
+
+
+def test_serving_session_fleet_crash_end_to_end():
+    cfg = get_config("paper-gpt-32x1.3b").smoke()
+    fc = FleetConfig(enabled=True, min_groups=2, max_groups=3,
+                     slots_per_group=2, scale_check_every=10 ** 6,
+                     group_profiles=(DeviceProfile(weight=1.0, slots=4),))
+    rc = ResilienceConfig(enabled=True, crash_steps=(12,),
+                          straggler_steps=(2,), straggler_window=6,
+                          max_retries=3)
+    sess = ServingSession(cfg, ServeConfig(max_batch=2, max_seq=16),
+                          seed=0, fleet=fc, resilience=rc)
+    reqs = [_req(i, arrival=0, p=4, g=8) for i in range(8)]
+    # first run pays the jit compiles: their multi-hundred-ms steps
+    # dominate the latency EWMA and mask the injected straggler.  The
+    # second run (same session: warm caches, fresh per-run fleet and
+    # injector) sees clean step times — that is the run under test.
+    sess.run(reqs, max_steps=300)
+    rep = sess.run(reqs, max_steps=300)
+    d = rep.to_dict()
+    res = d["resilience"]
+    assert res["enabled"] is True and res["crashes"] == 1
+    assert res["requeues"] >= 1
+    # conservation: every request served or explicitly failed, never lost
+    served = sorted(r.req_id for r in rep.records)
+    assert sorted(served + res["failed_requests"]) == list(range(8))
+    assert res["failed_requests"] == []        # retries sufficed here
+    assert res["straggler_deflations"] >= 1
+    kinds = {e["kind"] for e in res["events"]}
+    assert "crash" in kinds and "straggler_deflate" in kinds
+    assert "straggler_restore" in kinds
+    assert any(e["kind"] == "crash" for e in res["injected"])
+    assert d["fleet"]["crashes"] == 1
+    assert "resilience:" in rep.summary()
+
+
+def test_serving_session_transfer_faults_end_to_end():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    dg = DisaggConfig(enabled=True, prefill_slots=3, decode_slots=2,
+                      handoff_depth=2)
+    rc = ResilienceConfig(enabled=True, transfer_fail_steps=(1, 2, 3, 4),
+                          retry_backoff_steps=1)
+    arrivals = [(0, 6, 5), (0, 4, 3), (2, 5, 4), (7, 6, 6), (9, 3, 3)]
+    sess = ServingSession(cfg, ServeConfig(max_batch=3, max_seq=24),
+                          seed=0, disagg=dg, resilience=rc)
+    rep = sess.run(replay_trace(arrivals, vocab=cfg.vocab, seed=11))
+    assert len(rep.records) == 5 and rep.rejected == 0
+    for r, (_, _, g) in zip(sorted(rep.records, key=lambda r: r.req_id),
+                            arrivals):
+        assert r.n_generated == g              # retried, never dropped
+    res = rep.to_dict()["resilience"]
+    assert res["transfer_failures"] >= 1
+    # retries = failures of an already-retried attempt: a strict subset
+    assert 0 <= res["transfer_retries"] <= res["transfer_failures"]
+    assert res["crashes"] == 0 and res["failed_requests"] == []
+    assert all(e["kind"] == "transfer_fail" for e in res["events"])
+    assert "resilience:" in rep.summary()

@@ -7,8 +7,8 @@ tests/test_docs.py:
 
   * **doc citations** — scans src/, benchmarks/, examples/, tests/ for
     citations of the form ``DESIGN.md``, ``ENGINE.md``, ``SERVING.md``,
-    ``TELEMETRY.md``, ``FLEET.md``, ``ROADMAP.md``, ``PAPER.md`` —
-    optionally with a
+    ``TELEMETRY.md``, ``FLEET.md``, ``RESILIENCE.md``, ``ROADMAP.md``,
+    ``PAPER.md`` — optionally with a
     section number (``DESIGN.md §6``) — and fails if the cited file does
     not exist at the repo root or, for ``DESIGN.md §N``, if no Markdown
     heading containing ``§N`` exists.
@@ -28,8 +28,8 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
-CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|TELEMETRY|FLEET|ROADMAP|PAPER)"
-                  r"\.md(?:\s*§\s*(\d+))?")
+CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|TELEMETRY|FLEET|RESILIENCE"
+                  r"|ROADMAP|PAPER)\.md(?:\s*§\s*(\d+))?")
 HEADING_SECTION = re.compile(r"^#+\s.*§\s*(\d+)\b")
 BENCH_REG = re.compile(r"register_bench\(\s*[\"']([\w-]+)[\"']")
 RUN_CITE = re.compile(r"-m\s+benchmarks\.run\b((?:\s+[A-Za-z0-9_-]+)*)")
@@ -99,7 +99,7 @@ def check(root: pathlib.Path = ROOT) -> list:
     sections = {name: (doc_sections(root / f"{name}.md")
                        if (root / f"{name}.md").exists() else None)
                 for name in ("DESIGN", "ENGINE", "SERVING", "TELEMETRY",
-                             "FLEET", "ROADMAP", "PAPER")}
+                             "FLEET", "RESILIENCE", "ROADMAP", "PAPER")}
     errors = []
     for d in SCAN_DIRS:
         base = root / d
