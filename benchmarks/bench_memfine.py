@@ -1,0 +1,210 @@
+"""MemFine benchmark: memory-aware scheduling on a dbrx_132b-shaped group
+under a small simulated HBM budget (DESIGN.md §16).
+
+The scenario the ISSUE pins: dbrx-132b dims (d_model 6144, per-shard
+grouped-FFN hidden 5376, bf16) on a 2x8 MicroEP group with a 2:1
+compute-skewed fleet.  The weighted LP loads the fast half of the group
+~1.33x the mean, and at that load the monolithic (1-chunk, no-recompute)
+activation peak provably exceeds the simulated per-device HBM budget —
+the memory-oblivious schedule OOMs.  The MemFine planner
+(`core.memory.plan_memory`) finds the smallest chunk count whose
+per-device token caps admit an LP split; scheduling against those caps
+(`solve_lpp1(mem_budgets=...)` + the in-graph projection) fits the
+budget on every device at <= 1.15x the unconstrained weighted-makespan
+optimum.  Both directions are asserted on every step.
+
+Also the perf guard: ``--baseline BENCH_memfine.json`` fails the run if
+the asserted makespan ratio regresses past the committed baseline
+(+ slack), and ``--write-golden`` regenerates the committed golden plan
+(tests/golden/memfine_plan.json) and mini trace
+(tests/golden/memfine_mini_trace.jsonl) that tests/test_memory.py pins.
+
+  PYTHONPATH=src python -m benchmarks.bench_memfine [--smoke] [--out PATH]
+      [--baseline BENCH_memfine.json] [--write-golden]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.lp import solve_lpp1
+from repro.core.memory import MemoryModel
+from repro.core.solver_jax import device_loads
+from repro.engine import MicroEPEngine, SchedulePolicy
+
+from .common import emit, make_main, register_bench, zipf_input
+
+# dbrx-132b on EP 8 x expert-TP 2: 2x8 grid, 32 virtual experts, top_k 8
+ROWS, COLS = 2, 8
+TOKENS_PER_DEV = 512
+HBM_BUDGET_MB = 269.0
+HEADROOM = 0.05
+GOLDEN = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden"
+RATIO_BOUND = 1.15
+# moderate popularity skew: hot experts have 2 replicas each, so the
+# per-replica hot load must stay clear of the per-device token caps
+ZIPF_S = 0.5
+
+
+def _skewed_profiles(g: int) -> str:
+    """2:1 compute skew: the first half of the group is twice as fast."""
+    return ",".join(["2"] * (g // 2) + ["1"] * (g - g // 2))
+
+
+def build_scenario():
+    """dbrx_132b-shaped engine + memory model + installed planner."""
+    cfg = get_config("dbrx-132b")
+    g = ROWS * COLS
+    e_virt = cfg.num_experts * cfg.etp          # 32 virtual experts
+    top_k_eff = cfg.top_k * cfg.etp             # 8
+    eng = MicroEPEngine.build(
+        e_virt, (ROWS, COLS), placement="latin",
+        policy=SchedulePolicy(mode="microep", sweeps=8),
+        device_profiles=_skewed_profiles(g))
+    model = MemoryModel.from_arch(cfg, bytes_per_el=2)
+    eng.install_memory(model, HBM_BUDGET_MB * 2 ** 20,
+                       headroom=HEADROOM, recompute_policy="auto",
+                       max_chunks=8)
+    return cfg, eng, model, top_k_eff
+
+
+def run(smoke: bool = False, out: str = None, baseline: str = None,
+        seed: int = 0, write_golden: bool = False) -> dict:
+    cfg, eng, model, top_k_eff = build_scenario()
+    g = ROWS * COLS
+    e = eng.num_experts
+    budget = HBM_BUDGET_MB * 2 ** 20
+    resident = float(TOKENS_PER_DEV)            # local KV residency
+    w = np.asarray(eng.weights, np.float64)
+    dev = eng.statics.dev
+    devj = jnp.asarray(dev, jnp.int32)
+
+    # the per-geometry plan the runtime would thread through the MoE layer
+    plan = eng.memory_plan(TOKENS_PER_DEV, top_k_eff,
+                           resident_tokens=resident)
+    assert plan.feasible, plan
+    assert plan.chunks > 1, \
+        f"scenario must *require* chunking to fit, got plan {plan.to_dict()}"
+    caps = np.asarray(plan.token_caps, np.float64)
+    capsj = jnp.asarray(caps, jnp.float32)
+
+    rng = np.random.default_rng(seed)
+    steps = 2 if smoke else 8
+    rows_out, ratios = [], []
+    state = None
+    for step in range(steps):
+        # zipf_input draws tokens_per_dev rows; top_k_eff replicas each
+        input_eg = jnp.asarray(
+            zipf_input(rng, e, g, TOKENS_PER_DEV, ZIPF_S) * top_k_eff,
+            jnp.int32)
+        loads = np.asarray(input_eg).sum(axis=1).astype(np.float64)
+
+        # --- memory-oblivious: the unconstrained weighted optimum OOMs
+        res0 = solve_lpp1(loads, dev, g, weights=w)
+        dl0 = np.zeros(g)
+        np.add.at(dl0, dev[dev >= 0], res0.x[dev >= 0])
+        peak0 = model.peak_device_bytes(dl0, chunks=1, recompute=0,
+                                        resident_tokens=resident)
+        assert peak0.max() > budget, \
+            (f"memory-oblivious peak {peak0.max() / 2**20:.1f} MiB must "
+             f"exceed the {HBM_BUDGET_MB} MiB budget")
+
+        # --- memory-aware: LP over the memory-feasible region
+        res1 = solve_lpp1(loads, dev, g, weights=w, mem_budgets=caps)
+        assert res1.status == 0, "capped LP must stay feasible"
+        ratio = res1.objective / max(res0.objective, 1e-9)
+        ratios.append(ratio)
+        assert ratio <= RATIO_BOUND, \
+            (f"memory-aware makespan ratio {ratio:.4f} exceeds "
+             f"{RATIO_BOUND}x the unconstrained optimum")
+
+        # --- in-graph: scheduler projects onto the caps; peak fits budget
+        sched = eng.scheduler(input_eg, state, mem_caps=capsj)
+        state = sched.solver_state
+        dl = np.asarray(device_loads(
+            sched.x_int.astype(jnp.float32), devj, g), np.float64)
+        # integer rounding may overshoot a cap by a token; the headroom
+        # shaved off the caps absorbs it — the *byte* budget must hold
+        peak1 = model.peak_device_bytes(
+            dl, chunks=plan.chunks, recompute=plan.recompute_chunks,
+            resident_tokens=resident)
+        assert (peak1 <= budget).all(), \
+            (f"memory-aware peak {peak1.max() / 2**20:.1f} MiB exceeds "
+             f"the {HBM_BUDGET_MB} MiB budget")
+        mk = float((dl / w).max())
+        assert mk <= res1.objective * 1.05 + 1.0, \
+            (f"in-graph capped makespan {mk:.1f} strays from the capped "
+             f"LP optimum {res1.objective:.1f}")
+
+        row = {"bench": "memfine", "step": step,
+               "oblivious_peak_mb": round(float(peak0.max()) / 2**20, 1),
+               "aware_peak_mb": round(float(peak1.max()) / 2**20, 1),
+               "budget_mb": HBM_BUDGET_MB,
+               "chunks": plan.chunks,
+               "recompute_chunks": plan.recompute_chunks,
+               "lp_ratio": round(ratio, 4),
+               "ingraph_makespan": round(mk, 1)}
+        emit("memfine", **row)
+        rows_out.append(row)
+
+    worst = float(np.max(ratios))
+    summary = {"bench": "memfine", "smoke": smoke,
+               "geometry": f"{ROWS}x{COLS}", "experts": e,
+               "tokens_per_dev": TOKENS_PER_DEV,
+               "hbm_budget_mb": HBM_BUDGET_MB, "headroom": HEADROOM,
+               "plan": plan.to_dict(), "ratio": round(worst, 4),
+               "ratio_bound": RATIO_BOUND, "rows": rows_out}
+    emit("memfine_summary", ratio=summary["ratio"],
+         chunks=plan.chunks, feasible=plan.feasible)
+
+    if baseline:
+        base = json.loads(pathlib.Path(baseline).read_text())
+        slack = 0.02
+        assert worst <= base["ratio"] + slack, \
+            (f"memfine makespan ratio regressed: {worst:.4f} vs committed "
+             f"baseline {base['ratio']:.4f} (+{slack} slack)")
+        print(f"perf guard OK: ratio {worst:.4f} <= "
+              f"baseline {base['ratio']:.4f} + {slack}")
+
+    if write_golden:
+        _write_golden(eng, plan, seed)
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        print(f"wrote {out}")
+    return summary
+
+
+def _write_golden(eng, plan, seed: int) -> None:
+    """Regenerate the committed fixtures tests/test_memory.py pins:
+    the byte-exact plan and the deterministic 32-expert mini trace."""
+    plan_path = GOLDEN / "memfine_plan.json"
+    plan_path.write_text(
+        json.dumps(plan.to_dict(), indent=1, sort_keys=True) + "\n")
+    print(f"wrote {plan_path}")
+
+    rng = np.random.default_rng(seed)
+    e, g = eng.num_experts, eng.num_devices
+    trace_path = GOLDEN / "memfine_mini_trace.jsonl"
+    lines = [json.dumps({
+        "kind": "repro.load_trace", "schema": 1, "layers": 1,
+        "experts": e,
+        "meta": {"source": "synthetic", "kind": "memfine-mini",
+                 "seed": seed, "scenario": "dbrx-132b-small-hbm"}})]
+    for step in range(4):
+        loads = zipf_input(rng, e, g, TOKENS_PER_DEV, ZIPF_S).sum(axis=1) * 8
+        lines.append(json.dumps(
+            {"step": step, "loads": [[float(v) for v in loads]]}))
+    trace_path.write_text("\n".join(lines) + "\n")
+    print(f"wrote {trace_path}")
+
+
+main = make_main(register_bench("memfine", run))
+
+if __name__ == "__main__":
+    raise SystemExit(main())

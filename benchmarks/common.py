@@ -27,6 +27,12 @@ from repro.engine import MicroEPEngine, PlacementSpec, SchedulePolicy
 
 BENCHES: Dict[str, Callable] = {}
 
+# Modules in benchmarks/ that are deliberately NOT register_bench'd:
+# post-processing tools with positional-arg CLIs over dry-run JSONs, not
+# schedulable benches.  tools/check_docs.py scrapes this set — any other
+# unregistered benchmarks/*.py module fails the docs-consistency check.
+EXEMPT_BENCH_MODULES = frozenset({"merge_dryrun", "roofline"})
+
 
 def register_bench(name: str, run_fn: Callable) -> Callable:
     """Register ``run_fn`` as benchmark ``name`` in ``benchmarks.run``'s

@@ -18,8 +18,9 @@ import traceback
 from . import (bench_ablation, bench_balance, bench_breakdown,  # noqa: F401
                bench_commaware, bench_disagg, bench_e2e_model,
                bench_fleet, bench_forecast, bench_hetero, bench_hotpath,
-               bench_migration, bench_pipeline, bench_replication,
-               bench_sched_overhead, bench_serving)
+               bench_memfine, bench_migration, bench_pipeline,
+               bench_replication, bench_resilience, bench_sched_overhead,
+               bench_serving)
 from .common import BENCHES as ALL
 
 

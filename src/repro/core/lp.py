@@ -69,14 +69,23 @@ def _var_index(dev: np.ndarray):
 
 
 def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int,
-               weights: np.ndarray | None = None) -> LPResult:
+               weights: np.ndarray | None = None,
+               mem_budgets: np.ndarray | None = None) -> LPResult:
     """Exact LPP 1 with HiGHS.
 
     ``weights`` (f64[num_devices], all > 0) makes it the *weighted* LP of
     DESIGN.md §11: device rows become  sum_{on g} x <= w_g * m  and the
     objective is the weighted makespan max_g load_g / w_g.  None = uniform
     (identical to the unweighted LP).  ``max_load`` always reports the raw
-    max device load in tokens."""
+    max device load in tokens.
+
+    ``mem_budgets`` (f64[num_devices], >= 0) adds the MemFine feasibility
+    rows of DESIGN.md §16:  sum_{on g} x <= mem_budgets[g]  — hard
+    per-device token caps derived from the activation-memory model
+    (``core.memory``), independent of the makespan variable.  The LP then
+    minimizes the (weighted) makespan *over the memory-feasible region*;
+    when no split fits the caps the result reports ``status != 0`` and an
+    infinite objective."""
     loads = np.asarray(loads, dtype=np.float64)
     e_idx, r_idx = _var_index(dev)
     nvar = len(e_idx)
@@ -89,6 +98,16 @@ def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int,
                 f"got shape {weights.shape}")
         if not (weights > 0).all():
             raise ValueError("device weights must all be > 0")
+    if mem_budgets is not None:
+        mem_budgets = np.asarray(mem_budgets, dtype=np.float64).ravel()
+        if mem_budgets.shape != (num_devices,):
+            raise ValueError(
+                f"mem_budgets must be [num_devices]={num_devices}, "
+                f"got shape {mem_budgets.shape}")
+        if not (mem_budgets >= 0).all() or not np.isfinite(mem_budgets).all():
+            raise ValueError(
+                "mem_budgets must be finite and >= 0 (per-device token "
+                "caps from the activation-memory model, DESIGN.md §16)")
 
     c = np.zeros(nvar + 1)
     c[-1] = 1.0  # minimize m
@@ -99,6 +118,12 @@ def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int,
         a_ub[dev[e_idx[v], r_idx[v]], v] = 1.0
     a_ub[:, -1] = -1.0 if weights is None else -weights
     b_ub = np.zeros(num_devices)
+    if mem_budgets is not None:
+        # memory rows: sum_{vars on g} x <= cap_g (no makespan coefficient)
+        mem_rows = a_ub.copy()
+        mem_rows[:, -1] = 0.0
+        a_ub = np.concatenate([a_ub, mem_rows], axis=0)
+        b_ub = np.concatenate([b_ub, mem_budgets])
 
     # expert rows: sum_r x = load_e
     a_eq = np.zeros((n_e, nvar + 1))
@@ -118,7 +143,8 @@ def solve_lpp1(loads: np.ndarray, dev: np.ndarray, num_devices: int,
 
 
 def budget_feasible(loads: np.ndarray, dev: np.ndarray, num_devices: int,
-                    budgets: np.ndarray, tol: float = 1e-6
+                    budgets: np.ndarray, tol: float = 1e-6,
+                    mem_budgets: np.ndarray | None = None
                     ) -> tuple[bool, float]:
     """Can ``loads`` be scheduled so device g carries <= budgets[g] tokens?
 
@@ -127,9 +153,15 @@ def budget_feasible(loads: np.ndarray, dev: np.ndarray, num_devices: int,
     best achievable split.  Feasible iff utilization <= 1 (+tol) — the
     reduction of DESIGN.md §11 (budget feasibility IS a weighted solve).
     An infeasible *LP* (no replica for a loaded expert) returns
-    ``(False, inf)``."""
+    ``(False, inf)``.
+
+    ``mem_budgets`` (DESIGN.md §16) additionally constrains every device
+    to its activation-memory token cap: feasibility then means the loads
+    fit the token budgets *and* the memory caps simultaneously (an
+    LP infeasible under the caps returns ``(False, inf)``)."""
     budgets = np.asarray(budgets, dtype=np.float64).ravel()
-    res = solve_lpp1(loads, dev, num_devices, weights=budgets)
+    res = solve_lpp1(loads, dev, num_devices, weights=budgets,
+                     mem_budgets=mem_budgets)
     if res.status != 0:
         return False, np.inf
     return bool(res.objective <= 1.0 + tol), float(res.objective)

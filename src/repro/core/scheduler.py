@@ -42,17 +42,25 @@ class ScheduleStatics:
     ``weights`` (f64[G], mean-normalized, or None) are the per-device
     compute weights of a heterogeneous group (DESIGN.md §11).  None means
     homogeneous — the canonical form for uniform profiles, so the uniform
-    path stays bit-identical to the pre-profile scheduler."""
+    path stays bit-identical to the pre-profile scheduler.
+
+    ``mem_caps`` (f64[G], or None) are per-device activation-memory token
+    caps from the MemFine planner (core.memory, DESIGN.md §16): the
+    in-graph solvers project onto them, the host oracle adds them as LP
+    rows.  None (canonical for disabled/infinite budgets) keeps every
+    schedule bit-identical to the memory-oblivious path."""
 
     placement: Placement
     dev: np.ndarray          # int[E, R] replica -> flat device, -1 pad
     slot: np.ndarray         # int[E, R] replica -> local slot id on its device
     num_devices: int
     weights: Optional[np.ndarray] = None   # f64[G] device compute weights
+    mem_caps: Optional[np.ndarray] = None  # f64[G] memory token caps
 
     @classmethod
     def from_placement(cls, p: Placement,
-                       weights: Optional[np.ndarray] = None
+                       weights: Optional[np.ndarray] = None,
+                       mem_caps: Optional[np.ndarray] = None
                        ) -> "ScheduleStatics":
         dev = lp_host.replica_devices(p)
         flat = p.flat()
@@ -74,8 +82,19 @@ class ScheduleStatics:
                 weights = None          # canonical: uniform == no weights
             else:
                 weights = weights / weights.mean()
+        if mem_caps is not None:
+            mem_caps = np.asarray(mem_caps, np.float64).ravel()
+            if mem_caps.shape != (p.num_devices,):
+                raise ValueError(
+                    f"mem_caps must have one entry per device "
+                    f"({p.num_devices}), got shape {mem_caps.shape}")
+            if (mem_caps < 0).any():
+                raise ValueError("mem_caps must all be >= 0")
+            if not np.isfinite(mem_caps).all():
+                mem_caps = None      # canonical: infinite budget == no caps
         return cls(placement=p, dev=dev, slot=slot,
-                   num_devices=p.num_devices, weights=weights)
+                   num_devices=p.num_devices, weights=weights,
+                   mem_caps=mem_caps)
 
     @property
     def num_experts(self) -> int:
@@ -145,21 +164,35 @@ class MicroEPScheduler:
         # heterogeneous groups (DESIGN.md §11): None = uniform fast path
         self._weights = (None if statics.weights is None
                          else np.asarray(statics.weights, np.float32))
+        # MemFine token caps (DESIGN.md §16): None = memory-oblivious path
+        self._mem_caps = (None if statics.mem_caps is None
+                          else np.asarray(statics.mem_caps, np.float32))
 
     def init_state(self) -> SolverState:
         e, r = self.statics.dev.shape
         return SolverState(x=jnp.zeros((e, r), jnp.float32))
 
     def __call__(
-        self, input_eg: jax.Array, state: Optional[SolverState] = None
+        self, input_eg: jax.Array, state: Optional[SolverState] = None,
+        mem_caps: Optional[jax.Array] = None,
     ) -> Schedule:
-        """input_eg: int32[E, G] per-(expert, source-device) token counts."""
+        """input_eg: int32[E, G] per-(expert, source-device) token counts.
+
+        ``mem_caps`` (f32[G] per-device token caps, MemFine DESIGN.md §16)
+        overrides the statics-level caps for this call — the per-geometry
+        plan the engine's ``moe_spec`` threads through the MoE layer.
+        None falls back to ``statics.mem_caps`` (None = memory-oblivious,
+        bit-identical to the pre-MemFine scheduler)."""
         st = self.statics
         dev = jnp.asarray(self._dev, jnp.int32)
         valid = dev >= 0
         loads = input_eg.sum(axis=1).astype(jnp.int32)           # [E]
         weights = (None if self._weights is None
                    else jnp.asarray(self._weights, jnp.float32))
+        if mem_caps is None and self._mem_caps is not None:
+            mem_caps = self._mem_caps
+        caps = (None if mem_caps is None
+                else jnp.asarray(mem_caps, jnp.float32))
 
         if self.mode == "vanilla":
             # Each source row dispatches within its own EP group: replica on
@@ -186,6 +219,7 @@ class MicroEPScheduler:
                     x_init=None if state is None else state.x,
                     sweeps=2 * self.sweeps,
                     weights=weights,
+                    mem_caps=caps,
                 )
             else:
                 sol = solve_replica_loads(
@@ -195,6 +229,7 @@ class MicroEPScheduler:
                     x_init=None if state is None else state.x,
                     sweeps=self.sweeps,
                     weights=weights,
+                    mem_caps=caps,
                 )
             x_int = round_replica_loads(sol.x, loads, valid)
             routed = route_tokens(input_eg, x_int, dev,
@@ -218,12 +253,19 @@ class MicroEPScheduler:
         )
 
     # ---------------- host-side oracle (paper's HiGHS path) ----------------
-    def schedule_host(self, input_eg: np.ndarray) -> np.ndarray:
+    def schedule_host(self, input_eg: np.ndarray,
+                      mem_budgets: Optional[np.ndarray] = None) -> np.ndarray:
         """Solve with HiGHS on the host (paper §5.1 exact path).  Returns the
         optimal fractional x[E, R].  Used by tests/benches as the oracle.
-        On a heterogeneous group this is the weighted LP (DESIGN.md §11)."""
+        On a heterogeneous group this is the weighted LP (DESIGN.md §11);
+        with memory token caps present (``mem_budgets`` argument, falling
+        back to ``statics.mem_caps``) the caps enter as the MemFine
+        feasibility rows of DESIGN.md §16."""
         loads = np.asarray(input_eg).sum(axis=1)
+        if mem_budgets is None:
+            mem_budgets = self.statics.mem_caps
         res = lp_host.solve_lpp1(loads, self.statics.dev,
                                  self.statics.num_devices,
-                                 weights=self.statics.weights)
+                                 weights=self.statics.weights,
+                                 mem_budgets=mem_budgets)
         return res.x

@@ -55,7 +55,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["SolverState", "water_fill", "solve_replica_loads",
-           "solve_replica_loads_batched", "device_loads"]
+           "solve_replica_loads_batched", "device_loads",
+           "project_mem_caps"]
 
 
 class SolverState(NamedTuple):
@@ -127,6 +128,91 @@ def device_loads(x: jax.Array, dev: jax.Array, num_devices: int) -> jax.Array:
     return loads[:num_devices]
 
 
+def project_mem_caps(x: jax.Array, dev: jax.Array, num_devices: int,
+                     mem_caps: jax.Array, iters: int = 4) -> jax.Array:
+    """Project replica loads toward the memory-feasible region
+    ``{x : device_loads(x) <= mem_caps}`` (MemFine, DESIGN.md §16),
+    preserving every expert's row sum (the LP equality constraints).
+
+    Each pass (1) scales the replicas of every over-cap device down to the
+    cap, then (2) pours each expert's freed tokens back onto its replicas
+    proportionally to their devices' remaining cap headroom — a damped-
+    Jacobi analog of the exact LP memory rows, cheap enough to run inside
+    the compiled step.  When the caps are infeasible for the current loads
+    (no redistribution can fit) the pour falls back to the pre-cut shape,
+    so the result degrades toward the unconstrained iterate instead of
+    dropping tokens: row sums are *always* preserved; cap satisfaction is
+    exact when any feasible redistribution is reachable in ``iters``
+    passes, best-effort otherwise (the planner's headroom knob absorbs
+    the residual).
+
+    Exact no-op (bit-identical ``x``) when every device is already within
+    its cap — the disabled/infinite-budget invariant test_memory pins."""
+    valid = dev >= 0
+    safe_dev = jnp.where(valid, dev, 0)
+    loads = x.sum(-1)
+    caps = mem_caps.astype(x.dtype)
+
+    def step(x, _):
+        dl = device_loads(x, dev, num_devices)
+        over = dl > caps                                    # bool[G]
+        factor = jnp.where(over, caps / jnp.maximum(dl, 1e-9), 1.0)
+        over_r = over[safe_dev] & valid                     # [E, R]
+        x_cut = jnp.where(over_r, x * factor[safe_dev], x)
+        deficit = loads - x_cut.sum(-1)                     # [E] >= 0
+        dl_cut = device_loads(x_cut, dev, num_devices)
+        head = jnp.clip(caps - dl_cut, 0.0, None)           # [G]
+        hr = jnp.where(valid & ~over[safe_dev], head[safe_dev], 0.0)
+        hsum = hr.sum(-1, keepdims=True)
+        # no headroom anywhere for this expert: caps are infeasible for
+        # it — pour back along the pre-cut shape (degrade, don't drop)
+        base = jnp.where(valid, x, 0.0)
+        bsum = jnp.maximum(base.sum(-1, keepdims=True), 1e-9)
+        share = jnp.where(hsum > 0, hr / jnp.maximum(hsum, 1e-9),
+                          base / bsum)
+        x_new = x_cut + deficit[:, None] * share
+        return jnp.where(over.any(), x_new, x), None
+
+    x, _ = jax.lax.scan(step, x, None, length=iters)
+    return x
+
+
+def _cap_effective_weights(x: jax.Array, dev: jax.Array, num_devices: int,
+                           caps: jax.Array,
+                           weights: jax.Array | None) -> jax.Array:
+    """Compute-weights clamped by the memory caps (DESIGN.md §16).
+
+    At the capped optimum a device with cap_g < w_g·m* sits exactly at its
+    cap — its effective fill rate is cap_g / m*.  m* is estimated from the
+    aggregate relaxation (drop the expert structure, keep the caps):
+    the unique m with  Σ_g min(w_g·m, cap_g) = total load, found in closed
+    form by sorting the breakpoints cap_g / w_g.  Re-sweeping with
+    w̃_g = min(w_g, cap_g / m*) water-fills capped devices to ~their caps
+    and *re-balances the rest*, which the pure projection (per-expert
+    headroom pour) cannot do; the aggregate m* lower-bounds the true
+    optimum, so any overshoot past a cap is cleaned up by the final
+    projection pass."""
+    w_base = (jnp.ones((num_devices,), jnp.float32) if weights is None
+              else weights)
+    total = x.sum()
+    t = caps / jnp.maximum(w_base, 1e-9)          # per-device breakpoint
+    order = jnp.argsort(t)
+    ts, ws, cs = t[order], w_base[order], caps[order]
+    # with the k cheapest-breakpoint devices capped:
+    #   m_k = (total - Σ_{i<k} cap_i) / Σ_{i>=k} w_i,  valid on [t_{k-1}, t_k]
+    ccap = jnp.concatenate([jnp.zeros((1,), caps.dtype),
+                            jnp.cumsum(cs)])[:-1]
+    wrem = jnp.cumsum(ws[::-1])[::-1]
+    m_k = (total - ccap) / jnp.maximum(wrem, 1e-9)
+    prev = jnp.concatenate([jnp.full((1,), -jnp.inf, ts.dtype), ts[:-1]])
+    ok = (m_k >= prev - 1e-6) & (m_k <= ts + 1e-6) & (m_k > 0)
+    # no valid segment = caps infeasible in aggregate: degrade to
+    # cap-proportional weights (any m beyond the last breakpoint)
+    m_star = jnp.where(ok.any(), m_k[jnp.argmax(ok)], 2.0 * ts[-1])
+    w_eff = jnp.minimum(w_base, caps / jnp.maximum(m_star, 1e-9))
+    return jnp.maximum(w_eff, 1e-6)
+
+
 def _init_iterate(loads: jax.Array, valid: jax.Array,
                   x_init: jax.Array | None) -> jax.Array:
     """Feasible starting point: proportional split, or the warm start
@@ -149,6 +235,7 @@ def solve_replica_loads(
     x_init: jax.Array | None = None,
     sweeps: int = 6,
     weights: jax.Array | None = None,
+    mem_caps: jax.Array | None = None,
 ) -> SolverState:
     """Solve LPP 1 on device.
 
@@ -164,6 +251,10 @@ def solve_replica_loads(
         Σ_g L_g²/w_g (the lexicographically optimal base w.r.t. w; each
         block subproblem is a weighted water-fill, DESIGN.md §11).  None =
         the bit-exact uniform path.
+      mem_caps: optional f32[G] per-device token caps from the activation-
+        memory model (MemFine, DESIGN.md §16) — the final iterate is
+        projected toward the memory-feasible region with
+        :func:`project_mem_caps`.  None = the bit-exact uncapped path.
 
     Returns SolverState with x: f32[E, R], Σ_r x[e] == loads[e].
     """
@@ -172,27 +263,37 @@ def solve_replica_loads(
     loads = loads.astype(jnp.float32)
     if weights is not None:
         weights = weights.astype(jnp.float32)
-    x = _init_iterate(loads, valid, x_init)
-    dl = device_loads(x, dev, num_devices)
 
-    def expert_step(carry, e):
-        x, dl = carry
-        xe = x[e]
-        dev_e = dev[e]
-        valid_e = dev_e >= 0
-        safe_dev = jnp.where(valid_e, dev_e, 0)
-        b = dl[safe_dev] - xe  # device load excluding e
-        w_e = None if weights is None else weights[safe_dev]
-        alloc = water_fill(b, loads[e], valid_e, weights=w_e)
-        dl = dl.at[safe_dev].add(jnp.where(valid_e, alloc - xe, 0.0))
-        x = x.at[e].set(alloc)
-        return (x, dl), None
+    def run_sweeps(x, wts):
+        dl = device_loads(x, dev, num_devices)
 
-    def sweep(carry, _):
-        carry, _ = jax.lax.scan(expert_step, carry, jnp.arange(n_e))
-        return carry, None
+        def expert_step(carry, e):
+            x, dl = carry
+            xe = x[e]
+            dev_e = dev[e]
+            valid_e = dev_e >= 0
+            safe_dev = jnp.where(valid_e, dev_e, 0)
+            b = dl[safe_dev] - xe  # device load excluding e
+            w_e = None if wts is None else wts[safe_dev]
+            alloc = water_fill(b, loads[e], valid_e, weights=w_e)
+            dl = dl.at[safe_dev].add(jnp.where(valid_e, alloc - xe, 0.0))
+            x = x.at[e].set(alloc)
+            return (x, dl), None
 
-    (x, dl), _ = jax.lax.scan(sweep, (x, dl), None, length=sweeps)
+        def sweep(carry, _):
+            carry, _ = jax.lax.scan(expert_step, carry, jnp.arange(n_e))
+            return carry, None
+
+        (x, dl), _ = jax.lax.scan(sweep, (x, dl), None, length=sweeps)
+        return x
+
+    x = run_sweeps(_init_iterate(loads, valid, x_init), weights)
+    if mem_caps is not None:
+        caps = mem_caps.astype(jnp.float32)
+        x = project_mem_caps(x, dev, num_devices, caps)
+        x = run_sweeps(x, _cap_effective_weights(
+            x, dev, num_devices, caps, weights))
+        x = project_mem_caps(x, dev, num_devices, caps)
     return SolverState(x=x)
 
 
@@ -289,6 +390,7 @@ def solve_replica_loads_batched(
     sweeps: int = 8,
     damping: jax.Array | float | None = None,
     weights: jax.Array | None = None,
+    mem_caps: jax.Array | None = None,
 ) -> SolverState:
     """Solve LPP 1 with damped Jacobi water-filling — all experts per sweep
     in one vectorized step (no `lax.scan` over experts), batched over any
@@ -315,28 +417,40 @@ def solve_replica_loads_batched(
         LP min max_g load_g / w_g (weighted water-fill per sweep,
         DESIGN.md §11); shared across the batch.  None = the bit-exact
         uniform path.
+      mem_caps: optional f32[G] per-device token caps (MemFine,
+        DESIGN.md §16) — every batch member's final iterate is projected
+        toward the memory-feasible region with :func:`project_mem_caps`;
+        shared across the batch.  None = the bit-exact uncapped path.
 
     Returns SolverState with x: f32[..., E, R], Σ_r x[..., e, :] == loads.
     """
     loads = loads.astype(jnp.float32)
     if weights is not None:
         weights = weights.astype(jnp.float32)
+    if mem_caps is not None:
+        mem_caps = mem_caps.astype(jnp.float32)
     if damping is None:
         damping = _jacobi_damping(dev, num_devices, weights)
     batch_shape = loads.shape[:-1]
     n_e = loads.shape[-1]
     r_max = dev.shape[1]
     flat_loads = loads.reshape((-1, n_e))
+
+    def one(l, x0):
+        x = _jacobi_solve_one(l, dev, num_devices, x0, sweeps, damping,
+                              weights)
+        if mem_caps is not None:
+            x = project_mem_caps(x, dev, num_devices, mem_caps)
+            w_eff = _cap_effective_weights(x, dev, num_devices, mem_caps,
+                                           weights)
+            x = _jacobi_solve_one(l, dev, num_devices, x, sweeps,
+                                  damping, w_eff)
+            x = project_mem_caps(x, dev, num_devices, mem_caps)
+        return x
+
     if x_init is None:
-        flat_init = None
-        solve = jax.vmap(
-            lambda l: _jacobi_solve_one(l, dev, num_devices, None,
-                                        sweeps, damping, weights))
-        x = solve(flat_loads)
+        x = jax.vmap(lambda l: one(l, None))(flat_loads)
     else:
         flat_init = x_init.reshape((-1, n_e, r_max))
-        solve = jax.vmap(
-            lambda l, x0: _jacobi_solve_one(l, dev, num_devices, x0,
-                                            sweeps, damping, weights))
-        x = solve(flat_loads, flat_init)
+        x = jax.vmap(one)(flat_loads, flat_init)
     return SolverState(x=x.reshape(batch_shape + (n_e, r_max)))

@@ -31,9 +31,10 @@ from .registry import (
     get_baseline_system,
 )
 from .config import (ConfigError, DeviceProfile, DisaggConfig, FleetConfig,
-                     PlacementSpec, ReplicationConfig, ResilienceConfig,
-                     RuntimeConfig, SchedulePolicy, ServeConfig,
-                     TelemetryConfig, profile_slot_budgets, profile_weights)
+                     MemoryConfig, PlacementSpec, ReplicationConfig,
+                     ResilienceConfig, RuntimeConfig, SchedulePolicy,
+                     ServeConfig, TelemetryConfig, profile_slot_budgets,
+                     profile_weights)
 from .engine import MicroEPEngine
 
 __all__ = [
@@ -42,7 +43,7 @@ __all__ = [
     "register_placement_strategy", "register_baseline_system",
     "get_placement_strategy", "get_baseline_system",
     "ConfigError", "DeviceProfile", "DisaggConfig", "FleetConfig",
-    "PlacementSpec", "SchedulePolicy",
+    "MemoryConfig", "PlacementSpec", "SchedulePolicy",
     "ReplicationConfig", "ResilienceConfig", "RuntimeConfig", "ServeConfig",
     "TelemetryConfig",
     "MicroEPEngine", "profile_weights", "profile_slot_budgets",

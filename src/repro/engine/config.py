@@ -26,9 +26,9 @@ from typing import Any, Mapping, Optional, Tuple
 import numpy as np
 
 __all__ = ["ConfigError", "DeviceProfile", "DisaggConfig", "FleetConfig",
-           "PlacementSpec", "SchedulePolicy", "RuntimeConfig", "ServeConfig",
-           "TelemetryConfig", "ReplicationConfig", "profile_weights",
-           "profile_slot_budgets"]
+           "MemoryConfig", "PlacementSpec", "SchedulePolicy", "RuntimeConfig",
+           "ServeConfig", "TelemetryConfig", "ReplicationConfig",
+           "profile_weights", "profile_slot_budgets"]
 
 
 class ConfigError(ValueError):
@@ -293,6 +293,73 @@ class SchedulePolicy:
         return cls(**_known_fields(cls, d))
 
 
+_RECOMPUTE_POLICIES = ("never", "auto", "always")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryConfig:
+    """Memory-aware fine-grained scheduling (MemFine, DESIGN.md §16).
+
+    enabled          — turn the activation-memory planner on.  False
+                       (default) is bit-identical to the memory-oblivious
+                       engine: no model is built, no caps are threaded.
+    hbm_budget_mb    — simulated per-device HBM budget for activations,
+                       in MiB.  Required > 0 when enabled.
+    headroom         — fraction of the budget held back as slack
+                       (fragmentation, transient buffers); caps are sized
+                       against budget*(1-headroom).  In [0, 0.9).
+    recompute_policy — 'never' (chunking only), 'auto' (recompute chunks
+                       only when every no-recompute plan is infeasible),
+                       'always' (recompute every chunk).
+    max_chunks       — upper bound on the dispatch-pipeline chunk count
+                       the planner may pick (actual counts are divisors
+                       of the group size, DESIGN.md §2).
+
+    CLI: ``--memory``, ``--hbm-budget-mb``, ``--mem-headroom``,
+    ``--recompute-policy``, ``--mem-max-chunks``.
+    """
+
+    enabled: bool = False
+    hbm_budget_mb: float = 0.0
+    headroom: float = 0.05
+    recompute_policy: str = "auto"
+    max_chunks: int = 8
+
+    def __post_init__(self):
+        _check_choice("MemoryConfig.recompute_policy", self.recompute_policy,
+                      _RECOMPUTE_POLICIES)
+        object.__setattr__(self, "hbm_budget_mb", float(self.hbm_budget_mb))
+        object.__setattr__(self, "headroom", float(self.headroom))
+        if self.enabled and not self.hbm_budget_mb > 0:
+            raise ConfigError(
+                f"MemoryConfig.hbm_budget_mb must be > 0 when memory-aware "
+                f"scheduling is enabled, got {self.hbm_budget_mb!r}")
+        if self.hbm_budget_mb < 0:
+            raise ConfigError(
+                f"MemoryConfig.hbm_budget_mb must be >= 0, "
+                f"got {self.hbm_budget_mb!r}")
+        if not (0.0 <= self.headroom < 0.9):
+            raise ConfigError(
+                f"MemoryConfig.headroom must be in [0, 0.9), "
+                f"got {self.headroom!r}")
+        if not isinstance(self.max_chunks, (int, np.integer)) or \
+                self.max_chunks < 1:
+            raise ConfigError(
+                f"MemoryConfig.max_chunks must be a positive int, "
+                f"got {self.max_chunks!r}")
+
+    @property
+    def budget_bytes(self) -> float:
+        return self.hbm_budget_mb * 2.0 ** 20
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MemoryConfig":
+        return cls(**_known_fields(cls, d))
+
+
 # legacy build_runtime(**kwargs) name -> (section, field)
 _LEGACY_KWARGS = {
     "dtype": (None, "dtype"),
@@ -343,6 +410,9 @@ class RuntimeConfig:
                       pre-profile scheduler.  Accepts the CLI string form
                       (``'2@4,1@2'``), a sequence of numbers (weights), or
                       dicts.
+    memory          — :class:`MemoryConfig` for MemFine memory-aware
+                      scheduling (DESIGN.md §16).  Disabled by default
+                      (bit-identical to the memory-oblivious engine).
     """
 
     placement: PlacementSpec = PlacementSpec()
@@ -356,6 +426,7 @@ class RuntimeConfig:
     seq_parallel: bool = False
     pipeline_stages: int = 1
     device_profiles: Optional[Tuple[DeviceProfile, ...]] = None
+    memory: MemoryConfig = MemoryConfig()
 
     def __post_init__(self):
         if isinstance(self.placement, str):
@@ -384,6 +455,15 @@ class RuntimeConfig:
                 f"got {self.pipeline_stages!r}")
         object.__setattr__(self, "device_profiles",
                            _canonical_profiles(self.device_profiles))
+        if self.memory is None:
+            object.__setattr__(self, "memory", MemoryConfig())
+        elif isinstance(self.memory, Mapping):
+            object.__setattr__(self, "memory",
+                               MemoryConfig.from_dict(self.memory))
+        elif not isinstance(self.memory, MemoryConfig):
+            raise ConfigError(
+                f"RuntimeConfig.memory must be a MemoryConfig (or a dict "
+                f"form of one), got {self.memory!r}")
 
     # ------------------------------------------------------------- dtypes
     @property
@@ -397,6 +477,7 @@ class RuntimeConfig:
         d = dataclasses.asdict(self)
         d["placement"] = self.placement.to_dict()
         d["policy"] = self.policy.to_dict()
+        d["memory"] = self.memory.to_dict()
         if self.device_profiles is not None:
             d["device_profiles"] = [p.to_dict()
                                     for p in self.device_profiles]
@@ -477,6 +558,23 @@ class RuntimeConfig:
                             "separated, one entry per MicroEP-group device "
                             "(e.g. '2@4,1@2,1@2,1@2'); omit for a "
                             "homogeneous fleet (DESIGN.md §11)")
+        m = parser.add_argument_group("MemFine memory-aware scheduling "
+                                      "(DESIGN.md §16)")
+        m.add_argument("--memory", action=b, default=d.memory.enabled,
+                       help="enable the activation-memory planner "
+                            "(requires --hbm-budget-mb > 0)")
+        m.add_argument("--hbm-budget-mb", type=float,
+                       default=d.memory.hbm_budget_mb,
+                       help="simulated per-device HBM activation budget, MiB")
+        m.add_argument("--mem-headroom", type=float,
+                       default=d.memory.headroom,
+                       help="fraction of the budget held back as slack")
+        m.add_argument("--recompute-policy", default=d.memory.recompute_policy,
+                       choices=_RECOMPUTE_POLICIES,
+                       help="when chunks may trade recompute for memory")
+        m.add_argument("--mem-max-chunks", type=int,
+                       default=d.memory.max_chunks,
+                       help="upper bound on planner-chosen pipeline chunks")
 
     @classmethod
     def from_cli_args(cls, args: argparse.Namespace) -> "RuntimeConfig":
@@ -491,7 +589,12 @@ class RuntimeConfig:
             impl=args.impl, remat=args.remat, unroll=args.unroll,
             layout=args.layout, seq_parallel=args.seq_parallel,
             pipeline_stages=args.pipeline_stages,
-            device_profiles=args.device_profiles)
+            device_profiles=args.device_profiles,
+            memory=MemoryConfig(enabled=args.memory,
+                                hbm_budget_mb=args.hbm_budget_mb,
+                                headroom=args.mem_headroom,
+                                recompute_policy=args.recompute_policy,
+                                max_chunks=args.mem_max_chunks))
 
     def to_cli_args(self) -> list:
         """Flag list such that ``from_cli_args(parser.parse_args(...))``
@@ -511,6 +614,11 @@ class RuntimeConfig:
             "--layout", self.layout,
             "--seq-parallel" if self.seq_parallel else "--no-seq-parallel",
             "--pipeline-stages", str(self.pipeline_stages),
+            "--memory" if self.memory.enabled else "--no-memory",
+            "--hbm-budget-mb", str(self.memory.hbm_budget_mb),
+            "--mem-headroom", str(self.memory.headroom),
+            "--recompute-policy", self.memory.recompute_policy,
+            "--mem-max-chunks", str(self.memory.max_chunks),
         ]
         if self.impl is not None:
             flags += ["--impl", self.impl]

@@ -26,6 +26,7 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
+from ..core.memory import MemoryModel, MemoryPlan, plan_memory
 from ..core.placement import Placement
 from ..core.scheduler import MicroEPScheduler, Schedule, ScheduleStatics
 from ..core.solver_jax import SolverState
@@ -63,6 +64,13 @@ class MicroEPEngine:
         self.device_profiles = device_profiles
         self.slot_budgets = slot_budgets
         self._dispatch_cache: dict = {}
+        # MemFine (DESIGN.md §16) — populated by install_memory()
+        self.memory_model: Optional[MemoryModel] = None
+        self._mem_budget_bytes: float = 0.0
+        self._mem_headroom: float = 0.0
+        self._mem_recompute_policy: str = "auto"
+        self._mem_max_chunks: int = 8
+        self._mem_plan_cache: dict = {}
 
     # ------------------------------------------------------------- build
     @classmethod
@@ -73,6 +81,7 @@ class MicroEPEngine:
         placement: PlacementLike = None,
         policy: PolicyLike = None,
         device_profiles: ProfilesLike = None,
+        mem_caps: Optional[np.ndarray] = None,
     ) -> "MicroEPEngine":
         """Assemble an engine for ``num_experts`` experts on a (rows, cols)
         device grid.
@@ -90,6 +99,12 @@ class MicroEPEngine:
         validated against) the placement.  Uniform weights canonicalize
         to the unweighted fast path, so passing all-equal profiles is
         bit-identical to passing none.
+
+        ``mem_caps`` (f64[G], MemFine DESIGN.md §16) installs static
+        per-device token caps on the schedule statics: the in-graph
+        solvers project onto them and the host oracle adds them as LP
+        rows.  None (default, and canonical for non-finite caps) is
+        bit-identical to the memory-oblivious engine.
         """
         rows, cols = grid
         if isinstance(policy, str):
@@ -156,7 +171,8 @@ class MicroEPEngine:
                     f"{budgets[over].tolist()} — use a budget-aware "
                     f"strategy (e.g. 'asymmetric') or raise the budgets")
 
-        statics = ScheduleStatics.from_placement(table, weights=weights)
+        statics = ScheduleStatics.from_placement(table, weights=weights,
+                                                 mem_caps=mem_caps)
         scheduler = MicroEPScheduler(
             statics, sweeps=policy.sweeps, locality=policy.locality,
             mode=policy.mode, sequencing=policy.sequencing,
@@ -210,6 +226,58 @@ class MicroEPEngine:
         The oracle tests/benches compare the in-graph solver against."""
         return self.scheduler.schedule_host(input_eg)
 
+    # ----------------------------------------------------- memory (§16)
+    def install_memory(self, model: MemoryModel, budget_bytes: float, *,
+                       headroom: float = 0.0,
+                       recompute_policy: str = "auto",
+                       max_chunks: int = 8) -> None:
+        """Arm the MemFine activation-memory planner (DESIGN.md §16).
+
+        After this, :meth:`memory_plan` prices token geometries against
+        ``budget_bytes`` per device and the runtime threads the resulting
+        chunk counts + token caps through the MoE layer.  Engines without
+        an installed model stay bit-identical to the memory-oblivious
+        path."""
+        if not budget_bytes > 0:
+            raise ConfigError(
+                f"install_memory budget_bytes must be > 0, "
+                f"got {budget_bytes!r}")
+        self.memory_model = model
+        self._mem_budget_bytes = float(budget_bytes)
+        self._mem_headroom = float(headroom)
+        self._mem_recompute_policy = recompute_policy
+        self._mem_max_chunks = int(max_chunks)
+        self._mem_plan_cache.clear()
+
+    def memory_plan(self, tokens_per_device: int, top_k: int,
+                    resident_tokens: float = 0.0) -> MemoryPlan:
+        """MemFine plan (chunk count, recompute flags, per-device token
+        caps) for one token geometry (cached — safe per jit trace).
+
+        Reference loads are the uniform split of the geometry's total
+        routed tokens (tokens_per_device * G * top_k); the plan's caps
+        are absolute byte-derived token counts, so they remain valid for
+        any actual load pattern of the same geometry."""
+        if self.memory_model is None:
+            raise ConfigError(
+                "memory_plan requires install_memory() first "
+                "(MemFine, DESIGN.md §16)")
+        key = (tokens_per_device, top_k, float(resident_tokens))
+        out = self._mem_plan_cache.get(key)
+        if out is None:
+            g = self.num_devices
+            total = float(tokens_per_device) * g * top_k
+            loads = np.full(self.num_experts, total / self.num_experts)
+            out = plan_memory(
+                loads, self.statics.dev, g, self.memory_model,
+                self._mem_budget_bytes,
+                resident_tokens=resident_tokens,
+                max_chunks=self._mem_max_chunks,
+                recompute_policy=self._mem_recompute_policy,
+                headroom=self._mem_headroom)
+            self._mem_plan_cache[key] = out
+        return out
+
     # --------------------------------------------------------- dispatch
     def dispatch_statics(self, tokens_per_device: int, top_k: int,
                          capacity_factor: float = 2.0,
@@ -238,22 +306,29 @@ class MicroEPEngine:
         pipeline_stages: int = 1,
         dispatch_mode: str = "packed",
         chunk_comm: str = "ppermute",
+        mem_caps: Optional[np.ndarray] = None,
     ) -> MoEFFNSpec:
         """Static spec for ``moe_ffn`` (one MoE layer on this group).
 
         ``pipeline_stages`` > 1 runs the destination-chunked pipelined hot
         path (DESIGN.md §2); ``dispatch_mode`` picks the buffer movement
         ('packed' gathers | 'scatter' legacy); ``chunk_comm`` picks the
-        per-chunk collective ('ppermute' | 'a2a')."""
+        per-chunk collective ('ppermute' | 'a2a').  ``mem_caps`` (f32[G],
+        MemFine DESIGN.md §16) are per-device token caps the layer passes
+        to the scheduler for this geometry — typically
+        ``memory_plan(...).token_caps``."""
         statics = self.dispatch_statics(tokens_per_device, top_k,
                                         capacity_factor, bm)
+        if mem_caps is not None:
+            mem_caps = np.asarray(mem_caps, np.float32)
         return MoEFFNSpec(statics=statics, scheduler=self.scheduler,
                           top_k=top_k, activation=activation,
                           group_axes=group_axes, tp_axis=tp_axis,
                           kernel_impl=kernel_impl,
                           pipeline_stages=pipeline_stages,
                           dispatch_mode=dispatch_mode,
-                          chunk_comm=chunk_comm)
+                          chunk_comm=chunk_comm,
+                          mem_caps=mem_caps)
 
     def __repr__(self) -> str:
         r, c = self.grid

@@ -34,6 +34,7 @@ from jax.experimental.shard_map import shard_map
 
 from .. import sharding as sh
 from ..configs.base import ArchConfig, InputShape
+from ..core.memory import MemoryModel
 from ..core.placement import Placement
 from ..core.scheduler import ScheduleStatics
 from ..core.solver_jax import SolverState
@@ -176,11 +177,21 @@ def _build_moe_apply(cfg: ArchConfig, mi: sh.MeshInfo,
                 [valid, jnp.zeros((pad,), bool)])
         valid = row_ok
         t_local = npad // total_dev
+        stages = config.pipeline_stages
+        mem_caps = None
+        if engine.memory_model is not None:
+            # MemFine (DESIGN.md §16): price this token geometry at trace
+            # time — the plan's chunk count widens the dispatch pipeline
+            # and its per-device token caps constrain the scheduler
+            plan = engine.memory_plan(t_local, top_k_eff)
+            stages = max(stages, plan.chunks)
+            mem_caps = np.asarray(plan.token_caps, np.float32)
         spec = engine.moe_spec(
             t_local, top_k_eff, activation=act, group_axes=group_axes,
             capacity_factor=config.capacity_factor,
             kernel_impl=config.impl,
-            pipeline_stages=config.pipeline_stages)
+            pipeline_stages=stages,
+            mem_caps=mem_caps)
 
         def inner(w_router, experts, x_loc, st_loc, valid_loc):
             experts_loc = jax.tree_util.tree_map(lambda w: w[0, 0], experts)
@@ -303,6 +314,18 @@ def build_runtime(
                        else config.placement),
             policy=config.policy,
             device_profiles=config.device_profiles)
+        if config.memory.enabled:
+            # MemFine (DESIGN.md §16): price activations in the working
+            # dtype; the engine caches a plan per token geometry and the
+            # MoE island threads its chunk count + token caps through
+            bytes_per_el = {"bfloat16": 2, "float16": 2, "float32": 4}[
+                config.dtype]
+            engine.install_memory(
+                MemoryModel.from_arch(cfg, bytes_per_el),
+                config.memory.budget_bytes,
+                headroom=config.memory.headroom,
+                recompute_policy=config.memory.recompute_policy,
+                max_chunks=config.memory.max_chunks)
         moe_apply = _build_moe_apply(cfg, mi, engine, config)
     rt = dec.Runtime(moe_apply=moe_apply,
                      shard=sh.act_constraint(

@@ -31,6 +31,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.scheduler import MicroEPScheduler, ScheduleStatics
 from ..core.solver_jax import SolverState
@@ -68,6 +69,11 @@ class MoEFFNSpec(NamedTuple):
     chunk_comm      — per-stage collective of the pipelined path:
                       'ppermute' (schedulable overlap) | 'a2a' (portable
                       full-shape reference).
+    mem_caps        — f32[G] per-device MemFine token caps for this
+                      geometry (DESIGN.md §16), passed to the scheduler
+                      so token splits respect the activation-memory
+                      budget.  None = memory-oblivious (bit-identical to
+                      the pre-MemFine layer).
     """
 
     statics: D.DispatchStatics
@@ -80,6 +86,7 @@ class MoEFFNSpec(NamedTuple):
     pipeline_stages: int = 1
     dispatch_mode: str = "packed"
     chunk_comm: str = "ppermute"
+    mem_caps: Optional[np.ndarray] = None
 
 
 def _gather_counts(cnt: jax.Array, group_axes: Sequence[str]) -> jax.Array:
@@ -114,7 +121,9 @@ def moe_ffn(
     cnt = jnp.zeros(st.num_experts + 1, jnp.int32).at[ex].add(1)[: st.num_experts]
     input_eg = _gather_counts(cnt, spec.group_axes)          # [E, G]
 
-    sched = spec.scheduler(input_eg, state)
+    sched = spec.scheduler(input_eg, state,
+                           mem_caps=None if spec.mem_caps is None
+                           else jnp.asarray(spec.mem_caps, jnp.float32))
     my_index = (
         jax.lax.axis_index(spec.group_axes).astype(jnp.int32)
         if spec.group_axes else jnp.zeros((), jnp.int32)

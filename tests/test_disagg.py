@@ -38,7 +38,8 @@ import argparse
 import numpy as np
 import pytest
 
-from hypothesis_compat import HealthCheck, given, settings, st
+from hypothesis_compat import (HAVE_HYPOTHESIS, HealthCheck, given,
+                               settings, st)
 
 from repro.configs import get_config
 from repro.engine import ConfigError, DeviceProfile, DisaggConfig, ServeConfig
@@ -232,35 +233,34 @@ def _simulate(arrivals, pf_slots, dc_slots, depth, max_seq,
 # ------------------------------------------------- property-based suite
 
 
-@settings(max_examples=40, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
-                               st.integers(1, 6)),
-                     min_size=0, max_size=16),
-       pf_slots=st.integers(1, 4),
-       dc_slots=st.integers(1, 3),
-       depth=st.integers(1, 3),
-       max_seq=st.integers(4, 12))
-def test_disagg_invariants_property(gaps, pf_slots, dc_slots, depth,
-                                    max_seq):
-    """Random traces x geometries: every boundary invariant holds and the
-    loop always drains (the _simulate harness asserts them all)."""
+def _gaps_to_arrivals(gaps):
     t = 0
     arrivals = []
     for gap, p, g in gaps:
         t += gap
         arrivals.append((t, p, g))
-    _simulate(arrivals, pf_slots, dc_slots, depth, max_seq)
+    return arrivals
 
 
-@settings(max_examples=40, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
-                               st.integers(1, 6)),
-                     min_size=1, max_size=16),
-       slots=st.integers(1, 4),
-       kv_budget=st.integers(8, 40))
-def test_unified_manager_invariants_property(gaps, slots, kv_budget):
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                                   st.integers(1, 6)),
+                         min_size=0, max_size=16),
+           pf_slots=st.integers(1, 4),
+           dc_slots=st.integers(1, 3),
+           depth=st.integers(1, 3),
+           max_seq=st.integers(4, 12))
+    def test_disagg_invariants_property(gaps, pf_slots, dc_slots, depth,
+                                        max_seq):
+        """Random traces x geometries: every boundary invariant holds and
+        the loop always drains (the _simulate harness asserts them all)."""
+        _simulate(_gaps_to_arrivals(gaps), pf_slots, dc_slots, depth,
+                  max_seq)
+
+
+def _unified_manager_body(gaps, slots, kv_budget):
     """Co-located manager under random traffic: FIFO admission, budgets
     respected, conservation."""
     cfg = ServeConfig(max_batch=slots, max_seq=8,
@@ -297,6 +297,35 @@ def test_unified_manager_invariants_property(gaps, slots, kv_budget):
         {r.req_id for r in reqs}
 
 
+_UNIFIED_GRID = [
+    # (gaps [(gap, prompt, gen)], slots, kv_budget)
+    ([(0, 3, 2)], 1, 8),                          # single request
+    ([(0, 3, 3)] * 6, 2, 12),                     # burst > slots
+    ([(1, 4, 2)] * 5, 4, 8),                      # steady, tight kv
+    ([(0, 8, 6)], 2, 40),                         # oversize -> rejected
+    ([(2, 2, 1)] * 8, 3, 16),                     # short gens, gaps
+    ([(0, 1, 5), (0, 5, 1), (3, 4, 4)], 2, 10),   # mixed shapes
+]
+
+
+@pytest.mark.parametrize("gaps,slots,kv_budget", _UNIFIED_GRID,
+                         ids=range(len(_UNIFIED_GRID)))
+def test_unified_manager_invariants_deterministic(gaps, slots, kv_budget):
+    _unified_manager_body(gaps, slots, kv_budget)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                                   st.integers(1, 6)),
+                         min_size=1, max_size=16),
+           slots=st.integers(1, 4),
+           kv_budget=st.integers(8, 40))
+    def test_unified_manager_invariants_property(gaps, slots, kv_budget):
+        _unified_manager_body(gaps, slots, kv_budget)
+
+
 # ------------------------------------- deterministic adversarial grid
 
 _GRID = [
@@ -327,32 +356,54 @@ def test_disagg_invariants_deterministic(arrivals, pf, dc, depth,
 # ------------------------------------------------- fault extensions
 
 
-@settings(max_examples=40, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
-                               st.integers(1, 6)),
-                     min_size=1, max_size=12),
-       pf_slots=st.integers(1, 4),
-       dc_slots=st.integers(1, 3),
-       depth=st.integers(1, 3),
-       rate=st.floats(0.0, 0.5),
-       crash_step=st.one_of(st.none(), st.integers(0, 10)),
-       fault_seed=st.integers(0, 9))
-def test_disagg_fault_invariants_property(gaps, pf_slots, dc_slots, depth,
-                                          rate, crash_step, fault_seed):
+def _fault_invariants_body(gaps, pf_slots, dc_slots, depth, rate,
+                           crash_step, fault_seed):
     """Random traces x geometries x faults (transfer-failure rates and a
     prefill-fleet crash): every boundary invariant still holds, the loop
     still drains, and conservation covers the explicit failed state."""
-    t = 0
-    arrivals = []
-    for gap, p, g in gaps:
-        t += gap
-        arrivals.append((t, p, g))
+    arrivals = _gaps_to_arrivals(gaps)
     out = _simulate(arrivals, pf_slots, dc_slots, depth, max_seq=12,
                     transfer_fail_rate=rate, fault_seed=fault_seed,
                     backoff=(1, 3), crash_step=crash_step)
     assert set(out["finished"]) | out["rejected"] | out["failed"] == \
         set(range(len(arrivals)))
+
+
+_FAULT_GRID = [
+    # (gaps, pf, dc, depth, rate, crash_step, fault_seed)
+    ([(0, 3, 2)] * 4, 2, 1, 1, 0.0, None, 0),     # fault-free baseline
+    ([(0, 3, 2)] * 4, 2, 1, 1, 0.5, None, 1),     # heavy transfer loss
+    ([(0, 4, 3)] * 6, 1, 1, 1, 0.3, None, 2),     # loss + depth-1 stall
+    ([(1, 3, 2)] * 5, 2, 2, 2, 0.0, 0, 3),        # crash before admit
+    ([(0, 3, 2)] * 5, 2, 2, 2, 0.0, 3, 4),        # mid-flight crash
+    ([(0, 5, 4)] * 4, 3, 1, 1, 0.4, 5, 5),        # loss AND crash
+]
+
+
+@pytest.mark.parametrize("gaps,pf,dc,depth,rate,crash,seed", _FAULT_GRID,
+                         ids=range(len(_FAULT_GRID)))
+def test_disagg_fault_invariants_deterministic(gaps, pf, dc, depth, rate,
+                                               crash, seed):
+    _fault_invariants_body(gaps, pf, dc, depth, rate, crash, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(gaps=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 8),
+                                   st.integers(1, 6)),
+                         min_size=1, max_size=12),
+           pf_slots=st.integers(1, 4),
+           dc_slots=st.integers(1, 3),
+           depth=st.integers(1, 3),
+           rate=st.floats(0.0, 0.5),
+           crash_step=st.one_of(st.none(), st.integers(0, 10)),
+           fault_seed=st.integers(0, 9))
+    def test_disagg_fault_invariants_property(gaps, pf_slots, dc_slots,
+                                              depth, rate, crash_step,
+                                              fault_seed):
+        _fault_invariants_body(gaps, pf_slots, dc_slots, depth, rate,
+                               crash_step, fault_seed)
 
 
 def test_disagg_transfer_failures_retry_never_drop():

@@ -29,6 +29,33 @@ def test_bench_registry_scraped_from_modules():
             "fig7_balance"} <= names, names
 
 
+def test_bench_registry_drift_checked():
+    # every benchmarks/*.py module must register_bench or be exempted
+    assert check_docs.check_bench_registry_drift(ROOT) == []
+    # the exempt set is scraped from benchmarks/common.py, not hardcoded
+    assert check_docs.exempt_modules(ROOT) == {"merge_dryrun", "roofline"}
+
+
+def test_bench_registry_drift_detects(tmp_path):
+    # an unregistered, unexempted module fails; exempting it passes
+    b = tmp_path / "benchmarks"
+    b.mkdir()
+    (b / "run.py").write_text("from . import bench_ok\n")
+    (b / "bench_ok.py").write_text("register_bench('ok', run)\n")
+    (b / "bench_rogue.py").write_text("def run(): pass\n")
+    (b / "common.py").write_text(
+        "EXEMPT_BENCH_MODULES = frozenset({'merge_dryrun'})\n")
+    errors = check_docs.check_bench_registry_drift(tmp_path)
+    assert len(errors) == 1 and "bench_rogue" in errors[0]
+    (b / "common.py").write_text(
+        "EXEMPT_BENCH_MODULES = frozenset({'merge_dryrun', 'bench_rogue'})\n")
+    assert check_docs.check_bench_registry_drift(tmp_path) == []
+    # a registered module missing from the run.py menu is also drift
+    (b / "bench_lost.py").write_text("register_bench('lost', run)\n")
+    errors = check_docs.check_bench_registry_drift(tmp_path)
+    assert len(errors) == 1 and "missing from" in errors[0]
+
+
 def test_roadmap_open_items_populated():
     # the ~5-PR re-anchor gate: ROADMAP.md § Open items must list
     # concrete directions, not the placeholder

@@ -29,7 +29,8 @@ import pathlib
 import numpy as np
 import pytest
 
-from hypothesis_compat import HealthCheck, given, settings, st
+from hypothesis_compat import (HAVE_HYPOTHESIS, HealthCheck, given,
+                               settings, st)
 
 from repro.configs import get_config
 from repro.core.lp import budget_feasible, replica_devices
@@ -296,17 +297,15 @@ def test_cost_model_parse():
         FleetCostModel.parse("0@4=1.0")
 
 
-@settings(deadline=None, max_examples=30,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8), st.integers(2, 5))
-def test_budget_feasibility_monotone_in_budgets(seed, e, g):
+def _budget_monotone_body(seed, e, g):
     """Growing per-device token budgets never turns a feasible window
     infeasible, and never increases utilization — the property the
     elastic planner's admit schedule relies on."""
     rng = np.random.default_rng(seed)
     loads = rng.uniform(0.0, 100.0, e)
     from repro.replication import replicated_placement
-    p = replicated_placement(1, g, e, loads=loads)
+    # explicit slots: the default requires e % g == 0
+    p = replicated_placement(1, g, e, loads=loads, slots=-(-e // g))
     dev = replica_devices(p)
     base = rng.uniform(10.0, 200.0, g)
     ok0, util0 = budget_feasible(loads, dev, g, base)
@@ -316,6 +315,25 @@ def test_budget_feasibility_monotone_in_budgets(seed, e, g):
         assert ok1, "growing budgets broke feasibility"
     if np.isfinite(util0):
         assert util1 <= util0 + 1e-6
+
+
+_BUDGET_GRID = [(0, 2, 2), (1, 8, 5), (2, 4, 3), (3, 8, 2),
+                (4, 5, 5), (5, 3, 4), (6, 8, 3), (7, 6, 2)]
+
+
+@pytest.mark.parametrize("seed,e,g", _BUDGET_GRID,
+                         ids=range(len(_BUDGET_GRID)))
+def test_budget_feasibility_monotone_deterministic(seed, e, g):
+    _budget_monotone_body(seed, e, g)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=30,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8),
+           st.integers(2, 5))
+    def test_budget_feasibility_monotone_in_budgets(seed, e, g):
+        _budget_monotone_body(seed, e, g)
 
 
 def test_trace_windows_shapes():

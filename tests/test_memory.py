@@ -1,0 +1,591 @@
+"""MemFine invariant harness: memory-aware fine-grained scheduling
+(core/memory.py + the LP memory rows + the in-graph projection,
+DESIGN.md §16).
+
+The four ISSUE-pinned invariants, each proved twice — once by a
+hypothesis property (when installed) and once by a deterministic
+adversarial grid that always runs (the PR-7 dual pattern, so nothing
+skips in the minimal env):
+
+  (a) simulated peak per-device activation memory never exceeds the
+      budget for any generated load / profile / chunking — the token cap
+      inversion is conservative by construction;
+  (b) disabled / infinite-budget ``MemoryConfig`` is bit-identical to
+      the memory-oblivious schedules;
+  (c) tightening budgets never *increases* feasibility (monotonicity);
+  (d) recompute fires only when every no-recompute plan is infeasible.
+
+Plus: ``MemoryConfig`` dict/CLI round-trips (nested in RuntimeConfig),
+the ``solve_lpp1(mem_budgets=)`` feasibility rows, the in-graph
+``project_mem_caps`` guarantees, and the committed golden plan for the
+dbrx_132b-on-small-HBM scenario (regenerate with
+``python -m benchmarks.bench_memfine --write-golden``).
+"""
+import argparse
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import (HAVE_HYPOTHESIS, HealthCheck, given,
+                               settings, st)
+
+from repro.core.lp import budget_feasible, replica_devices, solve_lpp1
+from repro.core.memory import (MemoryModel, MemoryPlan, chunk_options,
+                               plan_memory)
+from repro.core.placement import latin_placement
+from repro.core.scheduler import ScheduleStatics
+from repro.core.solver_jax import (device_loads, project_mem_caps,
+                                   solve_replica_loads,
+                                   solve_replica_loads_batched)
+from repro.engine import ConfigError, MemoryConfig, MicroEPEngine, \
+    RuntimeConfig
+from repro.telemetry import LoadTrace
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+
+# ---------------------------------------------------------- config
+
+
+def test_memory_config_defaults_and_validation():
+    mc = MemoryConfig()
+    assert not mc.enabled and mc.recompute_policy == "auto"
+    with pytest.raises(ConfigError, match="hbm_budget_mb"):
+        MemoryConfig(enabled=True)                    # budget required
+    with pytest.raises(ConfigError, match="headroom"):
+        MemoryConfig(headroom=0.95)
+    with pytest.raises(ConfigError, match="recompute_policy"):
+        MemoryConfig(recompute_policy="sometimes")
+    with pytest.raises(ConfigError, match="max_chunks"):
+        MemoryConfig(max_chunks=0)
+
+
+def test_memory_config_dict_roundtrip():
+    mc = MemoryConfig(enabled=True, hbm_budget_mb=128.0, headroom=0.1,
+                      recompute_policy="never", max_chunks=4)
+    assert MemoryConfig.from_dict(mc.to_dict()) == mc
+    assert MemoryConfig.from_dict(json.loads(json.dumps(mc.to_dict()))) == mc
+    assert mc.budget_bytes == 128.0 * 2 ** 20
+
+
+def test_runtime_config_nests_memory():
+    rc = RuntimeConfig(memory=MemoryConfig(enabled=True, hbm_budget_mb=64.0))
+    # dict round-trip carries the nested section
+    assert RuntimeConfig.from_dict(rc.to_dict()) == rc
+    assert rc.to_dict()["memory"]["hbm_budget_mb"] == 64.0
+    # a raw mapping canonicalizes into MemoryConfig
+    rc2 = RuntimeConfig(memory={"enabled": True, "hbm_budget_mb": 64.0})
+    assert rc2 == rc
+    with pytest.raises(ConfigError, match="memory"):
+        RuntimeConfig(memory="lots")
+
+
+def test_runtime_config_memory_cli_roundtrip():
+    rc = RuntimeConfig(memory=MemoryConfig(enabled=True, hbm_budget_mb=256.0,
+                                           headroom=0.1,
+                                           recompute_policy="always",
+                                           max_chunks=4))
+    ap = argparse.ArgumentParser()
+    RuntimeConfig.add_cli_args(ap)
+    assert RuntimeConfig.from_cli_args(ap.parse_args(rc.to_cli_args())) == rc
+    # per-entry-point defaults seed the flag surface
+    ap2 = argparse.ArgumentParser()
+    RuntimeConfig.add_cli_args(ap2, defaults=rc)
+    assert RuntimeConfig.from_cli_args(ap2.parse_args([])) == rc
+    # the flags themselves parse
+    got = RuntimeConfig.from_cli_args(ap.parse_args(
+        ["--memory", "--hbm-budget-mb", "512", "--mem-headroom", "0.2",
+         "--recompute-policy", "never", "--mem-max-chunks", "2"]))
+    assert got.memory == MemoryConfig(enabled=True, hbm_budget_mb=512.0,
+                                      headroom=0.2,
+                                      recompute_policy="never", max_chunks=2)
+
+
+# ------------------------------------------------------ memory model
+
+
+def _model(d_model=512, d_ff=1024, bytes_per_el=2, kv=0.0):
+    return MemoryModel(d_model=d_model, d_ff=d_ff,
+                       bytes_per_el=bytes_per_el, kv_bytes_per_token=kv)
+
+
+def test_memory_model_validation_and_prices():
+    m = _model()
+    assert m.dispatch_bytes_per_token == 2 * 512 * 2
+    assert m.act_bytes_per_token == 3 * 1024 * 2
+    assert m.store_bytes_per_token == 1024 * 2
+    with pytest.raises(ValueError, match="positive"):
+        MemoryModel(d_model=0, d_ff=8)
+    with pytest.raises(ValueError, match="kv_bytes_per_token"):
+        MemoryModel(d_model=8, d_ff=8, kv_bytes_per_token=-1.0)
+    with pytest.raises(ValueError, match="chunks"):
+        m.peak_device_bytes(10.0, chunks=0)
+    with pytest.raises(ValueError, match="recompute"):
+        m.peak_device_bytes(10.0, chunks=2, recompute=3)
+
+
+def test_memory_model_from_arch_dbrx():
+    from repro.configs import get_config
+    cfg = get_config("dbrx-132b")
+    m = MemoryModel.from_arch(cfg, bytes_per_el=2)
+    assert m.d_model == 6144
+    assert m.d_ff == 10752 // 2                 # per expert-TP shard
+    assert m.kv_bytes_per_token == 2.0 * 8 * 128 * 2
+
+
+def test_peak_monotone_in_load_chunks_recompute():
+    m = _model()
+    loads = np.linspace(0, 4096, 33)
+    for n in (1, 2, 4):
+        p = m.peak_device_bytes(loads, chunks=n)
+        assert (np.diff(p) >= 0).all()          # monotone in load
+    # more chunks never raises the peak; recompute never raises it
+    p1 = m.peak_device_bytes(loads, chunks=1)
+    p4 = m.peak_device_bytes(loads, chunks=4)
+    p4r = m.peak_device_bytes(loads, chunks=4, recompute=4)
+    assert (p4 <= p1 + 1e-9).all()
+    assert (p4r <= p4 + 1e-9).all()
+
+
+# invariant (a) shared body: the cap inversion is conservative — the
+# peak at the returned cap provably fits the (headroom-shaved) budget
+def _cap_inversion_body(d_model, d_ff, bytes_per_el, kv, budget_mb,
+                        chunks, recompute, resident, headroom):
+    m = _model(d_model, d_ff, bytes_per_el, kv)
+    budget = budget_mb * 2 ** 20
+    cap = m.token_cap(budget, chunks=chunks, recompute=recompute,
+                      resident_tokens=resident, headroom=headroom)
+    assert cap >= 0
+    if cap > 0:
+        peak = float(m.peak_device_bytes(
+            cap, chunks=chunks, recompute=recompute,
+            resident_tokens=resident))
+        assert peak <= budget * (1.0 - headroom) + 1e-6, \
+            (cap, peak, budget)
+    # one more token must not provably fit (cap is the *largest* such
+    # load up to the ceil-slack token the conservative bound holds back)
+    peak_next = float(m.peak_device_bytes(
+        cap + 2, chunks=chunks, recompute=recompute,
+        resident_tokens=resident))
+    assert peak_next > budget * (1.0 - headroom) - \
+        m.act_bytes_per_token - 1e-6
+
+
+_CAP_GRID = [
+    # d_model, d_ff, bytes, kv, budget_mb, n, r, resident, headroom
+    (512, 1024, 2, 0.0, 8.0, 1, 0, 0.0, 0.0),
+    (512, 1024, 2, 0.0, 8.0, 4, 2, 0.0, 0.05),
+    (6144, 5376, 2, 4096.0, 269.0, 2, 0, 512.0, 0.05),   # the bench scenario
+    (64, 64, 4, 16.0, 0.25, 1, 0, 100.0, 0.0),           # tiny budget
+    (64, 64, 4, 16.0, 0.001, 1, 0, 1000.0, 0.5),         # budget under kv
+    (1024, 4096, 2, 0.0, 64.0, 8, 8, 0.0, 0.25),
+]
+
+
+@pytest.mark.parametrize("params", _CAP_GRID, ids=range(len(_CAP_GRID)))
+def test_cap_inversion_deterministic(params):
+    _cap_inversion_body(*params)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(d_model=st.integers(8, 8192), d_ff=st.integers(8, 16384),
+           bytes_per_el=st.sampled_from([1, 2, 4]),
+           kv=st.floats(0.0, 1e5), budget_mb=st.floats(0.001, 1024.0),
+           chunks=st.integers(1, 8), rec_frac=st.floats(0.0, 1.0),
+           resident=st.floats(0.0, 4096.0), headroom=st.floats(0.0, 0.89))
+    def test_cap_inversion_property(d_model, d_ff, bytes_per_el, kv,
+                                    budget_mb, chunks, rec_frac, resident,
+                                    headroom):
+        _cap_inversion_body(d_model, d_ff, bytes_per_el, kv, budget_mb,
+                            chunks, int(rec_frac * chunks), resident,
+                            headroom)
+
+
+# ---------------------------------------------------------- planner
+
+
+def _scenario(e=8, rows=2, cols=2, seed=0, total=4000.0, zipf=1.1):
+    """Loads + replica map of a small latin-placement group."""
+    g = rows * cols
+    p = latin_placement(rows, cols, e)
+    dev = replica_devices(p)
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(zipf, size=e).astype(np.float64)
+    loads = raw * (total / raw.sum())
+    return loads, dev, g
+
+
+def test_chunk_options_divisors():
+    assert chunk_options(16, 8) == (1, 2, 4, 8)
+    assert chunk_options(6, 8) == (1, 2, 3, 6)
+    assert chunk_options(7, 4) == (1,)
+    assert chunk_options(4, 1) == (1,)
+
+
+# invariant (a) end-to-end + (d) shared body
+def _plan_body(e, rows, cols, seed, total, budget_mb, policy, headroom):
+    loads, dev, g = _scenario(e, rows, cols, seed, total)
+    m = _model()
+    budget = budget_mb * 2 ** 20
+    plan = plan_memory(loads, dev, g, m, budget, max_chunks=8,
+                       recompute_policy=policy, headroom=headroom)
+    assert plan.chunks in chunk_options(g, 8)
+    assert len(plan.recompute) == plan.chunks
+    assert len(plan.token_caps) == g
+    if policy == "never":
+        assert plan.recompute_chunks == 0
+    if policy == "always":
+        assert plan.recompute_chunks == plan.chunks
+
+    if plan.feasible:
+        caps = np.asarray(plan.token_caps, np.float64)
+        # (a) any schedule respecting the caps fits the byte budget on
+        # every device — the cap inversion guarantees it
+        peak = m.peak_device_bytes(caps, chunks=plan.chunks,
+                                   recompute=plan.recompute_chunks)
+        assert (peak <= budget + 1e-6).all(), (peak.max(), budget)
+        # and the caps really do admit an LP split of these loads
+        ok, util = budget_feasible(loads, dev, g, caps)
+        assert ok and util <= 1.0 + 1e-6
+        # (d) recompute fired only if *every* no-recompute plan fails
+        if plan.recompute_chunks > 0:
+            assert policy == "always" or not any(
+                plan_memory(loads, dev, g, m, budget, max_chunks=8,
+                            recompute_policy="never",
+                            headroom=headroom).feasible
+                for _ in (0,))
+    return plan
+
+
+_PLAN_GRID = [
+    # e, rows, cols, seed, total, budget_mb, policy, headroom
+    (8, 2, 2, 0, 4000.0, 64.0, "auto", 0.0),      # roomy: 1 chunk wins
+    (8, 2, 2, 0, 4000.0, 12.0, "auto", 0.0),      # tight: chunks needed
+    (8, 2, 2, 0, 4000.0, 9.0, "auto", 0.05),      # tighter: recompute zone
+    (8, 2, 2, 0, 4000.0, 0.5, "auto", 0.0),       # hopeless: infeasible
+    (8, 2, 2, 1, 4000.0, 12.0, "never", 0.0),
+    (8, 2, 2, 1, 4000.0, 12.0, "always", 0.0),
+    (32, 2, 8, 2, 65536.0, 269.0, "auto", 0.05),  # bench-shaped
+    (8, 1, 4, 3, 100.0, 2.0, "auto", 0.3),
+]
+
+
+@pytest.mark.parametrize("params", _PLAN_GRID, ids=range(len(_PLAN_GRID)))
+def test_plan_invariants_deterministic(params):
+    _plan_body(*params)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 99), e=st.sampled_from([4, 8, 16]),
+           total=st.floats(10.0, 1e5), budget_mb=st.floats(0.1, 256.0),
+           policy=st.sampled_from(["never", "auto", "always"]),
+           headroom=st.floats(0.0, 0.5))
+    def test_plan_invariants_property(seed, e, total, budget_mb, policy,
+                                      headroom):
+        _plan_body(e, 2, 2, seed, total, budget_mb, policy, headroom)
+
+
+# invariant (d), surgical: budgets placed exactly between the
+# no-recompute price and the all-recompute price force recompute on
+def test_recompute_only_when_norecompute_infeasible():
+    loads, dev, g = _scenario(seed=4)
+    m = _model()
+    # bisect budgets: find one where 'never' fails but 'auto' fits
+    lo, hi = 0.1 * 2**20, 64 * 2**20
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        if plan_memory(loads, dev, g, m, mid,
+                       recompute_policy="never").feasible:
+            hi = mid
+        else:
+            lo = mid
+    # just below the 'never' threshold
+    budget = 0.98 * hi
+    p_never = plan_memory(loads, dev, g, m, budget,
+                          recompute_policy="never")
+    p_auto = plan_memory(loads, dev, g, m, budget,
+                         recompute_policy="auto")
+    if not p_never.feasible and p_auto.feasible:
+        assert p_auto.recompute_chunks > 0
+    # and wherever 'never' already fits, 'auto' must not recompute
+    p_never2 = plan_memory(loads, dev, g, m, hi * 1.02,
+                           recompute_policy="never")
+    p_auto2 = plan_memory(loads, dev, g, m, hi * 1.02,
+                          recompute_policy="auto")
+    assert p_never2.feasible
+    assert p_auto2.feasible and p_auto2.recompute_chunks == 0
+
+
+# invariant (c) shared body: tightening budgets never increases
+# feasibility, growing them never decreases it
+def _monotone_body(seed, e, total, budget_mb):
+    loads, dev, g = _scenario(e=e, seed=seed, total=total)
+    m = _model()
+    budgets = budget_mb * 2 ** 20
+    rng = np.random.default_rng(seed + 1)
+    shrink = rng.uniform(0.3, 1.0)
+    p_big = plan_memory(loads, dev, g, m, budgets)
+    p_small = plan_memory(loads, dev, g, m, budgets * shrink)
+    assert p_big.feasible or not p_small.feasible
+    # LP-level: same monotonicity through the mem_budgets rows
+    caps_b = np.asarray(p_big.token_caps, np.float64)
+    caps_s = np.minimum(caps_b * shrink, caps_b)
+    ok_b = solve_lpp1(loads, dev, g, mem_budgets=caps_b).status == 0
+    ok_s = solve_lpp1(loads, dev, g, mem_budgets=caps_s).status == 0
+    assert ok_b or not ok_s
+
+
+_MONO_GRID = [(s, e, t, b) for s, (e, t, b) in enumerate(
+    [(8, 4000.0, 16.0), (8, 4000.0, 10.0), (8, 400.0, 1.0),
+     (16, 20000.0, 64.0), (4, 50.0, 0.2), (8, 4000.0, 0.6)])]
+
+
+@pytest.mark.parametrize("seed,e,total,budget_mb", _MONO_GRID,
+                         ids=range(len(_MONO_GRID)))
+def test_budget_monotone_deterministic(seed, e, total, budget_mb):
+    _monotone_body(seed, e, total, budget_mb)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 99), e=st.sampled_from([4, 8, 16]),
+           total=st.floats(10.0, 1e5), budget_mb=st.floats(0.1, 128.0))
+    def test_budget_monotone_property(seed, e, total, budget_mb):
+        _monotone_body(seed, e, total, budget_mb)
+
+
+# ------------------------------------------------------- LP mem rows
+
+
+def test_solve_lpp1_mem_budgets_rows():
+    loads, dev, g = _scenario(seed=5)
+    base = solve_lpp1(loads, dev, g)
+    # generous caps change nothing
+    res = solve_lpp1(loads, dev, g, mem_budgets=np.full(g, loads.sum()))
+    assert res.status == 0
+    assert res.objective == pytest.approx(base.objective)
+    # binding caps floor-raise the makespan to exactly the cap level where
+    # possible, infeasible below the total/G waterline
+    tight = np.full(g, base.objective * 0.9)
+    res_t = solve_lpp1(loads, dev, g, mem_budgets=tight)
+    if res_t.status == 0:
+        dl = np.zeros(g)
+        np.add.at(dl, dev[dev >= 0], res_t.x[dev >= 0])
+        assert (dl <= tight + 1e-6).all()
+    starved = np.full(g, loads.sum() / (2 * g))
+    assert solve_lpp1(loads, dev, g, mem_budgets=starved).status != 0
+    with pytest.raises(ValueError, match="mem_budgets"):
+        solve_lpp1(loads, dev, g, mem_budgets=np.ones(g + 1))
+    with pytest.raises(ValueError, match="finite"):
+        solve_lpp1(loads, dev, g, mem_budgets=np.full(g, np.inf))
+
+
+def test_budget_feasible_mem_budgets_passthrough():
+    loads, dev, g = _scenario(seed=6)
+    budgets = np.full(g, loads.sum(), np.float64)
+    ok, util = budget_feasible(loads, dev, g, budgets)
+    assert ok
+    # mem caps starve it even when token budgets are generous
+    ok2, util2 = budget_feasible(loads, dev, g, budgets,
+                                 mem_budgets=np.full(g, 1.0))
+    assert not ok2 and util2 == np.inf
+
+
+# --------------------------------------------- in-graph projection
+
+
+def _smooth_scenario(e=8, rows=2, cols=2, seed=0, lo=200.0, hi=800.0):
+    """Uniform-ish loads: every expert's share fits mildly binding caps."""
+    g = rows * cols
+    p = latin_placement(rows, cols, e)
+    dev = replica_devices(p)
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, e), dev, g
+
+
+def test_project_mem_caps_preserves_rows_and_caps():
+    loads, dev, g = _smooth_scenario(seed=7)
+    devj = jnp.asarray(dev, jnp.int32)
+    sol = solve_replica_loads(jnp.asarray(loads, jnp.float32), devj, g,
+                              sweeps=10)
+    x = sol.x
+    caps = jnp.asarray(np.full(g, float(loads.sum()) / g * 1.2), jnp.float32)
+    y = project_mem_caps(x, devj, g, caps)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)),
+                               np.asarray(x.sum(-1)), rtol=1e-5)
+    dl = np.asarray(device_loads(y, devj, g))
+    assert (dl <= np.asarray(caps) * (1 + 1e-5) + 1e-3).all()
+    assert (np.asarray(y) >= -1e-6).all()
+
+
+def test_project_mem_caps_noop_under_caps():
+    loads, dev, g = _scenario(seed=8)
+    devj = jnp.asarray(dev, jnp.int32)
+    x = solve_replica_loads(jnp.asarray(loads, jnp.float32), devj, g,
+                            sweeps=6).x
+    huge = jnp.full((g,), 1e9, jnp.float32)
+    y = project_mem_caps(x, devj, g, huge)
+    # bitwise no-op: the under-cap branch returns x unchanged
+    assert (np.asarray(y) == np.asarray(x)).all()
+
+
+def test_project_mem_caps_infeasible_degrades():
+    loads, dev, g = _scenario(seed=9)
+    devj = jnp.asarray(dev, jnp.int32)
+    x = solve_replica_loads(jnp.asarray(loads, jnp.float32), devj, g,
+                            sweeps=6).x
+    # caps that cannot hold the total: row sums still preserved
+    caps = jnp.full((g,), float(loads.sum()) / (4 * g), jnp.float32)
+    y = project_mem_caps(x, devj, g, caps)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)),
+                               np.asarray(x.sum(-1)), rtol=1e-5)
+
+
+def test_solvers_respect_feasible_caps():
+    loads, dev, g = _smooth_scenario(seed=10, lo=400.0, hi=1600.0)
+    devj = jnp.asarray(dev, jnp.int32)
+    loads_j = jnp.asarray(loads, jnp.float32)
+    opt = solve_lpp1(loads, dev, g).objective
+    caps_np = np.full(g, max(opt * 1.15, loads.sum() / g * 1.1))
+    caps = jnp.asarray(caps_np, jnp.float32)
+    for name, sol in (
+            ("scan", solve_replica_loads(loads_j, devj, g, sweeps=12,
+                                         mem_caps=caps)),
+            ("batched", solve_replica_loads_batched(loads_j, devj, g,
+                                                    sweeps=30,
+                                                    mem_caps=caps))):
+        dl = np.asarray(device_loads(sol.x, devj, g))
+        assert (dl <= caps_np * (1 + 1e-4) + 1e-2).all(), (name, dl)
+        np.testing.assert_allclose(np.asarray(sol.x.sum(-1)), loads,
+                                   rtol=1e-4)
+
+
+# ------------------------------------- invariant (b): bit-identity
+
+
+def test_disabled_memory_bit_identical_schedules():
+    eng = MicroEPEngine.build(8, (2, 2))
+    rng = np.random.default_rng(11)
+    input_eg = jnp.asarray(rng.integers(0, 60, (8, 4)), jnp.int32)
+    s0 = eng.scheduler(input_eg)
+    s_none = eng.scheduler(input_eg, mem_caps=None)
+    assert (np.asarray(s0.x_int) == np.asarray(s_none.x_int)).all()
+    assert (np.asarray(s0.flow) == np.asarray(s_none.flow)).all()
+    # statics-level: non-finite caps canonicalize to None == no caps
+    st_inf = ScheduleStatics.from_placement(
+        eng.placement, mem_caps=np.full(4, np.inf))
+    assert st_inf.mem_caps is None
+    # RuntimeConfig with memory disabled is the default config
+    assert RuntimeConfig().memory == MemoryConfig()
+    assert RuntimeConfig(memory=MemoryConfig()) == RuntimeConfig()
+
+
+def test_statics_mem_caps_validation_and_default():
+    eng = MicroEPEngine.build(8, (2, 2))
+    with pytest.raises(ValueError, match="mem_caps"):
+        ScheduleStatics.from_placement(eng.placement, mem_caps=np.ones(3))
+    with pytest.raises(ValueError, match=">= 0"):
+        ScheduleStatics.from_placement(eng.placement,
+                                       mem_caps=np.full(4, -1.0))
+    # statics-level caps become the scheduler default, overridable per call
+    caps = np.full(4, 1e6)
+    eng2 = MicroEPEngine.build(8, (2, 2), mem_caps=caps)
+    assert np.array_equal(eng2.statics.mem_caps, caps)
+    rng = np.random.default_rng(12)
+    input_eg = jnp.asarray(rng.integers(0, 60, (8, 4)), jnp.int32)
+    s_def = eng2.scheduler(input_eg)          # huge caps: projection no-op
+    s_ref = MicroEPEngine.build(8, (2, 2)).scheduler(input_eg)
+    assert (np.asarray(s_def.x_int) == np.asarray(s_ref.x_int)).all()
+
+
+def test_engine_memory_plan_requires_install():
+    eng = MicroEPEngine.build(8, (2, 2))
+    assert eng.memory_model is None
+    with pytest.raises(ConfigError, match="install_memory"):
+        eng.memory_plan(64, 2)
+    with pytest.raises(ConfigError, match="budget_bytes"):
+        eng.install_memory(_model(), 0.0)
+    eng.install_memory(_model(), 4 * 2 ** 20)
+    plan = eng.memory_plan(64, 2)
+    assert isinstance(plan, MemoryPlan)
+    assert eng.memory_plan(64, 2) is plan     # cached per geometry
+
+
+def test_schedule_host_mem_budgets():
+    eng = MicroEPEngine.build(8, (2, 2))
+    rng = np.random.default_rng(13)
+    input_eg = rng.integers(0, 60, (8, 4)).astype(np.int32)
+    x0 = eng.scheduler.schedule_host(input_eg)
+    x1 = eng.scheduler.schedule_host(
+        input_eg, mem_budgets=np.full(4, float(input_eg.sum())))
+    np.testing.assert_allclose(x0, x1, atol=1e-6)
+    # statics caps become the host-oracle default too
+    caps = np.full(4, float(input_eg.sum()) / 4 * 1.2)
+    eng2 = MicroEPEngine.build(8, (2, 2), mem_caps=caps)
+    x2 = eng2.scheduler.schedule_host(input_eg)
+    dl = np.zeros(4)
+    dev = eng2.statics.dev
+    np.add.at(dl, dev[dev >= 0], x2[dev >= 0])
+    assert (dl <= caps + 1e-6).all()
+
+
+# ----------------------------------------------------- golden pin
+
+
+def test_memfine_golden_plan():
+    """Byte-exact plan for the dbrx_132b-on-small-HBM scenario.
+
+    Regenerate with
+    ``PYTHONPATH=src python -m benchmarks.bench_memfine --write-golden``.
+    """
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+    try:
+        from benchmarks.bench_memfine import (HBM_BUDGET_MB, TOKENS_PER_DEV,
+                                              build_scenario)
+    finally:
+        sys.path.pop(0)
+    cfg, eng, model, top_k_eff = build_scenario()
+    plan = eng.memory_plan(TOKENS_PER_DEV, top_k_eff,
+                           resident_tokens=float(TOKENS_PER_DEV))
+    golden_text = (GOLDEN / "memfine_plan.json").read_text()
+    assert json.dumps(plan.to_dict(), indent=1, sort_keys=True) + "\n" == \
+        golden_text
+    golden = MemoryPlan.from_dict(json.loads(golden_text))
+    assert golden.feasible and golden.chunks > 1
+    # every committed trace step schedules under the golden caps, and the
+    # monolithic (memory-oblivious) peak exceeds the budget on *every* step
+    tr = LoadTrace.load(str(GOLDEN / "memfine_mini_trace.jsonl"))
+    assert tr.num_experts == eng.num_experts
+    caps = np.asarray(golden.token_caps, np.float64)
+    g = eng.num_devices
+    budget = HBM_BUDGET_MB * 2 ** 20
+    for step in range(len(tr)):
+        loads = tr.loads[step, 0]
+        ok, util = budget_feasible(loads, eng.statics.dev, g, caps)
+        assert ok, (step, util)
+        res = solve_lpp1(loads, eng.statics.dev, g,
+                         weights=np.asarray(eng.weights))
+        dl = np.zeros(g)
+        dev = eng.statics.dev
+        np.add.at(dl, dev[dev >= 0], res.x[dev >= 0])
+        peak = model.peak_device_bytes(dl, chunks=1, recompute=0,
+                                       resident_tokens=TOKENS_PER_DEV)
+        assert peak.max() > budget, step
+
+
+def test_memory_plan_dict_roundtrip():
+    loads, dev, g = _scenario(seed=14)
+    plan = plan_memory(loads, dev, g, _model(), 16 * 2 ** 20,
+                       headroom=0.05)
+    d = json.loads(json.dumps(plan.to_dict()))
+    back = MemoryPlan.from_dict(d)
+    assert back.to_dict() == plan.to_dict()

@@ -33,7 +33,10 @@ CITE = re.compile(r"\b(DESIGN|ENGINE|SERVING|TELEMETRY|FLEET|RESILIENCE"
 HEADING_SECTION = re.compile(r"^#+\s.*§\s*(\d+)\b")
 BENCH_REG = re.compile(r"register_bench\(\s*[\"']([\w-]+)[\"']")
 RUN_CITE = re.compile(r"-m\s+benchmarks\.run\b((?:\s+[A-Za-z0-9_-]+)*)")
-MOD_CITE = re.compile(r"-m\s+benchmarks\.(bench_\w+)")
+# any module citation, not just bench_* — merge_dryrun / roofline count too
+MOD_CITE = re.compile(r"-m\s+benchmarks\.(?!run\b)(\w+)")
+EXEMPT_SET = re.compile(
+    r"EXEMPT_BENCH_MODULES\s*=\s*frozenset\(\{([^}]*)\}\)")
 
 
 def doc_sections(path: pathlib.Path) -> set:
@@ -54,6 +57,42 @@ def bench_registry(root: pathlib.Path = ROOT) -> set:
         for py in sorted(bdir.glob("*.py")):
             names |= set(BENCH_REG.findall(py.read_text(encoding="utf-8")))
     return names
+
+
+def exempt_modules(root: pathlib.Path = ROOT) -> set:
+    """The deliberately-unregistered modules benchmarks/common.py declares
+    (scraped textually — importing benchmarks pulls in jax)."""
+    common = root / "benchmarks" / "common.py"
+    if not common.exists():
+        return set()
+    m = EXEMPT_SET.search(common.read_text(encoding="utf-8"))
+    return set(re.findall(r"[\"'](\w+)[\"']", m.group(1))) if m else set()
+
+
+def check_bench_registry_drift(root: pathlib.Path = ROOT) -> list:
+    """Every benchmarks/*.py module must either register itself via
+    ``register_bench`` (and be imported by the benchmarks/run.py menu) or
+    appear in ``common.EXEMPT_BENCH_MODULES``."""
+    bdir = root / "benchmarks"
+    if not bdir.exists():
+        return []
+    exempt = exempt_modules(root) | {"common", "run", "__init__"}
+    run_py = bdir / "run.py"
+    run_text = run_py.read_text(encoding="utf-8") if run_py.exists() else ""
+    errors = []
+    for py in sorted(bdir.glob("*.py")):
+        mod = py.stem
+        if mod in exempt:
+            continue
+        if not BENCH_REG.search(py.read_text(encoding="utf-8")):
+            errors.append(
+                f"benchmarks/{mod}.py: no register_bench(...) call and not "
+                f"in common.EXEMPT_BENCH_MODULES")
+        elif re.search(rf"\b{mod}\b", run_text) is None:
+            errors.append(
+                f"benchmarks/run.py: registered module {mod} missing from "
+                f"the import menu")
+    return errors
 
 
 def check_bench_citations(root: pathlib.Path = ROOT) -> list:
@@ -119,7 +158,8 @@ def check(root: pathlib.Path = ROOT) -> list:
                             f"{rel}:{ln}: cites {name}.md §{sec}, but "
                             f"{name}.md has no heading for §{sec} "
                             f"(found: {sorted(sections[name])})")
-    return errors + check_bench_citations(root)
+    return (errors + check_bench_citations(root)
+            + check_bench_registry_drift(root))
 
 
 def main() -> int:
